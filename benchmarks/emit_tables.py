@@ -1,0 +1,59 @@
+"""Render EXPERIMENTS.md tables (dry-run + roofline) from artifacts."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from roofline import cell_terms  # noqa: E402
+
+from repro.configs import SHAPES, get_config, list_archs, supports_shape  # noqa: E402
+
+
+def dryrun_table(d="artifacts/dryrun"):
+    print("| arch | shape | mesh | peak GiB/dev | compile s | micro |")
+    print("|---|---|---|---:|---:|---:|")
+    for arch in list_archs():
+        for shape in SHAPES:
+            for mesh in ("16x16", "2x16x16"):
+                f = os.path.join(d, f"{arch}__{shape}__{mesh}.json")
+                if not os.path.exists(f):
+                    continue
+                r = json.load(open(f))
+                if r["status"] == "skipped":
+                    print(f"| {arch} | {shape} | {mesh} | SKIP (full attn @512k) | — | — |")
+                    continue
+                m = r["memory"]["peak_bytes_per_device"] / 2**30
+                print(f"| {arch} | {shape} | {mesh} | {m:.2f} | "
+                      f"{r['compile_s']} | {r.get('microbatches', 1)} |")
+
+
+def roofline_table(d="artifacts/dryrun", mesh="16x16"):
+    print("| cell | dominant | compute s | memory s | collective s | "
+          "useful | roofline frac |")
+    print("|---|---|---:|---:|---:|---:|---:|")
+    for arch in list_archs():
+        for shape in SHAPES:
+            f = os.path.join(d, f"{arch}__{shape}__{mesh}.json")
+            if not os.path.exists(f):
+                continue
+            r = json.load(open(f))
+            if r["status"] != "ok":
+                continue
+            t = cell_terms(f)
+            if not t:
+                continue
+            print(f"| {arch} {shape} | {t['dominant']} | "
+                  f"{t['compute_s']:.3g} | {t['memory_s']:.3g} | "
+                  f"{t['collective_s']:.3g} | {t['useful_ratio']:.2f} | "
+                  f"{t['roofline_frac']:.3f} |")
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "both"
+    if which in ("dryrun", "both"):
+        dryrun_table()
+        print()
+    if which in ("roofline", "both"):
+        roofline_table()

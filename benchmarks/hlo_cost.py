@@ -1,0 +1,311 @@
+"""Optimized-HLO cost analyzer for the roofline (§Roofline of EXPERIMENTS.md).
+
+Why not ``compiled.cost_analysis()``: XLA's analysis counts a while-loop
+body ONCE, so anything under ``lax.scan`` (our layer stacks, microbatch
+accumulation, attention chunk loops) is undercounted by its trip count.
+This walker parses ``compiled.as_text()``, recovers each while loop's trip
+count from its condition computation, and propagates execution multipliers
+through the call graph (entry -> while bodies -> fusions -> ...).
+
+Per module it reports:
+  flops             dot/convolution FLOPs (2*M*N*K), multiplier-weighted
+  bytes             fusion-boundary traffic (operands+results of top-level
+                    ops, skipping free ops) — an HBM-traffic proxy
+  collective_bytes  per collective kind, using link-traffic conventions:
+                    all-gather/all-to-all/collective-permute: result bytes;
+                    all-reduce: 2x bytes (reduce-scatter + all-gather phases);
+                    reduce-scatter: input bytes
+  transcendentals   exp/tanh/log/... element counts (MFU pressure)
+
+All numbers are WHOLE-MODULE (all devices); divide by device count for
+per-chip terms.  Parsing is best-effort: unknown shapes contribute zero
+rather than raising.
+"""
+from __future__ import annotations
+
+import gzip
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1, "token": 0, "opaque": 0,
+}
+
+SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(?[^=]*?\)?)\s*"
+                   r"([\w\-]+)\((.*)$")
+COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(\([^{]*\))?\s*->")
+FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+            "after-all", "partition-id", "replica-id", "iota", "reshape",
+            "custom-call", "get-dimension-size", "opt-barrier"}
+TRANSCENDENTAL = {"exponential", "tanh", "log", "rsqrt", "sqrt", "power",
+                  "logistic", "exponential-minus-one", "log-plus-one", "cosine",
+                  "sine", "erf"}
+COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "all-reduce-start", "all-gather-start",
+               "collective-permute-start"}
+
+
+def _shapes_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in SHAPE_RE.findall(text):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(text: str) -> List[int]:
+    m = SHAPE_RE.search(text)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Op:
+    name: str
+    kind: str
+    result: str          # result shape text
+    rest: str            # operand list + attributes
+    operands: List[str] = field(default_factory=list)
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[Op] = field(default_factory=list)
+    shapes: Dict[str, str] = field(default_factory=dict)  # symbol -> shape txt
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    comment_re = re.compile(r"/\*.*?\*/")
+    for line in text.splitlines():
+        line = comment_re.sub("", line)  # /*index=5*/ comments break parsing
+        stripped = line.strip()
+        if cur is None:
+            if stripped.endswith("{"):
+                m = COMP_HDR_RE.match(stripped)
+                if m:
+                    cur = Computation(m.group(1))
+                    if stripped.startswith("ENTRY"):
+                        entry = cur.name
+                    # parameter shapes from the header
+                    hdr = m.group(2) or ""
+                    for pm in re.finditer(r"([\w\.\-]+):\s*([^,()]+(?:\([^)]*\))?)",
+                                          hdr):
+                        cur.shapes[pm.group(1)] = pm.group(2)
+            continue
+        if stripped == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = OP_RE.match(line)
+        if not m:
+            continue
+        name, result, kind, rest = m.groups()
+        # operand names: %tokens up to the closing paren of the op call
+        depth = 1
+        args = []
+        buf = ""
+        for ch in rest:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    args.append(buf)
+                    break
+            if depth >= 1 and ch != "," or depth > 1:
+                buf += ch
+            elif ch == "," and depth == 1:
+                args.append(buf)
+                buf = ""
+        operand_names = []
+        for a in args:
+            mm = re.search(r"%([\w\.\-]+)\s*$", a.strip())
+            if mm:
+                operand_names.append(mm.group(1))
+        op = Op(name=name, kind=kind, result=result, rest=rest,
+                operands=operand_names)
+        cur.ops.append(op)
+        cur.shapes[name] = result
+    return comps, entry
+
+
+def _while_trip_count(cond: Computation) -> int:
+    """jax scans lower to `compare(iter, constant(N)), direction=LT`."""
+    consts: List[int] = []
+    for op in cond.ops:
+        if op.kind == "constant" and "s32" in op.result:
+            m = re.search(r"constant\((-?\d+)\)", "constant(" + op.rest)
+            if m:
+                consts.append(int(m.group(1)))
+    pos = [c for c in consts if c > 0]
+    return max(pos) if pos else 1
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    out_elems = 1
+    for d in _shape_dims(op.result):
+        out_elems *= d
+    lhs_shape = comp.shapes.get(op.operands[0], "") if op.operands else ""
+    dims = _shape_dims(lhs_shape)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rest)
+    k = 1
+    if m and dims:
+        for idx in m.group(1).split(","):
+            if idx and int(idx) < len(dims):
+                k *= dims[int(idx)]
+    return 2.0 * out_elems * k
+
+
+def _collective_bytes(op: Op, comp: Computation) -> float:
+    res = _shapes_bytes(op.result)
+    kind = op.kind.replace("-start", "")
+    if kind == "all-reduce":
+        return 2.0 * res
+    if kind == "reduce-scatter":
+        in_bytes = sum(_shapes_bytes(comp.shapes.get(o, ""))
+                       for o in op.operands)
+        return float(in_bytes or res)
+    return float(res)  # all-gather / all-to-all / permute: result bytes
+
+
+def analyze(text: str) -> Dict[str, float]:
+    comps, entry = parse_hlo(text)
+    if entry is None:
+        return {"flops": 0.0, "bytes": 0.0, "transcendental_elems": 0.0,
+                "collective_bytes": 0.0, "collectives": {}}
+
+    # execution multiplier per computation, propagated through calls
+    mult: Dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    order = [entry]
+    seen = {entry}
+    # BFS in call order; while bodies get multiplier * trip_count
+    i = 0
+    while i < len(order):
+        cname = order[i]
+        i += 1
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        for op in comp.ops:
+            callees: List[Tuple[str, float]] = []
+            if op.kind == "while":
+                mb = re.search(r"body=%?([\w\.\-]+)", op.rest)
+                mc = re.search(r"condition=%?([\w\.\-]+)", op.rest)
+                trip = _while_trip_count(comps[mc.group(1)]) if (
+                    mc and mc.group(1) in comps) else 1
+                if mb:
+                    callees.append((mb.group(1), float(trip)))
+            elif op.kind in ("fusion", "call", "map", "reduce", "reduce-window",
+                             "scatter", "sort", "select-and-scatter",
+                             "all-reduce", "reduce-scatter"):
+                mcalls = re.search(r"(?:calls|to_apply)=%?([\w\.\-]+)", op.rest)
+                if mcalls:
+                    callees.append((mcalls.group(1), 1.0))
+            elif op.kind == "conditional":
+                for mm in re.finditer(r"(?:branch_computations=\{([^}]*)\}|"
+                                      r"(?:true|false)_computation=%?([\w\.\-]+))",
+                                      op.rest):
+                    names = (mm.group(1) or mm.group(2) or "")
+                    for nm in names.replace("%", "").split(","):
+                        if nm.strip():
+                            callees.append((nm.strip(), 1.0))
+            for nm, factor in callees:
+                mult[nm] += mult[cname] * factor
+                if nm not in seen:
+                    seen.add(nm)
+                    order.append(nm)
+
+    flops = 0.0
+    byte_traffic = 0.0
+    transcendental = 0.0
+    coll: Dict[str, float] = defaultdict(float)
+
+    for cname in seen:
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        w = mult[cname]
+        if w == 0:
+            continue
+        for op in comp.ops:
+            if op.kind in ("dot", "convolution"):
+                flops += w * _dot_flops(op, comp)
+            kindbase = op.kind.replace("-start", "")
+            if kindbase in {"all-reduce", "all-gather", "reduce-scatter",
+                            "all-to-all", "collective-permute"}:
+                coll[kindbase] += w * _collective_bytes(op, comp)
+            if op.kind in TRANSCENDENTAL:
+                elems = 1
+                for d in _shape_dims(op.result):
+                    elems *= d
+                transcendental += w * elems
+
+    # fusion-boundary bytes: only ENTRY + while bodies count as "top level"
+    top_level = {entry}
+    for cname in seen:
+        comp = comps.get(cname)
+        if not comp:
+            continue
+        for op in comp.ops:
+            if op.kind == "while":
+                mb = re.search(r"body=%?([\w\.\-]+)", op.rest)
+                if mb:
+                    top_level.add(mb.group(1))
+    for cname in top_level:
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        w = mult[cname]
+        in_body = cname != entry
+        for op in comp.ops:
+            if op.kind in FREE_OPS or op.kind == "while":
+                continue
+            rb = _shapes_bytes(op.result)
+            obs = [_shapes_bytes(comp.shapes.get(o, "")) for o in op.operands]
+            ob = sum(obs)
+            # in-place credit: a loop-body op producing a result the same
+            # size as one operand (>=64 KiB) is an in-place update of a
+            # loop-carried buffer (scan ys dynamic-update-slice, gradient
+            # accumulators): XLA aliases it, so the buffer is not re-read
+            # and re-written wholesale every iteration.
+            if in_body and rb >= 65536 and rb in obs:
+                ob -= rb
+                rb = 0
+            byte_traffic += w * (rb + ob)
+
+    return {
+        "flops": flops,
+        "bytes": byte_traffic,
+        "transcendental_elems": transcendental,
+        "collective_bytes": float(sum(coll.values())),
+        "collectives": dict(coll),
+    }
+
+
+def analyze_file(path: str) -> Dict[str, float]:
+    opener = gzip.open if path.endswith(".gz") else open
+    with opener(path, "rt") as f:
+        return analyze(f.read())
+
+
+if __name__ == "__main__":
+    import json
+    import sys
+
+    print(json.dumps(analyze_file(sys.argv[1]), indent=1))

@@ -1,0 +1,64 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs pure-jnp oracle on CPU.
+
+Interpret-mode timings measure nothing about TPU speed — the point of
+these rows is (a) proving the kernels execute end-to-end under jit and
+(b) tracking the oracle's CPU cost, which IS the baseline the schedules
+benchmark runs against.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.ops import decode_attention, decode_attention_ref
+from repro.kernels.lstm_cell.ops import lstm_cell, lstm_cell_ref
+from repro.kernels.mvm_tile.ops import mvm, mvm_ref
+from repro.kernels.rglru.ops import rglru_scan, rglru_scan_ref
+
+
+def _time(fn: Callable, *args, repeat: int = 3) -> float:
+    fn(*args)
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return min(ts) * 1e6
+
+
+def kernels(emit) -> None:
+    key = jax.random.PRNGKey(0)
+    B, H = 4, 256
+    ks = jax.random.split(key, 4)
+    U4 = jax.random.normal(ks[0], (H, 4, H), jnp.float32) * 0.1
+    xw = jax.random.normal(ks[1], (B, 4, H), jnp.float32)
+    h = jax.random.normal(ks[2], (B, H), jnp.float32)
+    c = jax.random.normal(ks[3], (B, H), jnp.float32)
+    emit("kernel/lstm_cell/pallas_interp", _time(lstm_cell, U4, xw, h, c),
+         f"B{B}xH{H}")
+    emit("kernel/lstm_cell/ref", _time(jax.jit(lstm_cell_ref), U4, xw, h, c),
+         f"B{B}xH{H}")
+
+    x = jax.random.normal(ks[0], (B, 512), jnp.float32)
+    W = jax.random.normal(ks[1], (512, 1024), jnp.float32) * 0.05
+    emit("kernel/mvm_tile/pallas_interp", _time(mvm, x, W), "512x1024")
+    emit("kernel/mvm_tile/ref", _time(jax.jit(mvm_ref), x, W), "512x1024")
+
+    la = -jnp.abs(jax.random.normal(ks[0], (B, 64, 256))) * 0.3
+    gx = jax.random.normal(ks[1], (B, 64, 256))
+    h0 = jax.random.normal(ks[2], (B, 256))
+    emit("kernel/rglru/pallas_interp", _time(rglru_scan, la, gx, h0), "T64xW256")
+    emit("kernel/rglru/ref", _time(jax.jit(rglru_scan_ref), la, gx, h0),
+         "T64xW256")
+
+    q = jax.random.normal(ks[0], (B, 8, 64), jnp.float32)
+    kc = jax.random.normal(ks[1], (B, 1024, 2, 64), jnp.float32)
+    vc = jax.random.normal(ks[2], (B, 1024, 2, 64), jnp.float32)
+    valid = jnp.full((B,), 1024, jnp.int32)
+    emit("kernel/decode_attn/pallas_interp",
+         _time(decode_attention, q, kc, vc, valid), "T1024")
+    emit("kernel/decode_attn/ref",
+         _time(jax.jit(decode_attention_ref), q, kc, vc, valid), "T1024")

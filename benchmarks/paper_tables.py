@@ -1,0 +1,116 @@
+"""One benchmark per paper table/figure.
+
+Each function regenerates its artifact from the critical-path model
+(core/perfmodel) and, where a functional counterpart exists, measures the
+real JAX implementation on CPU.  Rows follow ``name,us_per_call,derived``.
+"""
+from __future__ import annotations
+
+import statistics
+import time
+from typing import Callable, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.sharp_lstm import (DEEPBENCH, MAC_BUDGETS,
+                                      PAPER_NETWORKS, SWEEP_HIDDEN_DIMS,
+                                      lstm_config)
+from repro.core import perfmodel as pm
+from repro.core import schedules as sch
+from repro.models.layers.lstm import init_lstm_layer
+
+
+def _time(fn: Callable, *args, repeat: int = 3) -> float:
+    fn(*args)  # compile
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return min(ts) * 1e6  # us
+
+
+def fig9_kwidth(emit) -> None:
+    """Fig. 9: K-width exploration (model)."""
+    sweep = pm.fig9_kwidth_sweep()
+    for (m, k, h), v in sorted(sweep.items()):
+        emit(f"fig9/macs{m}/k{k}/h{h}", 0.0, f"{v:.3f}")
+    for m in MAC_BUDGETS:
+        best = pm.fig9_best_k(m)
+        emit(f"fig9/best_k/macs{m}", 0.0,
+             ";".join(f"h{h}:K{k}" for h, k in best.items()))
+
+
+def fig10_padding(emit) -> None:
+    """Fig. 10: padding-reconfiguration speedup (paper: <=1.22x, 1.0@512)."""
+    pad = pm.fig10_padding_speedup()
+    for (m, h), v in sorted(pad.items()):
+        emit(f"fig10/macs{m}/h{h}", 0.0, f"{v:.3f}")
+    emit("fig10/max_speedup", 0.0, f"{max(pad.values()):.3f}")
+    emit("fig10/at_512", 0.0,
+         f"{statistics.mean(pad[(m, 512)] for m in MAC_BUDGETS):.3f}")
+
+
+def fig11_schedules(emit) -> None:
+    """Fig. 11: schedule comparison — model speedups AND measured CPU
+    wall-time of the real JAX implementations (B=1 inference)."""
+    sp = pm.fig11_schedule_speedups()
+    for (m, h, s), v in sorted(sp.items()):
+        emit(f"fig11/model/macs{m}/h{h}/{s}", 0.0, f"{v:.3f}")
+    # measured: functional schedules on CPU (small dims so CI-friendly)
+    H, T, B = 256, 25, 1
+    params = init_lstm_layer(jax.random.PRNGKey(0), H, H, jnp.float32)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (B, T, H))
+    base_us = None
+    for s in sch.SCHEDULES:
+        fn = jax.jit(lambda p, x, s=s: sch.run_layer(p, x, s))
+        us = _time(fn, params, xs)
+        if s == "sequential":
+            base_us = us
+        emit(f"fig11/measured_cpu/h{H}/{s}", us, f"{base_us / us:.3f}x_vs_seq")
+
+
+def fig12_latency_util(emit) -> None:
+    f12 = pm.fig12_latency_utilization()
+    for m in MAC_BUDGETS:
+        lat = statistics.mean(f12[(m, h)]["latency_us"] for h in SWEEP_HIDDEN_DIMS)
+        u = statistics.mean(f12[(m, h)]["utilization"] for h in SWEEP_HIDDEN_DIMS)
+        ue = statistics.mean(f12[(m, h)]["epur_utilization"]
+                             for h in SWEEP_HIDDEN_DIMS)
+        emit(f"fig12/macs{m}", lat, f"util={u:.2f};epur_util={ue:.2f}")
+
+
+def table4_brainwave(emit) -> None:
+    k_bw, penalty, eff = pm.fit_brainwave()
+    t4 = pm.table4_vs_brainwave(k_bw, penalty, eff)
+    emit("table4/bw_model_fit", 0.0, f"k{k_bw};penalty{penalty};eff{eff}")
+    for (h, steps), v in sorted(t4.items()):
+        paper = pm.TABLE4_PAPER[(h, steps)]
+        emit(f"table4/h{h}_t{steps}", 0.0,
+             f"ours={v:.2f};paper={paper};relerr={abs(v - paper) / paper:.2f}")
+
+
+def table6_epur(emit) -> None:
+    t6 = pm.table6_vs_epur()
+    paper = {"EESEN": [1.07, 1.25, 1.68, 1.9], "GMAT": [1.01, 1.51, 1.53, 1.66],
+             "BYSDNE": [1.05, 1.24, 1.8, 2.22],
+             "RLDRADSPR": [1.03, 1.11, 1.45, 2.3]}
+    for name in paper:
+        for i, m in enumerate(MAC_BUDGETS):
+            emit(f"table6/{name}/macs{m}", 0.0,
+                 f"ours={t6[(name, m)]:.2f};paper={paper[name][i]}")
+
+
+def fig14_energy(emit) -> None:
+    e = pm.fig14_energy()
+    for m in MAC_BUDGETS:
+        red = statistics.mean(e[(m, h)]["reduction"] for h in SWEEP_HIDDEN_DIMS)
+        emit(f"fig14/macs{m}", 0.0, f"energy_reduction={red:.3f}")
+    emit("fig14/gflops_per_watt_64k", 0.0, f"{pm.gflops_per_watt():.0f}")
+    emit("fig14/gflops_per_watt_paper_util", 0.0,
+         f"{pm.PEAK_TFLOPS[65536] * 0.5 / pm.POWER_W[65536] / 1e9:.0f}")
+
+
+ALL = [fig9_kwidth, fig10_padding, fig11_schedules, fig12_latency_util,
+       table4_brainwave, table6_epur, fig14_energy]

@@ -1,0 +1,114 @@
+"""Roofline terms per (arch x shape x mesh) from the dry-run artifacts.
+
+    compute    = HLO_FLOPs_per_chip / peak_FLOP/s        (197e12 bf16, v5e)
+    memory     = HLO_bytes_per_chip / HBM_bw             (819e9 B/s)
+    collective = collective_bytes_per_chip / link_bw     (50e9 B/s)
+
+The HLO walker (hlo_cost.py) parses the post-SPMD, per-device optimized
+module, so its numbers are already per-chip.  Caveat recorded in
+EXPERIMENTS.md: the CPU backend legalizes bf16 by upcasting to f32, which
+inflates the bytes term ~2x vs a real TPU lowering; flops and collective
+bytes are dtype-exact from shapes.
+
+MODEL_FLOPS uses 6*N_active*D for train (fwd+bwd) and 2*N_active per token
+for prefill/decode; the usefulness ratio MODEL/HLO catches remat recompute,
+causal-masking waste and sharding replication.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Dict, Optional
+
+from repro.configs import SHAPES, get_config, V5E
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from hlo_cost import analyze_file  # noqa: E402
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_act = cfg.num_active_params(include_embed=False)
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_act * tokens
+    if shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_act * tokens
+    # decode: one token per sequence
+    return 2.0 * n_act * shape.global_batch
+
+
+def cell_terms(cell_json: str, hw=V5E) -> Optional[Dict]:
+    r = json.load(open(cell_json))
+    if r.get("status") != "ok":
+        return None
+    hlo = r.get("hlo")
+    if not hlo or not os.path.exists(hlo):
+        return None
+    a = analyze_file(hlo)
+    n_dev = r["n_devices"]
+    compute_s = a["flops"] / hw.peak_flops_bf16
+    memory_s = a["bytes"] / hw.hbm_bw
+    collective_s = a["collective_bytes"] / hw.ici_bw
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(r["arch"], r["shape"])
+    hlo_flops_total = a["flops"] * n_dev
+    return {
+        "cell": r["cell"], "arch": r["arch"], "shape": r["shape"],
+        "mesh": r["mesh"], "n_devices": n_dev,
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s, "dominant": dominant,
+        "bound_s": terms[dominant],
+        "model_flops": mf, "hlo_flops_total": hlo_flops_total,
+        "useful_ratio": mf / hlo_flops_total if hlo_flops_total else 0.0,
+        # roofline fraction: how close the compute term is to being the
+        # binding constraint (1.0 == perfectly compute-bound execution)
+        "roofline_frac": (compute_s / terms[dominant]) if terms[dominant] else 0.0,
+        "collectives": a["collectives"],
+        "peak_gib": r["memory"]["peak_bytes_per_device"] / 2**30,
+    }
+
+
+def run(dryrun_dir: str = "artifacts/dryrun",
+        out_csv: str = "artifacts/roofline.csv",
+        mesh: str = "16x16") -> list:
+    rows = []
+    for f in sorted(os.listdir(dryrun_dir)):
+        if not f.endswith(".json"):
+            continue
+        if mesh and not f.endswith(f"__{mesh}.json"):
+            continue
+        t = cell_terms(os.path.join(dryrun_dir, f))
+        if t:
+            rows.append(t)
+    os.makedirs(os.path.dirname(out_csv), exist_ok=True)
+    cols = ["cell", "dominant", "compute_s", "memory_s", "collective_s",
+            "roofline_frac", "useful_ratio", "peak_gib"]
+    with open(out_csv, "w") as fh:
+        fh.write(",".join(cols) + "\n")
+        for t in rows:
+            fh.write(",".join(
+                f"{t[c]:.6g}" if isinstance(t[c], float) else str(t[c])
+                for c in cols) + "\n")
+    return rows
+
+
+def emit_rows(emit, mesh: str = "16x16") -> None:
+    for t in run(mesh=mesh):
+        emit(f"roofline/{t['cell']}", t["bound_s"] * 1e6,
+             f"dom={t['dominant']};compute={t['compute_s']:.3e};"
+             f"memory={t['memory_s']:.3e};coll={t['collective_s']:.3e};"
+             f"useful={t['useful_ratio']:.2f}")
+
+
+if __name__ == "__main__":
+    rows = run()
+    for t in rows:
+        print(f"{t['cell']:58s} dom={t['dominant']:10s} "
+              f"c={t['compute_s']:.2e} m={t['memory_s']:.2e} "
+              f"x={t['collective_s']:.2e} useful={t['useful_ratio']:.2f}")

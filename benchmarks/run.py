@@ -1,0 +1,44 @@
+"""Benchmark harness: one function per paper table/figure + kernel
+microbenches + the dry-run roofline table.  Prints ``name,us_per_call,
+derived`` CSV (stdout is the artifact; tee it to bench_output.txt)."""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.2f},{derived}", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter over benchmark names")
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args()
+
+    import kernel_bench
+    import paper_tables
+
+    print("name,us_per_call,derived")
+    benches = list(paper_tables.ALL) + [kernel_bench.kernels]
+    for fn in benches:
+        if args.only and args.only not in fn.__name__:
+            continue
+        fn(emit)
+
+    if not args.skip_roofline and (not args.only or "roofline" in args.only):
+        import roofline
+
+        if os.path.isdir("artifacts/dryrun"):
+            roofline.emit_rows(emit)
+        else:
+            emit("roofline/SKIPPED", 0.0, "run repro.launch.dryrun first")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Quickstart: SHARP's four LSTM schedules on the paper's own model family.
+
+Runs the GMAT-like LSTM layer under every schedule, verifies they are
+numerically identical (the paper's premise), times them on CPU, and shows
+the critical-path model's predicted ordering next to the measurement.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.sharp_lstm import lstm_config
+from repro.core import perfmodel as pm
+from repro.core import schedules as sch
+from repro.kernels.lstm_cell.ops import as_cell_kernel
+from repro.models.layers.lstm import init_lstm_layer
+
+
+def main():
+    H, T, B = 512, 25, 1
+    key = jax.random.PRNGKey(0)
+    params = init_lstm_layer(key, H, H, jnp.float32)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (B, T, H)) * 0.5
+
+    print(f"LSTM layer H={H}, T={T}, batch={B} (inference)\n")
+    ref = None
+    print(f"{'schedule':<12} {'cpu_ms':>8} {'model_speedup@64K':>18}")
+    for s in sch.SCHEDULES:
+        fn = jax.jit(lambda p, x, s=s: sch.run_layer(p, x, s))
+        out = jax.block_until_ready(fn(params, xs))
+        if ref is None:
+            ref = out
+        assert jnp.allclose(out, ref, atol=1e-5), f"{s} diverged!"
+        t0 = time.perf_counter()
+        for _ in range(5):
+            jax.block_until_ready(fn(params, xs))
+        ms = (time.perf_counter() - t0) / 5 * 1e3
+        model = pm.fig11_schedule_speedups(dims=[H], budgets=[65536])
+        print(f"{s:<12} {ms:8.2f} {model[(65536, H, s)]:18.3f}")
+
+    # the fused Pallas cell drops into the unfolded scan
+    out = sch.run_layer(params, xs, "unfolded",
+                        cell_kernel=as_cell_kernel(interpret=True))
+    assert jnp.allclose(out, ref, atol=1e-4)
+    print("\nunfolded + Pallas lstm_cell kernel (interpret): matches reference ✓")
+
+    d = pm.Design(macs=65536)
+    cfg = lstm_config(H)
+    print(f"\ncritical-path model @64K MACs: "
+          f"{pm.network_time_s(cfg, T, d) * 1e6:.1f} us/sequence, "
+          f"utilization {pm.utilization(cfg, T, d):.0%}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Reproduce the paper's design-space exploration interactively.
+
+Prints Fig. 9 (K-width), Fig. 10 (padding reconfiguration) and Table 6
+(vs E-PUR) from the critical-path model for any hidden dim you pass.
+
+    PYTHONPATH=src python examples/schedule_explorer.py --hidden 340
+"""
+import argparse
+
+from repro.configs.sharp_lstm import MAC_BUDGETS, lstm_config
+from repro.core import perfmodel as pm
+from repro.core.tiling import K_CHOICES, TileConfig, mvm_cycles, select_tile
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hidden", type=int, default=340)
+    ap.add_argument("--timesteps", type=int, default=25)
+    args = ap.parse_args()
+    H, T = args.hidden, args.timesteps
+    cfg = lstm_config(H)
+
+    print(f"=== K-width exploration (H={H}) — cycles per step ===")
+    hdr = "macs      " + "".join(f"K={k:<8}" for k in K_CHOICES) + "best"
+    print(hdr)
+    for m in MAC_BUDGETS:
+        row = f"{m:<10}"
+        for k in K_CHOICES:
+            if k > m:
+                row += f"{'-':<10}"
+                continue
+            c = mvm_cycles(4 * H, H, TileConfig(k=k, macs=m), reconfigure=False)
+            row += f"{c:<10}"
+        row += f"K={select_tile(4 * H, H, m).k}"
+        print(row)
+
+    print(f"\n=== padding reconfiguration (H={H}) ===")
+    pad = pm.fig10_padding_speedup(dims=[H])
+    for m in MAC_BUDGETS:
+        print(f"  {m:>6} MACs: {pad[(m, H)]:.3f}x")
+
+    print(f"\n=== schedules (H={H}, T={T}) — time @each budget ===")
+    for m in MAC_BUDGETS:
+        times = {s: pm.network_time_s(cfg, T, pm.Design(macs=m, schedule=s)) * 1e6
+                 for s in ("sequential", "batch", "intergate", "unfolded")}
+        epur = pm.network_time_s(cfg, T, pm._epur(m)) * 1e6
+        print(f"  {m:>6} MACs: " +
+              "  ".join(f"{s}={v:8.1f}us" for s, v in times.items()) +
+              f"  | epur={epur:8.1f}us -> sharp speedup "
+              f"{epur / times['unfolded']:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Batched serving example: continuous batching over mixed-length requests
+on the hybrid RecurrentGemma architecture (RG-LRU state + local-attention
+ring caches exercised together).
+
+    PYTHONPATH=src python examples/serve_engine.py
+"""
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    serve_main(["--arch", "recurrentgemma-2b", "--reduced",
+                "--requests", "10", "--max-batch", "4", "--max-seq", "96",
+                "--max-new", "12"])
+
+
+if __name__ == "__main__":
+    main()

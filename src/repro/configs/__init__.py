@@ -1,0 +1,50 @@
+"""Architecture registry: ``--arch <id>`` resolution.
+
+Ten assigned architectures + the paper's own LSTM family.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (  # noqa: F401 (re-export)
+    HardwareConfig,
+    ModelConfig,
+    ShapeConfig,
+    SHAPES,
+    V5E,
+    supports_shape,
+)
+
+_ARCH_MODULES: Dict[str, str] = {
+    "arctic-480b": "repro.configs.arctic_480b",
+    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
+    "starcoder2-3b": "repro.configs.starcoder2_3b",
+    "deepseek-67b": "repro.configs.deepseek_67b",
+    "h2o-danube-3-4b": "repro.configs.h2o_danube3_4b",
+    "stablelm-12b": "repro.configs.stablelm_12b",
+    "musicgen-large": "repro.configs.musicgen_large",
+    "xlstm-125m": "repro.configs.xlstm_125m",
+    "qwen2-vl-72b": "repro.configs.qwen2_vl_72b",
+    "recurrentgemma-2b": "repro.configs.recurrentgemma_2b",
+    "sharp-lstm": "repro.configs.sharp_lstm",
+}
+
+
+def list_archs(include_paper: bool = False) -> List[str]:
+    names = [n for n in _ARCH_MODULES if n != "sharp-lstm"]
+    if include_paper:
+        names.append("sharp-lstm")
+    return names
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(_ARCH_MODULES[name]).config()
+
+
+def get_reduced(name: str) -> ModelConfig:
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(_ARCH_MODULES[name]).reduced()

@@ -1,0 +1,3 @@
+"""SHARP's contribution, generalized: schedules, reconfigurable tiling,
+the critical-path performance model, and the offline autotune table."""
+from repro.core import autotune, perfmodel, schedules, tiling, unfolded  # noqa: F401

@@ -1,0 +1,58 @@
+"""Offline configuration table (paper §6.2.2).
+
+The paper explores configurations offline and preloads a table mapping each
+LSTM dimension to its optimal tile configuration; runtime reconfiguration is
+a table lookup + mux select.  Here the table maps (rows, cols, macs) -> K
+for the cycle model and (m, n) -> Pallas block shape for the kernels, and is
+persisted as JSON next to the artifacts.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, Optional, Tuple
+
+from repro.core.tiling import TileConfig, select_block_shape, select_tile
+
+DEFAULT_PATH = os.path.join("artifacts", "autotune_table.json")
+
+
+class ConfigTable:
+    def __init__(self, path: str = DEFAULT_PATH):
+        self.path = path
+        self._tiles: Dict[str, int] = {}
+        self._blocks: Dict[str, Tuple[int, int]] = {}
+        if os.path.exists(path):
+            with open(path) as f:
+                data = json.load(f)
+            self._tiles = data.get("tiles", {})
+            self._blocks = {k: tuple(v) for k, v in data.get("blocks", {}).items()}
+
+    # -- paper tile engine ------------------------------------------------
+    def tile(self, rows: int, cols: int, macs: int) -> TileConfig:
+        key = f"{rows}x{cols}@{macs}"
+        if key not in self._tiles:
+            self._tiles[key] = select_tile(rows, cols, macs).k
+        return TileConfig(k=self._tiles[key], macs=macs)
+
+    # -- Pallas blocks ----------------------------------------------------
+    def block(self, m: int, n: int, **kw) -> Tuple[int, int]:
+        key = f"{m}x{n}"
+        if key not in self._blocks:
+            self._blocks[key] = select_block_shape(m, n, **kw)
+        return self._blocks[key]
+
+    def save(self):
+        os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+        with open(self.path, "w") as f:
+            json.dump({"tiles": self._tiles, "blocks": self._blocks}, f, indent=1)
+
+
+_GLOBAL: Optional[ConfigTable] = None
+
+
+def table() -> ConfigTable:
+    global _GLOBAL
+    if _GLOBAL is None:
+        _GLOBAL = ConfigTable()
+    return _GLOBAL

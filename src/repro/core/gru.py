@@ -1,0 +1,151 @@
+"""GRU under SHARP's schedules (paper §8: "the same improvement can be
+achieved in other networks that have similar design, such as GRU").
+
+GRU is the harder case for Unfolded scheduling: the candidate gate
+    n_t = tanh(W_n x_t + r_t * (U_n h_{t-1}) + b_n)
+couples the recurrent MVM with the reset gate *multiplicatively*, so unlike
+the LSTM not all of U·h can be hidden behind the next step's input GEMM —
+only W·x is hoistable, and the three recurrent MVMs (U_z, U_r, U_n) remain
+serial.  The schedules below mirror core/schedules.py and are numerically
+equivalent (property-tested); the perf-model hook exposes the (slightly
+smaller) Unfolded win the paper predicts for GRU.
+
+Gate order along the 3H axis: (z, r, n).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.common import dense_init
+
+SCHEDULES = ("sequential", "intergate", "unfolded")
+
+
+def init_gru_layer(key, x_dim: int, hidden: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "W": dense_init(k1, (x_dim, 3 * hidden), dtype),
+        "U": dense_init(k2, (hidden, 3 * hidden), dtype),
+        "b": jnp.zeros((3 * hidden,), dtype),
+    }
+
+
+def _gates(xw, hu, H):
+    """xw, hu (B, 3H) pre-activations -> new h (fp32)."""
+    z = jax.nn.sigmoid((xw[:, :H] + hu[:, :H]).astype(jnp.float32))
+    r = jax.nn.sigmoid((xw[:, H:2 * H] + hu[:, H:2 * H]).astype(jnp.float32))
+    n = jnp.tanh(xw[:, 2 * H:].astype(jnp.float32)
+                 + r * hu[:, 2 * H:].astype(jnp.float32))
+    return z, n
+
+
+def gru_step(params, x_t, h):
+    H = params["U"].shape[0]
+    xw = x_t @ params["W"] + params["b"]
+    hu = h @ params["U"]
+    z, n = _gates(xw, hu, H)
+    h32 = (1 - z) * n + z * h.astype(jnp.float32)
+    return h32.astype(x_t.dtype)
+
+
+def reference_unroll(params, xs):
+    B, T, _ = xs.shape
+    H = params["U"].shape[0]
+    h = jnp.zeros((B, H), xs.dtype)
+    outs = []
+    for t in range(T):
+        h = gru_step(params, xs[:, t], h)
+        outs.append(h)
+    return jnp.stack(outs, axis=1)
+
+
+def run_layer_sequential(params, xs):
+    """One gate MVM pair after another per step."""
+    B, T, X = xs.shape
+    H = params["U"].shape[0]
+
+    def step(h, x_t):
+        parts_x, parts_h = [], []
+        for g in range(3):
+            Wg = jax.lax.dynamic_slice_in_dim(params["W"], g * H, H, 1)
+            Ug = jax.lax.dynamic_slice_in_dim(params["U"], g * H, H, 1)
+            bg = jax.lax.dynamic_slice_in_dim(params["b"], g * H, H, 0)
+            parts_x.append(x_t @ Wg + bg)
+            parts_h.append(h @ Ug)
+        xw = jnp.concatenate(parts_x, -1)
+        hu = jnp.concatenate(parts_h, -1)
+        z, n = _gates(xw, hu, H)
+        h2 = ((1 - z) * n + z * h.astype(jnp.float32)).astype(xs.dtype)
+        return h2, h2
+
+    _, hs = jax.lax.scan(step, jnp.zeros((B, H), xs.dtype), xs.swapaxes(0, 1))
+    return hs.swapaxes(0, 1)
+
+
+def run_layer_intergate(params, xs):
+    B, T, X = xs.shape
+    H = params["U"].shape[0]
+
+    def step(h, x_t):
+        h2 = gru_step(params, x_t, h)
+        return h2, h2
+
+    _, hs = jax.lax.scan(step, jnp.zeros((B, H), xs.dtype), xs.swapaxes(0, 1))
+    return hs.swapaxes(0, 1)
+
+
+def run_layer_unfolded(params, xs):
+    """Input half W·x hoisted for every step; U·h (all three gates, fused)
+    stays serial — the GRU-shaped Unfolded split."""
+    B, T, X = xs.shape
+    H = params["U"].shape[0]
+    xw = jnp.einsum("btx,xg->btg", xs, params["W"]) + params["b"]
+
+    def step(h, xw_t):
+        hu = h @ params["U"]
+        z, n = _gates(xw_t, hu, H)
+        h2 = ((1 - z) * n + z * h.astype(jnp.float32)).astype(xs.dtype)
+        return h2, h2
+
+    _, hs = jax.lax.scan(step, jnp.zeros((B, H), xs.dtype), xw.swapaxes(0, 1))
+    return hs.swapaxes(0, 1)
+
+
+_FNS = {"sequential": run_layer_sequential, "intergate": run_layer_intergate,
+        "unfolded": run_layer_unfolded}
+
+
+def run_layer(params, xs, schedule: str = "unfolded"):
+    return _FNS[schedule](params, xs)
+
+
+# --- perf-model hook (3 gates instead of 4; tail has no cell state) --------
+
+
+def gru_step_cycles(H: int, X: int, design) -> float:
+    """Critical-path cycles per GRU step under the SHARP model."""
+    import math
+
+    from repro.core.perfmodel import ACT_LAT
+    from repro.core.tiling import mvm_cycles
+
+    tile = design_tile = None
+    from repro.core.perfmodel import _tile_for
+
+    tile = _tile_for(design, 3 * H, max(H, X))
+    rc = design.reconfigure
+    upd_chunk = max(1, math.ceil(3 * H / tile.k) // 3)
+    s = design.schedule
+    if s == "sequential":
+        mvm = 3 * (mvm_cycles(H, X, tile, rc) + mvm_cycles(H, H, tile, rc))
+        return (mvm + ACT_LAT + upd_chunk * 3 + design.pipeline_penalty) / design.efficiency
+    if s == "intergate":
+        mvm = mvm_cycles(3 * H, X, tile, rc) + mvm_cycles(3 * H, H, tile, rc)
+        return (mvm + ACT_LAT + upd_chunk + design.pipeline_penalty) / design.efficiency
+    if s == "unfolded":
+        mvm_h = mvm_cycles(3 * H, H, tile, rc)
+        mvm_in = mvm_cycles(3 * H, X, tile, rc)
+        return (mvm_h + max(mvm_in, ACT_LAT + upd_chunk)
+                + design.pipeline_penalty) / design.efficiency
+    raise ValueError(s)

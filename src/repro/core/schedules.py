@@ -1,0 +1,172 @@
+"""SHARP's four LSTM schedules as real JAX computation orders (paper §5, Fig. 8).
+
+All four produce numerically equivalent outputs (property-tested against
+``models.layers.lstm.reference_unroll``); they differ in *dependence
+structure*, which is what the paper is about:
+
+  sequential  one gate after another per time step; the cell/hidden update
+              waits for the last (output) gate.  [BrainWave/TPU-style]
+  batch       same order but the weight matrix is dispatched in column tiles
+              (MVM partial sums accumulated tile by tile) — models the
+              tiled-dispatch pipeline of Fig. 8.b.
+  intergate   all four gates issued as one fused GEMM per step (the 4H gate
+              axis is SHARP's "processing all gates simultaneously");
+              hides the intra-sequence dependency.  [E-PUR-style]
+  unfolded    SHARP's contribution: the input half W·x_t of EVERY step is
+              hoisted out of the recurrence into one sequence-parallel GEMM;
+              the scan keeps only U·h_{t-1} + the pointwise tail.  On TPU the
+              hoisted GEMM is MXU-dense and, once the data dependence is cut,
+              XLA's scheduler overlaps it with the serial tail — the paper's
+              across-sequence overlap.
+
+``tile`` (from core.tiling) controls the dispatch granularity of the
+batch/unfolded paths, mirroring the reconfigurable tile-engine.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.lstm import cell_update
+
+SCHEDULES = ("sequential", "batch", "intergate", "unfolded")
+
+
+# ---------------------------------------------------------------------------
+# single layer
+# ---------------------------------------------------------------------------
+
+
+def _init_state(B: int, H: int, dtype):
+    return jnp.zeros((B, H), dtype), jnp.zeros((B, H), jnp.float32)
+
+
+def run_layer_sequential(params, xs):
+    """One gate at a time; update strictly after the O gate (Fig. 8.a)."""
+    B, T, X = xs.shape
+    H = params["U"].shape[0]
+    W, U, b = params["W"], params["U"], params["b"]
+
+    def step(carry, x_t):
+        h, c = carry
+        gates = []
+        for g in range(4):  # i, f, g, o — strictly in order
+            Wg = jax.lax.dynamic_slice_in_dim(W, g * H, H, axis=1)
+            Ug = jax.lax.dynamic_slice_in_dim(U, g * H, H, axis=1)
+            bg = jax.lax.dynamic_slice_in_dim(b, g * H, H, axis=0)
+            gates.append(x_t @ Wg + h @ Ug + bg)
+        h_new, c_new = cell_update(jnp.concatenate(gates, axis=-1), c)
+        h_new = h_new.astype(xs.dtype)
+        return (h_new, c_new), h_new
+
+    (_, _), hs = jax.lax.scan(step, _init_state(B, H, xs.dtype), xs.swapaxes(0, 1))
+    return hs.swapaxes(0, 1)
+
+
+def run_layer_batch(params, xs, tile_cols: int = 0):
+    """Tiled dispatch: the 4H gate axis is processed in column tiles whose
+    partial results stream into the accumulator (Fig. 8.b)."""
+    B, T, X = xs.shape
+    H = params["U"].shape[0]
+    W, U, b = params["W"], params["U"], params["b"]
+    tc = tile_cols or min(4 * H, 512)
+    n_tiles = -(-4 * H // tc)
+
+    def step(carry, x_t):
+        h, c = carry
+        parts = []
+        for i in range(n_tiles):  # tile-by-tile dispatch
+            lo = i * tc
+            w = min(tc, 4 * H - lo)
+            Wt = jax.lax.dynamic_slice_in_dim(W, lo, w, axis=1)
+            Ut = jax.lax.dynamic_slice_in_dim(U, lo, w, axis=1)
+            bt = jax.lax.dynamic_slice_in_dim(b, lo, w, axis=0)
+            parts.append(x_t @ Wt + h @ Ut + bt)
+        h_new, c_new = cell_update(jnp.concatenate(parts, axis=-1), c)
+        h_new = h_new.astype(xs.dtype)
+        return (h_new, c_new), h_new
+
+    (_, _), hs = jax.lax.scan(step, _init_state(B, H, xs.dtype), xs.swapaxes(0, 1))
+    return hs.swapaxes(0, 1)
+
+
+def run_layer_intergate(params, xs):
+    """All four gates fused per step (Fig. 8.c)."""
+    B, T, X = xs.shape
+    H = params["U"].shape[0]
+
+    def step(carry, x_t):
+        h, c = carry
+        gates = x_t @ params["W"] + h @ params["U"] + params["b"]
+        h_new, c_new = cell_update(gates, c)
+        h_new = h_new.astype(xs.dtype)
+        return (h_new, c_new), h_new
+
+    (_, _), hs = jax.lax.scan(step, _init_state(B, H, xs.dtype), xs.swapaxes(0, 1))
+    return hs.swapaxes(0, 1)
+
+
+def run_layer_unfolded(params, xs, cell_kernel=None):
+    """SHARP: hoisted input GEMM + recurrent-only scan (Fig. 8.d).
+
+    ``cell_kernel``: optional fused recurrent-step implementation with
+    signature (U, b_zeros, xw_t, h, c) -> (h, c) — the Pallas lstm_cell
+    kernel plugs in here.
+    """
+    B, T, X = xs.shape
+    H = params["U"].shape[0]
+    # ---- sequence-parallel input half: one big GEMM for every t ----------
+    xw = jnp.einsum("btx,xg->btg", xs, params["W"]) + params["b"]
+
+    if cell_kernel is None:
+        def cell(xw_t, h, c):
+            gates = xw_t + h @ params["U"]
+            h2, c2 = cell_update(gates, c)
+            return h2.astype(xs.dtype), c2
+    else:
+        def cell(xw_t, h, c):
+            return cell_kernel(params["U"], xw_t, h, c)
+
+    def step(carry, xw_t):
+        h, c = carry
+        h, c = cell(xw_t, h, c)
+        return (h, c), h
+
+    (_, _), hs = jax.lax.scan(step, _init_state(B, H, xs.dtype), xw.swapaxes(0, 1))
+    return hs.swapaxes(0, 1)
+
+
+_LAYER_FNS = {
+    "sequential": run_layer_sequential,
+    "batch": run_layer_batch,
+    "intergate": run_layer_intergate,
+    "unfolded": run_layer_unfolded,
+}
+
+
+def run_layer(params, xs, schedule: str = "unfolded", **kw):
+    if schedule not in _LAYER_FNS:
+        raise ValueError(f"unknown schedule {schedule!r}; options {SCHEDULES}")
+    return _LAYER_FNS[schedule](params, xs, **kw)
+
+
+# ---------------------------------------------------------------------------
+# stacks (multi-layer, optional bidirectional — EESEN-style)
+# ---------------------------------------------------------------------------
+
+
+def run_stack(stack_params, xs, schedule: str = "unfolded", **kw):
+    """stack_params from models.layers.lstm.init_lstm_stack.  xs (B,T,X)."""
+    y = xs
+    for layer in stack_params["layers"]:
+        if "fwd" in layer:  # bidirectional
+            f = run_layer(layer["fwd"], y, schedule, **kw)
+            bwd_in = jnp.flip(y, axis=1)
+            b = run_layer(layer["bwd"], bwd_in, schedule, **kw)
+            y = jnp.concatenate([f, jnp.flip(b, axis=1)], axis=-1)
+        else:
+            y = run_layer(layer, y, schedule, **kw)
+    return y

@@ -1,0 +1,85 @@
+"""Generalized Unfolded scheduling: the paper's technique as a reusable tool.
+
+``unfold`` factors any gated recurrence into:
+  (1) an input half computed for all T steps as one sequence-parallel GEMM
+      (MXU-dense, no recurrent dependency), and
+  (2) a recurrent scan whose body consumes the precomputed slice.
+
+The LSTM/xLSTM/RG-LRU layers use this structurally (see models/layers);
+this module adds the *distributed* form: the 4H gate axis is sharded over
+the ``model`` mesh axis, so each chip holds a (H x 4H/n) slice of U and the
+per-step reduction is a psum that XLA overlaps with the already-issued
+input GEMM of later timesteps — the TPU rendition of Fig. 8.d, where the
+tree-adder's implicit synchronization becomes an ICI collective.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.layers.lstm import cell_update
+
+
+def unfold(input_fn: Callable, recur_fn: Callable, xs, state):
+    """Generic unfolded runner.
+
+    input_fn: xs (B,T,...) -> precomputed (B,T,...) input-half tensors
+    recur_fn: (state, pre_t) -> (state, out_t)
+    """
+    pre = input_fn(xs)
+
+    def step(st, pre_t):
+        return recur_fn(st, pre_t)
+
+    state, outs = jax.lax.scan(step, state, jax.tree.map(lambda a: a.swapaxes(0, 1), pre))
+    return state, jax.tree.map(lambda a: a.swapaxes(0, 1), outs)
+
+
+# ---------------------------------------------------------------------------
+# distributed LSTM layer (gate-dim tensor parallel)
+# ---------------------------------------------------------------------------
+
+
+def lstm_param_specs(mesh_axis: str = "model"):
+    """PartitionSpecs for an LSTM layer: gate (4H) axis sharded."""
+    return {"W": P(None, mesh_axis), "U": P(None, mesh_axis), "b": P(mesh_axis)}
+
+
+def run_layer_unfolded_tp(params, xs, mesh: Mesh, axis: str = "model"):
+    """Unfolded schedule with the gate axis tensor-parallel over ``axis``.
+
+    Weights arrive sharded (lstm_param_specs); activations: xs replicated on
+    ``axis`` (sharded over 'data' on batch).  Each step's recurrent GEMM
+    produces the local 4H/n gate slice; the hidden state h (H,) must be
+    all-gathered for the next step's U·h — expressed here via sharding
+    constraints so GSPMD schedules the collective, which can overlap the
+    next step's (independent) input GEMM slice.
+    """
+    H = params["U"].shape[0]
+    B, T, X = xs.shape
+
+    def constrained(v, spec):
+        return jax.lax.with_sharding_constraint(v, NamedSharding(mesh, spec))
+
+    # sequence-parallel input half — one big GEMM, gate axis sharded
+    xw = jnp.einsum("btx,xg->btg", xs, params["W"]) + params["b"]
+    xw = constrained(xw, P(None, None, axis))
+
+    def step(carry, xw_t):
+        h, c = carry
+        gates = xw_t + h @ params["U"]  # local gate slice
+        gates = constrained(gates, P(None, axis))
+        h2, c2 = cell_update(gates, c)  # pointwise on the local slice...
+        # ...but h is consumed un-sharded next step: constrain to replicated
+        h2 = constrained(h2.astype(xs.dtype), P(None))
+        c2 = constrained(c2, P(None))
+        return (h2, c2), h2
+
+    h0 = jnp.zeros((B, H), xs.dtype)
+    c0 = jnp.zeros((B, H), jnp.float32)
+    (_, _), hs = jax.lax.scan(step, (h0, c0), xw.swapaxes(0, 1))
+    return hs.swapaxes(0, 1)

@@ -1,0 +1,17 @@
+"""Shared kernel utilities."""
+from __future__ import annotations
+
+import jax
+
+
+def default_interpret() -> bool:
+    """Pallas TPU kernels run in interpret mode everywhere but real TPUs."""
+    return jax.default_backend() != "tpu"
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return cdiv(a, b) * b

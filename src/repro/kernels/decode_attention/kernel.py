@@ -1,0 +1,91 @@
+"""Flash-decode GQA attention: one query token vs. a long KV cache.
+
+The decode step is the transformer analogue of SHARP's serial recurrent
+tail: it must finish before the next token can start, so its latency sets
+the serving rate.  The kernel streams the KV cache block-by-block
+(HBM -> VMEM) with an online-softmax accumulator in VMEM scratch — one pass
+over the cache, no (B, T) score materialization.
+
+Grid: (b over batch, t over KV blocks), t innermost so (m, l, acc) scratch
+carries across cache blocks for a fixed request.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import cdiv
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            n_t: int, bt: int, G: int):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]            # (Hq, D)
+    k = k_ref[0]            # (bt, Hk, D)
+    v = v_ref[0]            # (bt, Hk, D)
+    valid = valid_ref[0, 0]  # scalar int32
+    Hq, D = q.shape
+    Hk = k.shape[1]
+    qg = q.reshape(Hk, G, D).astype(jnp.float32)
+    s = jnp.einsum("hgd,thd->hgt", qg, k.astype(jnp.float32))
+    s = s / jnp.sqrt(D).astype(jnp.float32)
+    pos = t * bt + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+    s = jnp.where(pos < valid, s, NEG_INF)
+
+    m_prev = m_ref[...]                      # (Hk, G)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[..., None])        # (Hk, G, bt)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+    pv = jnp.einsum("hgt,thd->hgd", p, v.astype(jnp.float32))
+    acc_ref[...] = acc_ref[...] * alpha[..., None] + pv
+    m_ref[...] = m_new
+
+    @pl.when(t == n_t - 1)
+    def _final():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[..., None]
+        o_ref[...] = out.reshape(1, Hq, D).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q, k_cache, v_cache, valid, *, block_t: int,
+                            interpret: bool = True):
+    """q (B, Hq, D); caches (B, T, Hk, D); valid (B,) int32."""
+    B, Hq, D = q.shape
+    T, Hk = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hk
+    assert T % block_t == 0, (T, block_t)
+    n_t = T // block_t
+    valid2 = valid.reshape(B, 1).astype(jnp.int32)
+    kernel = functools.partial(_kernel, n_t=n_t, bt=block_t, G=G)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, n_t),
+        in_specs=[
+            pl.BlockSpec((1, Hq, D), lambda b, t: (b, 0, 0)),
+            pl.BlockSpec((1, block_t, Hk, D), lambda b, t: (b, t, 0, 0)),
+            pl.BlockSpec((1, block_t, Hk, D), lambda b, t: (b, t, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b, t: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Hq, D), lambda b, t: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((Hk, G), jnp.float32),
+            pltpu.VMEM((Hk, G), jnp.float32),
+            pltpu.VMEM((Hk, G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_cache, v_cache, valid2)
+    return out

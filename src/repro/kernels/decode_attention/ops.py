@@ -1,0 +1,33 @@
+"""Jitted wrapper for flash-decode attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import default_interpret
+from repro.kernels.decode_attention.kernel import decode_attention_pallas
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def decode_attention(q, k_cache, v_cache, valid, *, block_t: int = 0,
+                     interpret: bool | None = None):
+    """q (B, Hq, D) or (B, 1, Hq, D); caches (B, T, Hk, D); valid (B,)."""
+    squeeze = q.ndim == 4
+    if squeeze:
+        q = q[:, 0]
+    T = k_cache.shape[1]
+    if not block_t:
+        block_t = min(512, T)
+        while T % block_t:
+            block_t //= 2
+    if interpret is None:
+        interpret = default_interpret()
+    o = decode_attention_pallas(q, k_cache, v_cache, valid, block_t=block_t,
+                                interpret=interpret)
+    return o[:, None] if squeeze else o
+
+
+__all__ = ["decode_attention", "decode_attention_ref"]

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for single-token GQA decode attention."""
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k_cache, v_cache, valid):
+    """q (B, Hq, D); k/v_cache (B, T, Hk, D); valid (B,) int32 live slots.
+
+    Returns (B, Hq, D)."""
+    B, Hq, D = q.shape
+    T, Hk = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hk
+    qg = q.reshape(B, Hk, G, D)
+    s = jnp.einsum("bhgd,bthd->bhgt", qg, k_cache,
+                   preferred_element_type=jnp.float32)
+    s = s / jnp.sqrt(D).astype(jnp.float32)
+    ok = jnp.arange(T)[None, :] < valid[:, None]  # (B, T)
+    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgt,bthd->bhgd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, Hq, D).astype(q.dtype)

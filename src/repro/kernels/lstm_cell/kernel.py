@@ -1,0 +1,92 @@
+"""Fused LSTM recurrent step as a Pallas TPU kernel.
+
+SHARP's three pipeline stages (Compute Unit -> A-MFU -> Cell Updater)
+collapse into one VMEM-resident kernel: the recurrent MVM U·h accumulates in
+a VMEM scratch tile, and on the last reduction step the gate activations and
+the cell/hidden update run as the epilogue on the same tile — the TPU
+analogue of SHARP's "output-based tiling" (no HBM round-trip between the
+MVM, activation and update stages).
+
+Grid: (j over H output columns, k over H reduction rows); k innermost so the
+accumulator tile is revisited.  Block shapes come from the autotune table
+(core.tiling.select_block_shape), mirroring the paper's per-model K-width.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import cdiv
+
+
+def _kernel(h_ref, u_ref, xw_ref, c_ref, h_out_ref, c_out_ref, acc_ref, *,
+            n_k: int, H: int, bk: int):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # ---- Compute Unit: one reduction stripe of U·h ----------------------
+    h_blk = h_ref[...]  # (B, bk)
+    u_blk = u_ref[...]  # (bk, 4, bh)
+    # mask the reduction tail (matrix edge -> SHARP's padding handling);
+    # both operands, since out-of-bounds pads are undefined (NaN in interpret)
+    base = k * bk
+    idx = base + jax.lax.broadcasted_iota(jnp.int32, h_blk.shape, 1)
+    h_blk = jnp.where(idx < H, h_blk, 0).astype(h_blk.dtype)
+    ridx = base + jax.lax.broadcasted_iota(jnp.int32, u_blk.shape, 0)
+    u_blk = jnp.where(ridx < H, u_blk, 0).astype(u_blk.dtype)
+    acc_ref[...] += jax.lax.dot_general(
+        h_blk, u_blk.reshape(u_blk.shape[0], -1),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).reshape(acc_ref.shape)
+
+    # ---- A-MFU + Cell Updater epilogue on the last stripe ---------------
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        gates = acc_ref[...] + xw_ref[...].astype(jnp.float32)  # (B, 4, bh)
+        i = jax.nn.sigmoid(gates[:, 0])
+        f = jax.nn.sigmoid(gates[:, 1])
+        g = jnp.tanh(gates[:, 2])
+        o = jax.nn.sigmoid(gates[:, 3])
+        c = f * c_ref[...].astype(jnp.float32) + i * g
+        c_out_ref[...] = c
+        h_out_ref[...] = (o * jnp.tanh(c)).astype(h_out_ref.dtype)
+
+
+def lstm_cell_pallas(U4, xw_t, h_prev, c_prev, *, block_h: int, block_k: int,
+                     interpret: bool = True):
+    """U4 (H,4,H); xw_t (B,4,H); h_prev (B,H); c_prev (B,H) fp32."""
+    H = U4.shape[0]
+    B = h_prev.shape[0]
+    n_j = cdiv(H, block_h)
+    n_k = cdiv(H, block_k)
+
+    kernel = functools.partial(_kernel, n_k=n_k, H=H, bk=block_k)
+    h_out, c_out = pl.pallas_call(
+        kernel,
+        grid=(n_j, n_k),
+        in_specs=[
+            pl.BlockSpec((B, block_k), lambda j, k: (0, k)),          # h_prev
+            pl.BlockSpec((block_k, 4, block_h), lambda j, k: (k, 0, j)),  # U4
+            pl.BlockSpec((B, 4, block_h), lambda j, k: (0, 0, j)),    # xw_t
+            pl.BlockSpec((B, block_h), lambda j, k: (0, j)),          # c_prev
+        ],
+        out_specs=[
+            pl.BlockSpec((B, block_h), lambda j, k: (0, j)),          # h
+            pl.BlockSpec((B, block_h), lambda j, k: (0, j)),          # c
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H), h_prev.dtype),
+            jax.ShapeDtypeStruct((B, H), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((B, 4, block_h), jnp.float32)],
+        interpret=interpret,
+    )(h_prev, U4, xw_t, c_prev)
+    return h_out, c_out

@@ -1,0 +1,45 @@
+"""Jitted public wrapper for the fused LSTM cell kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.autotune import table
+from repro.kernels.common import default_interpret, round_up
+from repro.kernels.lstm_cell.kernel import lstm_cell_pallas
+from repro.kernels.lstm_cell.ref import lstm_cell_ref
+
+
+@functools.partial(jax.jit, static_argnames=("block_h", "block_k", "interpret"))
+def lstm_cell(U4, xw_t, h_prev, c_prev, *, block_h: int = 0, block_k: int = 0,
+              interpret: bool | None = None):
+    """Fused recurrent LSTM step.  U4 (H,4,H); xw_t (B,4,H) precomputed
+    input half; h (B,H); c (B,H) fp32 -> (h, c)."""
+    H = U4.shape[0]
+    if not block_h or not block_k:
+        bk, bh = table().block(H, H, vmem_budget=2 * 2**20)
+        block_h = block_h or min(bh, H)
+        block_k = block_k or min(bk, H)
+    if interpret is None:
+        interpret = default_interpret()
+    return lstm_cell_pallas(U4, xw_t, h_prev, c_prev, block_h=block_h,
+                            block_k=block_k, interpret=interpret)
+
+
+def as_cell_kernel(interpret: bool | None = None):
+    """Adapter for core.schedules.run_layer_unfolded(cell_kernel=...).
+
+    Schedules store U as (H, 4H) gate-major; the kernel wants (H, 4, H)."""
+
+    def cell(U, xw_t, h, c):
+        H = U.shape[0]
+        U4 = U.reshape(H, 4, H)
+        xw4 = xw_t.reshape(xw_t.shape[0], 4, H)
+        return lstm_cell(U4, xw4, h, c, interpret=interpret)
+
+    return cell
+
+
+__all__ = ["lstm_cell", "lstm_cell_ref", "as_cell_kernel"]

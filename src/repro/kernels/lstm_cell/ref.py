@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the fused LSTM recurrent step."""
+import jax
+import jax.numpy as jnp
+
+
+def lstm_cell_ref(U4, xw_t, h_prev, c_prev):
+    """U4 (H, 4, H); xw_t (B, 4, H) precomputed input half (+bias);
+    h_prev (B, H); c_prev (B, H) fp32.  Returns (h, c)."""
+    gates = xw_t.astype(jnp.float32) + jnp.einsum(
+        "bx,xgj->bgj", h_prev, U4, preferred_element_type=jnp.float32)
+    i = jax.nn.sigmoid(gates[:, 0])
+    f = jax.nn.sigmoid(gates[:, 1])
+    g = jnp.tanh(gates[:, 2])
+    o = jax.nn.sigmoid(gates[:, 3])
+    c = f * c_prev.astype(jnp.float32) + i * g
+    h = o * jnp.tanh(c)
+    return h.astype(h_prev.dtype), c

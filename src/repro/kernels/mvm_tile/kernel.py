@@ -1,0 +1,73 @@
+"""Reconfigurable tiled MVM — the SHARP Compute-Unit/R-Add-Reduce analogue.
+
+y = x @ W (+ b), with the (block_k x block_n) tile shape chosen per weight
+matrix from the autotune table: SHARP's Config1..4 become BlockSpec
+geometries, its R-Add-Reduce tap-point selection becomes the reduction
+blocking, and its edge reconfiguration becomes the masked final stripes
+(no MAC results are wasted past the matrix edge).
+
+Grid: (j over N output cols, k over X reduction); the fp32 accumulator tile
+lives in VMEM across the k stripes (revisiting), and the bias epilogue runs
+on the last stripe — decode projections call this as their GEMV engine.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import cdiv
+
+
+def _kernel(x_ref, w_ref, b_ref, out_ref, acc_ref, *, n_k: int, X: int, bk: int):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x_blk = x_ref[...]  # (B, bk)
+    w_blk = w_ref[...]  # (bk, bn)
+    base = k * bk
+    cidx = base + jax.lax.broadcasted_iota(jnp.int32, x_blk.shape, 1)
+    x_blk = jnp.where(cidx < X, x_blk, 0).astype(x_blk.dtype)
+    ridx = base + jax.lax.broadcasted_iota(jnp.int32, w_blk.shape, 0)
+    w_blk = jnp.where(ridx < X, w_blk, 0).astype(w_blk.dtype)
+    acc_ref[...] += jax.lax.dot_general(
+        x_blk, w_blk, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        out_ref[...] = (acc_ref[...] + b_ref[...].astype(jnp.float32)
+                        ).astype(out_ref.dtype)
+
+
+def mvm_pallas(x, W, b=None, *, block_n: int, block_k: int,
+               interpret: bool = True):
+    """x (B, X); W (X, N); b (N,) optional."""
+    B, X = x.shape
+    N = W.shape[1]
+    if b is None:
+        b = jnp.zeros((N,), jnp.float32)
+    b2 = b.reshape(1, N)
+    n_j = cdiv(N, block_n)
+    n_k = cdiv(X, block_k)
+    kernel = functools.partial(_kernel, n_k=n_k, X=X, bk=block_k)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_j, n_k),
+        in_specs=[
+            pl.BlockSpec((B, block_k), lambda j, k: (0, k)),
+            pl.BlockSpec((block_k, block_n), lambda j, k: (k, j)),
+            pl.BlockSpec((1, block_n), lambda j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((B, block_n), lambda j, k: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((B, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((B, block_n), jnp.float32)],
+        interpret=interpret,
+    )(x, W, b2)
+    return out

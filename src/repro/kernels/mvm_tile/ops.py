@@ -1,0 +1,34 @@
+"""Jitted wrapper: tile shape resolved from the autotune table per (X, N)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.autotune import table
+from repro.kernels.common import default_interpret
+from repro.kernels.mvm_tile.kernel import mvm_pallas
+from repro.kernels.mvm_tile.ref import mvm_ref
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_k", "interpret"))
+def mvm(x, W, b=None, *, block_n: int = 0, block_k: int = 0,
+        interpret: bool | None = None):
+    """Tiled y = x @ W (+ b).  x (B, X) or (X,); W (X, N)."""
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[None]
+    X, N = W.shape
+    if not block_n or not block_k:
+        bk, bn = table().block(X, N, vmem_budget=2 * 2**20)
+        block_k = block_k or min(bk, X)
+        block_n = block_n or min(bn, N)
+    if interpret is None:
+        interpret = default_interpret()
+    y = mvm_pallas(x, W, b, block_n=block_n, block_k=block_k,
+                   interpret=interpret)
+    return y[0] if squeeze else y
+
+
+__all__ = ["mvm", "mvm_ref"]

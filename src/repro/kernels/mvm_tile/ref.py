@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the tiled MVM engine."""
+import jax.numpy as jnp
+
+
+def mvm_ref(x, W, b=None):
+    """x (B, X) @ W (X, N) (+ b) with fp32 accumulation."""
+    y = jnp.einsum("bx,xn->bn", x, W, preferred_element_type=jnp.float32)
+    if b is not None:
+        y = y + b.astype(jnp.float32)
+    return y.astype(x.dtype)

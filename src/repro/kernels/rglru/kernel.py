@@ -1,0 +1,64 @@
+"""RG-LRU gated linear recurrence as a Pallas kernel.
+
+The Unfolded split (DESIGN.md) leaves only this serial pointwise recurrence
+inside the time loop — the analogue of SHARP's Cell-Updater stage.  The
+kernel walks the grid (channel-block j, time t) with t innermost, carrying
+the per-channel hidden state in a VMEM scratch register across time steps:
+the whole T-step recurrence for a channel stripe runs without touching HBM
+for the state (SHARP's double-buffered cell-state scratchpad, in VMEM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import cdiv
+
+
+def _kernel(la_ref, gx_ref, h0_ref, hs_ref, hT_ref, state_ref, *, n_t: int):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        state_ref[...] = h0_ref[...]
+
+    a = jnp.exp(la_ref[..., 0, :])  # (B, bw)
+    g = gx_ref[..., 0, :]
+    h = a * state_ref[...] + jnp.sqrt(jnp.maximum(1.0 - a * a, 0.0)) * g
+    state_ref[...] = h
+    hs_ref[...] = h[:, None, :]
+
+    @pl.when(t == n_t - 1)
+    def _final():
+        hT_ref[...] = h
+
+
+def rglru_scan_pallas(log_a, gx, h0, *, block_w: int, interpret: bool = True):
+    """log_a, gx (B, T, W) fp32; h0 (B, W) fp32."""
+    B, T, W = log_a.shape
+    n_j = cdiv(W, block_w)
+    kernel = functools.partial(_kernel, n_t=T)
+    hs, hT = pl.pallas_call(
+        kernel,
+        grid=(n_j, T),
+        in_specs=[
+            pl.BlockSpec((B, 1, block_w), lambda j, t: (0, t, j)),
+            pl.BlockSpec((B, 1, block_w), lambda j, t: (0, t, j)),
+            pl.BlockSpec((B, block_w), lambda j, t: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((B, 1, block_w), lambda j, t: (0, t, j)),
+            pl.BlockSpec((B, block_w), lambda j, t: (0, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, W), jnp.float32),
+            jax.ShapeDtypeStruct((B, W), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((B, block_w), jnp.float32)],
+        interpret=interpret,
+    )(log_a, gx, h0)
+    return hs, hT

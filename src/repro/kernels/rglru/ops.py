@@ -1,0 +1,24 @@
+"""Jitted wrapper for the RG-LRU scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import default_interpret
+from repro.kernels.rglru.kernel import rglru_scan_pallas
+from repro.kernels.rglru.ref import rglru_scan_ref
+
+
+@functools.partial(jax.jit, static_argnames=("block_w", "interpret"))
+def rglru_scan(log_a, gx, h0, *, block_w: int = 0, interpret: bool | None = None):
+    W = log_a.shape[-1]
+    if not block_w:
+        block_w = min(512, W)
+    if interpret is None:
+        interpret = default_interpret()
+    return rglru_scan_pallas(log_a, gx, h0, block_w=block_w, interpret=interpret)
+
+
+__all__ = ["rglru_scan", "rglru_scan_ref"]

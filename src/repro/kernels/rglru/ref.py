@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the RG-LRU recurrence scan."""
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(log_a, gx, h0):
+    """log_a, gx (B, T, W) fp32; h0 (B, W) fp32 -> (hs (B,T,W), h_T)."""
+
+    def step(h, inp):
+        la, g = inp
+        a = jnp.exp(la)
+        h = a * h + jnp.sqrt(jnp.maximum(1.0 - a * a, 0.0)) * g
+        return h, h
+
+    hT, hs = jax.lax.scan(step, h0, (log_a.swapaxes(0, 1), gx.swapaxes(0, 1)))
+    return hs.swapaxes(0, 1), hT

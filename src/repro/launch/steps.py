@@ -1,0 +1,149 @@
+"""Step functions (train / prefill / serve) + abstract input specs.
+
+These are the exact computations the dry-run lowers and the drivers run;
+there is no separate "dry-run model".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as tf
+from repro.models.layers.common import param_dtype
+from repro.optim import (AdamWConfig, CompressionConfig, apply_updates,
+                         compress, init_state)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainSettings:
+    adamw: AdamWConfig = AdamWConfig()
+    compression: CompressionConfig = CompressionConfig()
+    microbatches: int = 1
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, settings: TrainSettings = TrainSettings()):
+    n_micro = settings.microbatches
+
+    def grad_fn(params, batch):
+        return jax.value_and_grad(
+            lambda p: tf.loss_fn(cfg, p, batch), has_aux=True)(params)
+
+    def train_step(params, opt_state, batch):
+        if n_micro == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            # gradient accumulation: scan over microbatches
+            def split(x):
+                return x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def acc_step(carry, mb):
+                g_acc, l_acc = carry
+                (loss, _), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + loss), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), _ = jax.lax.scan(acc_step, (g0, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            loss = loss_sum / n_micro
+            metrics = {"loss": loss, "aux_loss": jnp.zeros((), jnp.float32)}
+
+        if settings.compression.scheme != "none":
+            grads, new_err = compress(settings.compression, grads,
+                                      opt_state["err"])
+        new_params, new_opt, om = apply_updates(
+            settings.adamw, params, grads, opt_state["adam"])
+        out_state = {"adam": new_opt}
+        if settings.compression.scheme != "none":
+            out_state["err"] = new_err
+        elif "err" in opt_state:
+            out_state["err"] = opt_state["err"]
+        return new_params, out_state, {**metrics, **om}
+
+    return train_step
+
+
+def init_opt_state(cfg: ModelConfig, params,
+                   settings: TrainSettings = TrainSettings()):
+    state: Dict[str, Any] = {"adam": init_state(params)}
+    if settings.compression.scheme != "none":
+        from repro.optim import init_error_state
+
+        state["err"] = init_error_state(params)
+    return state
+
+
+# ---------------------------------------------------------------------------
+# inference
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(cfg: ModelConfig, seq_len: int):
+    def prefill_step(params, batch):
+        logits, cache = tf.prefill(cfg, params, batch, seq_len=seq_len)
+        return logits[:, -1:], cache  # serving returns next-token logits only
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, cache, batch):
+        logits, new_cache = tf.decode_step(cfg, params, cache, batch)
+        return logits, new_cache
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+
+def batch_struct(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, Any]:
+    if cfg.embed_stub:
+        return {
+            "embeds": jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                           jnp.bfloat16),
+            "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        }
+    return {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                settings: TrainSettings = TrainSettings(), key=None
+                ) -> Dict[str, Any]:
+    """Abstract (ShapeDtypeStruct) arguments for the step of ``shape.mode``."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    params = jax.eval_shape(lambda: tf.init_params(cfg, key))
+    if shape.mode == "train":
+        opt = jax.eval_shape(lambda: init_opt_state(
+            cfg, params, settings))
+        batch = batch_struct(cfg, shape.global_batch, shape.seq_len)
+        return {"params": params, "opt_state": opt, "batch": batch}
+    if shape.mode == "prefill":
+        batch = batch_struct(cfg, shape.global_batch, shape.seq_len)
+        return {"params": params, "batch": batch}
+    if shape.mode == "decode":
+        cache = jax.eval_shape(lambda: tf.init_cache(
+            cfg, shape.global_batch, shape.seq_len))
+        if cfg.embed_stub:
+            batch = {"embeds": jax.ShapeDtypeStruct(
+                (shape.global_batch, 1, cfg.d_model), jnp.bfloat16)}
+        else:
+            batch = {"tokens": jax.ShapeDtypeStruct(
+                (shape.global_batch, 1), jnp.int32)}
+        return {"params": params, "cache": cache, "batch": batch}
+    raise ValueError(shape.mode)

@@ -1,0 +1,232 @@
+"""Attention: GQA/MQA, full-causal, sliding-window, blockwise (flash-style),
+and single-token decode against a KV cache.
+
+Three execution paths, all bit-compatible (property-tested against the naive
+reference):
+
+* ``naive_attention``      — exact O(S^2) reference; small shapes/tests.
+* ``blockwise_attention``  — flash-style online-softmax over KV chunks with a
+  lax.scan; bounded memory, used for long prefill.  Upper-triangular KV chunks
+  are masked (not skipped) — the ~2x causal FLOP overhead vs. the triangular
+  optimum is visible in the roofline and addressed in the perf pass.
+* ``local_attention``      — sliding-window (SWA) via chunking: each chunk of
+  size W attends to [previous chunk, own chunk] with a banded causal mask;
+  exact for window <= W and O(S*W).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _gqa_scores(q, k):
+    """q (B,S,Hq,D), k (B,T,Hk,D) -> scores (B,Hk,G,S,T) in fp32."""
+    B, S, Hq, D = q.shape
+    Hk = k.shape[2]
+    G = Hq // Hk
+    qg = q.reshape(B, S, Hk, G, D)
+    s = jnp.einsum("bshgd,bthd->bhgst", qg, k, preferred_element_type=jnp.float32)
+    return s * (1.0 / jnp.sqrt(D).astype(jnp.float32))
+
+
+def _gqa_out(probs, v, dtype):
+    """probs (B,Hk,G,S,T), v (B,T,Hk,D) -> (B,S,Hq,D)."""
+    B, Hk, G, S, T = probs.shape
+    o = jnp.einsum("bhgst,bthd->bshgd", probs.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, S, Hk * G, -1).astype(dtype)
+
+
+def causal_mask(S: int, T: int, q_offset, window: int = 0):
+    """(S, T) additive mask; query i sits at absolute position q_offset + i."""
+    qpos = q_offset + jnp.arange(S)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    ok = kpos <= qpos
+    if window:
+        ok &= kpos > qpos - window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def naive_attention(q, k, v, *, window: int = 0, q_offset=0):
+    s = _gqa_scores(q, k)  # (B,Hk,G,S,T)
+    s = s + causal_mask(q.shape[1], k.shape[1], q_offset, window)
+    p = jax.nn.softmax(s, axis=-1)
+    return _gqa_out(p, v, q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# blockwise / flash-style
+# ---------------------------------------------------------------------------
+
+
+def blockwise_attention(q, k, v, *, q_chunk: int = 512, kv_chunk: int = 1024):
+    """Causal attention with online softmax; memory O(q_chunk * kv_chunk)."""
+    B, S, Hq, D = q.shape
+    T = k.shape[1]
+    Hk = k.shape[2]
+    G = Hq // Hk
+    q_chunk = min(q_chunk, S)
+    kv_chunk = min(kv_chunk, T)
+    assert S % q_chunk == 0 and T % kv_chunk == 0, (S, q_chunk, T, kv_chunk)
+    nq, nk = S // q_chunk, T // kv_chunk
+
+    qc = q.reshape(B, nq, q_chunk, Hk, G, D)
+    kc = k.reshape(B, nk, kv_chunk, Hk, D)
+    vc = v.reshape(B, nk, kv_chunk, Hk, D)
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+
+    def q_step(_, qi_and_i):
+        qi, i = qi_and_i  # qi (B, q_chunk, Hk, G, D)
+
+        def kv_step(carry, kj_and_j):
+            m, l, o = carry
+            kj, vj, j = kj_and_j
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qi, kj,
+                           preferred_element_type=jnp.float32) * scale
+            qpos = i * q_chunk + jnp.arange(q_chunk)[:, None]
+            kpos = j * kv_chunk + jnp.arange(kv_chunk)[None, :]
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vj.dtype), vj,
+                            preferred_element_type=jnp.float32)
+            o_new = o * alpha[..., None] + pv
+            return (m_new, l_new, o_new), ()
+
+        m0 = jnp.full((B, Hk, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hk, G, q_chunk), jnp.float32)
+        o0 = jnp.zeros((B, Hk, G, q_chunk, D), jnp.float32)
+        (m, l, o), _ = jax.lax.scan(
+            kv_step, (m0, l0, o0),
+            (kc.swapaxes(0, 1), vc.swapaxes(0, 1), jnp.arange(nk)))
+        o = o / jnp.maximum(l[..., None], 1e-30)
+        # (B,Hk,G,q_chunk,D) -> (B,q_chunk,Hq,D)
+        return (), o.transpose(0, 3, 1, 2, 4).reshape(B, q_chunk, Hq, D)
+
+    # remat per q-chunk: the backward pass recomputes the inner kv scan
+    # instead of saving (m, l, o) carries for every kv step
+    q_step = jax.checkpoint(q_step,
+                            policy=jax.checkpoint_policies.nothing_saveable)
+    _, out = jax.lax.scan(q_step, (), (qc.swapaxes(0, 1), jnp.arange(nq)))
+    # out (nq, B, q_chunk, Hq, D)
+    return out.transpose(1, 0, 2, 3, 4).reshape(B, S, Hq, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# sliding window via chunking
+# ---------------------------------------------------------------------------
+
+
+def local_attention(q, k, v, *, window: int):
+    """Exact SWA (kpos in (qpos-window, qpos]) with O(S*window) cost."""
+    B, S, Hq, D = q.shape
+    Hk = k.shape[2]
+    G = Hq // Hk
+    W = window
+    pad = (-S) % W
+    if pad:
+        zq = jnp.zeros((B, pad, Hq, D), q.dtype)
+        zk = jnp.zeros((B, pad, Hk, D), k.dtype)
+        q = jnp.concatenate([q, zq], 1)
+        k = jnp.concatenate([k, zk], 1)
+        v = jnp.concatenate([v, zk], 1)
+    Sp = q.shape[1]
+    n = Sp // W
+    qc = q.reshape(B, n, W, Hk, G, D)
+    kc = k.reshape(B, n, W, Hk, D)
+    vc = v.reshape(B, n, W, Hk, D)
+    # keys for chunk i: chunk i-1 ++ chunk i
+    k2 = jnp.concatenate([jnp.pad(kc[:, :-1], ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0))), kc], axis=2)
+    v2 = jnp.concatenate([jnp.pad(vc[:, :-1], ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0))), vc], axis=2)
+    s = jnp.einsum("bnqhgd,bnkhd->bnhgqk", qc, k2,
+                   preferred_element_type=jnp.float32)
+    s = s * (1.0 / jnp.sqrt(D).astype(jnp.float32))
+    qpos = jnp.arange(W)[:, None] + W  # position within the 2W key window
+    kpos = jnp.arange(2 * W)[None, :]
+    ok = (kpos <= qpos) & (kpos > qpos - W)
+    first = jnp.arange(n) == 0  # chunk 0 has no previous chunk
+    ok = ok[None, :, :] & ~(first[:, None, None] & (kpos < W)[None])
+    s = jnp.where(ok[None, :, None, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bnhgqk,bnkhd->bnqhgd", p.astype(v2.dtype), v2,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(B, Sp, Hq, D)[:, :S]
+    return o.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode (single new token against a cache)
+# ---------------------------------------------------------------------------
+
+
+DECODE_CHUNK = 4096  # above this cache length, stream chunks (flash-decode)
+
+
+def decode_attention(q, k_cache, v_cache, cache_index, *, window: int = 0,
+                     prefer_chunked: bool = True):
+    """q (B,1,Hq,D); caches (B,T,Hk,D); cache_index (B,) int32 = current length
+    (the new token's k/v must already be written at cache_index - 1)."""
+    B, _, Hq, D = q.shape
+    T = k_cache.shape[1]
+    if prefer_chunked and T > DECODE_CHUNK and T % DECODE_CHUNK == 0:
+        return _decode_attention_chunked(q, k_cache, v_cache, cache_index,
+                                         window=window, chunk=DECODE_CHUNK)
+    s = _gqa_scores(q, k_cache)  # (B,Hk,G,1,T)
+    kpos = jnp.arange(T)[None, :]  # (1,T)
+    ok = kpos < cache_index[:, None]
+    if window:
+        ok &= kpos >= cache_index[:, None] - window
+    s = jnp.where(ok[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return _gqa_out(p, v_cache, q.dtype)
+
+
+def _decode_attention_chunked(q, k_cache, v_cache, cache_index, *,
+                              window: int, chunk: int):
+    """Online-softmax over KV chunks: never materializes the (B, H, T)
+    score row — the pure-JAX shape of the flash-decode kernel, used by the
+    32k/500k serve steps so decode temp memory is O(chunk)."""
+    B, _, Hq, D = q.shape
+    T = k_cache.shape[1]
+    Hk = k_cache.shape[2]
+    G = Hq // Hk
+    n = T // chunk
+    qg = q.reshape(B, Hk, G, D)
+    kc = k_cache.reshape(B, n, chunk, Hk, D)
+    vc = v_cache.reshape(B, n, chunk, Hk, D)
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+
+    def kv_step(carry, inp):
+        m, l, o = carry
+        kj, vj, j = inp  # kj/vj (B, chunk, Hk, D)
+        s = jnp.einsum("bhgd,bkhd->bhgk", qg, kj,
+                       preferred_element_type=jnp.float32) * scale
+        kpos = j * chunk + jnp.arange(chunk)[None, :]
+        ok = kpos < cache_index[:, None]
+        if window:
+            ok &= kpos >= cache_index[:, None] - window
+        s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bhgk,bkhd->bhgd", p.astype(vj.dtype), vj,
+                        preferred_element_type=jnp.float32)
+        o_new = o * alpha[..., None] + pv
+        return (m_new, l_new, o_new), ()
+
+    m0 = jnp.full((B, Hk, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hk, G), jnp.float32)
+    o0 = jnp.zeros((B, Hk, G, D), jnp.float32)
+    (m, l, o), _ = jax.lax.scan(
+        kv_step, (m0, l0, o0),
+        (kc.swapaxes(0, 1), vc.swapaxes(0, 1), jnp.arange(n)))
+    o = o / jnp.maximum(l[..., None], 1e-30)
+    return o.reshape(B, 1, Hq, D).astype(q.dtype)

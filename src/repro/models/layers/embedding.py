@@ -1,0 +1,26 @@
+"""Token embedding and output head."""
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.common import dense_init, shard_act
+
+
+def init_embedding(key, vocab: int, d: int, dtype, tie: bool):
+    k1, k2 = jax.random.split(key)
+    p = {"table": dense_init(k1, (vocab, d), dtype, scale=1.0)}
+    if not tie:
+        p["unembed"] = dense_init(k2, (d, vocab), dtype)
+    return p
+
+
+def embed(params, tokens, dtype):
+    return params["table"].astype(dtype)[tokens]
+
+
+def unembed(params, x):
+    if "unembed" in params:
+        w = params["unembed"]
+    else:
+        w = params["table"].T
+    logits = jnp.einsum("bsd,dv->bsv", x, w, preferred_element_type=jnp.float32)
+    return shard_act(logits, "batch", "seq", "vocab")

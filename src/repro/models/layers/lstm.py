@@ -1,0 +1,89 @@
+"""The paper's LSTM: cell math + stack init.
+
+Gate layout follows the paper's Fig. 2: order (i, f, g, o) stacked along the
+4H axis so one GEMM produces all four gate pre-activations ("Intergate"
+dispatch in SHARP terms).  Execution *order* (Sequential / Batch / Intergate /
+Unfolded) is the business of ``repro.core.schedules`` — the math here is the
+single source of truth those schedules must reproduce bit-for-bit.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.common import dense_init
+
+
+def init_lstm_layer(key, x_dim: int, hidden: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "W": dense_init(k1, (x_dim, 4 * hidden), dtype),   # input half
+        "U": dense_init(k2, (hidden, 4 * hidden), dtype),  # recurrent half
+        "b": jnp.zeros((4 * hidden,), dtype),
+    }
+
+
+def init_lstm_stack(key, cfg, dtype):
+    layers = []
+    x_dim = cfg.lstm_input
+    for i in range(cfg.n_layers):
+        key, sub = jax.random.split(key)
+        if cfg.bidirectional:
+            kf, kb = jax.random.split(sub)
+            layers.append({
+                "fwd": init_lstm_layer(kf, x_dim, cfg.lstm_hidden, dtype),
+                "bwd": init_lstm_layer(kb, x_dim, cfg.lstm_hidden, dtype),
+            })
+            x_dim = 2 * cfg.lstm_hidden
+        else:
+            layers.append(init_lstm_layer(sub, x_dim, cfg.lstm_hidden, dtype))
+            x_dim = cfg.lstm_hidden
+    return {"layers": layers}
+
+
+def split_gates(g):
+    """(..., 4H) -> i, f, g, o each (..., H)."""
+    H = g.shape[-1] // 4
+    return g[..., :H], g[..., H:2 * H], g[..., 2 * H:3 * H], g[..., 3 * H:]
+
+
+def cell_update(gates, c_prev):
+    """Pointwise tail of the LSTM cell (SHARP's A-MFU + Cell-Updater stages).
+
+    gates (..., 4H) pre-activation; returns (h, c).  fp32 internally.
+    """
+    gates = gates.astype(jnp.float32)
+    i, f, g, o = split_gates(gates)
+    i = jax.nn.sigmoid(i)
+    f = jax.nn.sigmoid(f)
+    g = jnp.tanh(g)
+    o = jax.nn.sigmoid(o)
+    c = f * c_prev.astype(jnp.float32) + i * g
+    h = o * jnp.tanh(c)
+    return h, c
+
+
+def lstm_step(params, x_t, h_prev, c_prev):
+    """One full step: both MVM halves + pointwise tail.  x_t (B, X)."""
+    gates = (
+        x_t @ params["W"].astype(x_t.dtype)
+        + h_prev.astype(x_t.dtype) @ params["U"].astype(x_t.dtype)
+        + params["b"].astype(x_t.dtype)
+    )
+    h, c = cell_update(gates, c_prev)
+    return h.astype(x_t.dtype), c
+
+
+def reference_unroll(params, xs):
+    """Ground-truth layer evaluation: python loop over time. xs (B, T, X)."""
+    B, T, _ = xs.shape
+    H = params["U"].shape[0]
+    h = jnp.zeros((B, H), xs.dtype)
+    c = jnp.zeros((B, H), jnp.float32)
+    outs = []
+    for t in range(T):
+        h, c = lstm_step(params, xs[:, t], h, c)
+        outs.append(h)
+    return jnp.stack(outs, axis=1)

@@ -1,0 +1,22 @@
+"""Gated (SwiGLU-style) MLP."""
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.common import dense_init, matmul, shard_act
+
+
+def init_mlp(key, d: int, ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d, ff), dtype),
+        "w_up": dense_init(k2, (d, ff), dtype),
+        "w_down": dense_init(k3, (ff, d), dtype),
+    }
+
+
+def apply_mlp(params, x):
+    g = matmul(x, params["w_gate"])
+    u = matmul(x, params["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    h = shard_act(h, "batch", "seq", "ff")
+    return matmul(h, params["w_down"])

@@ -1,0 +1,150 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity-based scatter dispatch.
+
+GShard/Switch-style: tokens pick top-k experts; each expert has a fixed
+capacity C = ceil(T * k * capacity_factor / E); overflowing tokens are
+dropped (their contribution is zero — the residual connection carries them).
+Dispatch/combine use scatter/gather with (expert, slot) index pairs instead
+of the T x E x C one-hot einsum, keeping memory at O(E*C*d) so the 1M-token
+prefill cells stay compileable.
+
+Invariants (property-tested):
+  * combine weights per token sum to <= 1 (== 1 when nothing dropped)
+  * each (expert, slot) holds at most one token
+  * with capacity_factor large enough, output == dense-einsum reference
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.common import dense_init, shard_act
+
+
+def init_moe(key, d: int, ff: int, n_experts: int, dtype, dense_ff: int = 0):
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, n_experts), jnp.float32),
+        "w_gate": dense_init(ks[1], (n_experts, d, ff), dtype),
+        "w_up": dense_init(ks[2], (n_experts, d, ff), dtype),
+        "w_down": dense_init(ks[3], (n_experts, ff, d), dtype),
+    }
+    if dense_ff:
+        from repro.models.layers.mlp import init_mlp
+
+        p["dense"] = init_mlp(ks[4], d, dense_ff, dtype)
+    return p
+
+
+def _capacity(T: int, k: int, E: int, factor: float) -> int:
+    c = math.ceil(T * k * factor / E)
+    return max(8, min(c, T))
+
+
+def route(router_logits, k: int, capacity: int, n_experts: int):
+    """router_logits (T, E) fp32 -> dispatch info.
+
+    Returns (expert_idx, slot_idx, weight, valid), each (T, k).
+    """
+    T = router_logits.shape[0]
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)  # (T, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # slot assignment: position of each (token, choice) within its expert,
+    # ordered token-major (tokens earlier in the batch win capacity).
+    flat_e = top_e.reshape(-1)  # (T*k,)
+    onehot = jax.nn.one_hot(flat_e, n_experts, dtype=jnp.int32)  # (T*k, E)
+    pos = jnp.cumsum(onehot, axis=0) - 1  # position among same-expert picks
+    slot = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]  # (T*k,)
+    valid = slot < capacity
+    return (
+        top_e,
+        slot.reshape(T, k),
+        top_w,
+        valid.reshape(T, k),
+    )
+
+
+def aux_load_balance_loss(router_logits, top_e, n_experts: int):
+    """Switch-style load balance loss (mean over experts of f_e * p_e * E)."""
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    p_mean = probs.mean(axis=0)  # (E,)
+    counts = jnp.zeros((n_experts,), jnp.float32).at[top_e.reshape(-1)].add(1.0)
+    f = counts / jnp.maximum(counts.sum(), 1.0)
+    return n_experts * jnp.sum(f * p_mean)
+
+
+def apply_moe(params, x, *, k: int, capacity_factor: float, deterministic_capacity: int = 0):
+    """x (B, S, d) -> (y (B, S, d), aux_loss scalar fp32)."""
+    B, S, d = x.shape
+    E = params["router"].shape[1]
+    T = B * S
+    xt = x.reshape(T, d)
+    C = deterministic_capacity or _capacity(T, k, E, capacity_factor)
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), params["router"])
+    expert_idx, slot_idx, weight, valid = route(logits, k, C, E)
+    aux = aux_load_balance_loss(logits, expert_idx, E)
+
+    # ---- dispatch: scatter tokens into (E, C, d) buffers --------------
+    flat_e = expert_idx.reshape(-1)
+    flat_s = slot_idx.reshape(-1)
+    flat_v = valid.reshape(-1)
+    flat_s = jnp.where(flat_v, flat_s, 0)  # clamp (contribution masked below)
+    src = jnp.repeat(xt, k, axis=0) * flat_v[:, None].astype(x.dtype)
+    buf = jnp.zeros((E, C, d), x.dtype)
+    buf = buf.at[flat_e, flat_s].add(src, mode="drop")
+    # EP over experts only.  (Sharding C over 'data' was tried and REFUTED:
+    # it misaligns the expert contraction and blew the collective term up
+    # 4x on arctic — see EXPERIMENTS.md §Perf.)
+    buf = shard_act(buf, "experts", None, None)
+
+    # ---- expert computation (E, C, d) x (E, d, f) ---------------------
+    g = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"],
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("ecd,edf->ecf", buf, params["w_up"],
+                   preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    h = shard_act(h, "experts", None, "ff_fsdp")
+    out = jnp.einsum("ecf,efd->ecd", h, params["w_down"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+
+    # ---- combine: gather back and weight ------------------------------
+    gathered = out[flat_e, flat_s]  # (T*k, d)
+    w = (weight.reshape(-1) * valid.reshape(-1)).astype(x.dtype)
+    y = (gathered * w[:, None]).reshape(T, k, d).sum(axis=1)
+    y = y.reshape(B, S, d)
+
+    if "dense" in params:
+        from repro.models.layers.mlp import apply_mlp
+
+        y = y + apply_mlp(params["dense"], x)
+    return y, aux
+
+
+def moe_reference(params, x, *, k: int):
+    """Dense all-experts reference (no capacity drops): every token computes
+    every expert, combined by renormalized top-k weights.  O(T*E*ff)."""
+    B, S, d = x.shape
+    xt = x.reshape(-1, d)
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    E = probs.shape[-1]
+    mask = (jax.nn.one_hot(top_e, E, dtype=jnp.float32) * top_w[..., None]).sum(1)
+    g = jnp.einsum("td,edf->tef", xt, params["w_gate"],
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("td,edf->tef", xt, params["w_up"],
+                   preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u)
+    o = jnp.einsum("tef,efd->ted", h.astype(x.dtype), params["w_down"],
+                   preferred_element_type=jnp.float32)
+    y = (o * mask[..., None]).sum(1).astype(x.dtype).reshape(B, S, d)
+    if "dense" in params:
+        from repro.models.layers.mlp import apply_mlp
+
+        y = y + apply_mlp(params["dense"], x)
+    return y

@@ -1,0 +1,14 @@
+"""RMSNorm (fp32 statistics, cast back to input dtype)."""
+import jax.numpy as jnp
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jnp.reciprocal(jnp.sqrt(var + eps))
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def init_norm(d: int, dtype):
+    return jnp.zeros((d,), dtype)

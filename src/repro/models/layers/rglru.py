@@ -1,0 +1,101 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Recurrence (per channel):
+    r_t = sigmoid(x_t W_a + b_a)              -- recurrence gate
+    i_t = sigmoid(x_t W_x + b_x)              -- input gate
+    log a_t = c * r_t * log sigmoid(Lambda)   -- c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The input-dependent pieces (r, i, gated x, a) have **no recurrent
+dependency** — the Unfolded split hoists them out of the scan as one
+sequence-parallel computation; the scan body keeps only the two fused
+multiply-adds.  This is the paper's across-sequence overlap, verbatim.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.common import chunked_scan, dense_init
+
+C_EXP = 8.0
+
+
+def init_rglru(key, width: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    # Lambda init so a^c spans ~(0.9, 0.999) as in Griffin
+    u = jax.random.uniform(k3, (width,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(u ** (1.0 / C_EXP) / (1 - u ** (1.0 / C_EXP)))
+    return {
+        "w_a": dense_init(k1, (width, width), dtype),
+        "b_a": jnp.zeros((width,), dtype),
+        "w_x": dense_init(k2, (width, width), dtype),
+        "b_x": jnp.zeros((width,), dtype),
+        "Lambda": lam.astype(jnp.float32),
+    }
+
+
+def gate_inputs(params, x):
+    """Sequence-parallel half (hoisted by the Unfolded schedule).
+
+    x (B, T, W) -> (log_a (B,T,W) fp32, gx (B,T,W) fp32)
+    """
+    r = jax.nn.sigmoid((x @ params["w_a"] + params["b_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((x @ params["w_x"] + params["b_x"]).astype(jnp.float32))
+    log_a = C_EXP * r * jax.nn.log_sigmoid(params["Lambda"])
+    gx = i * x.astype(jnp.float32)
+    return log_a, gx
+
+
+def scan_recurrence(log_a, gx, h0):
+    """Serial half: h_t = a_t h_{t-1} + sqrt(1-a_t^2) gx_t.  All fp32."""
+
+    def step(h, inp):
+        la, g = inp
+        a = jnp.exp(la)
+        h = a * h + jnp.sqrt(jnp.maximum(1.0 - a * a, 0.0)) * g
+        return h, h
+
+    hT, hs = chunked_scan(step, h0, (log_a.swapaxes(0, 1), gx.swapaxes(0, 1)))
+    return hT, hs.swapaxes(0, 1)  # (B, T, W)
+
+
+def apply_rglru(params, x, h0=None):
+    """x (B, T, W) -> (y (B, T, W), h_T)."""
+    B, T, W = x.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, W), jnp.float32)
+    log_a, gx = gate_inputs(params, x)
+    hT, hs = scan_recurrence(log_a, gx, h0)
+    return hs.astype(x.dtype), hT
+
+
+def decode_step(params, x_t, h_prev):
+    """x_t (B, W), h_prev (B, W) fp32 -> (y_t, h_t)."""
+    log_a, gx = gate_inputs(params, x_t[:, None, :])
+    a = jnp.exp(log_a[:, 0])
+    h = a * h_prev + jnp.sqrt(jnp.maximum(1.0 - a * a, 0.0)) * gx[:, 0]
+    return h.astype(x_t.dtype), h
+
+
+# ---------------------------------------------------------------------------
+# temporal conv (width-k causal depthwise conv), part of the Griffin block
+# ---------------------------------------------------------------------------
+
+
+def init_conv1d(key, width: int, k: int, dtype):
+    return {"w": dense_init(key, (k, width), dtype, scale=0.5), "b": jnp.zeros((width,), dtype)}
+
+
+def apply_conv1d(params, x, state=None):
+    """Causal depthwise conv.  x (B,T,W); state (B,k-1,W) for decode.
+
+    Returns (y, new_state)."""
+    k = params["w"].shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)  # (B, T+k-1, W)
+    y = sum(xp[:, i:i + x.shape[1]] * params["w"][i] for i in range(k))
+    y = y + params["b"]
+    new_state = xp[:, xp.shape[1] - (k - 1):]
+    return y.astype(x.dtype), new_state

@@ -1,0 +1,52 @@
+"""Rotary position embeddings, including Qwen2-VL style M-RoPE.
+
+M-RoPE splits the head_dim/2 rotary frequency bands into (temporal, height,
+width) sections, each driven by its own position-id stream.  Text-only
+positions degenerate to all three streams equal, which reduces M-RoPE to
+standard RoPE — that equivalence is property-tested.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+def rope_angles(positions, head_dim: int, theta: float):
+    """positions (..., S) -> cos/sin (..., S, head_dim//2) in fp32."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def mrope_angles(positions3, head_dim: int, theta: float, sections: Tuple[int, ...]):
+    """positions3 (3, B, S) -> cos/sin (B, S, head_dim//2).
+
+    Section i of the frequency bands takes its positions from stream i.
+    """
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    # select the position stream per frequency band
+    band_stream = jnp.repeat(
+        jnp.arange(len(sections)), jnp.array(sections), total_repeat_length=half
+    )  # (half,)
+    pos = positions3.astype(jnp.float32)  # (3, B, S)
+    pos_per_band = pos[band_stream]  # (half, B, S)
+    ang = jnp.moveaxis(pos_per_band, 0, -1) * freqs  # (B, S, half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x (B, S, H, D); cos/sin (B, S, D//2) or (S, D//2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:  # (S, half) -> broadcast over batch
+        cos = cos[None]
+        sin = sin[None]
+    cos = cos[:, :, None, :]  # (B, S, 1, half)
+    sin = sin[:, :, None, :]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    return jnp.concatenate([o1.astype(x.dtype), o2.astype(x.dtype)], axis=-1)

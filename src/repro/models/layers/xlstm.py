@@ -1,0 +1,262 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+Both follow the Unfolded decomposition (DESIGN.md §4): every input-side
+projection (q/k/v/z and the gate pre-activations from x) is computed for the
+whole sequence as one GEMM *outside* the scan; the scan body carries only the
+state recurrences — exactly the paper's input/hidden split.  For sLSTM the
+per-head recurrent matmul R h_{t-1} stays inside (it is the true serial MVM,
+the paper's `U·h` half).
+
+Stabilized exponential gating per the xLSTM paper (m_t running max).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.common import chunked_scan, dense_init
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, d: int, n_heads: int, dtype):
+    di = 2 * d
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up_v": dense_init(ks[0], (d, di), dtype),
+        "w_up_g": dense_init(ks[1], (d, di), dtype),
+        "w_q": dense_init(ks[2], (di, di), dtype),
+        "w_k": dense_init(ks[3], (di, di), dtype),
+        "w_v": dense_init(ks[4], (di, di), dtype),
+        "w_i": dense_init(ks[5], (di, n_heads), jnp.float32),  # input gate
+        "w_f": dense_init(ks[6], (di, n_heads), jnp.float32),  # forget gate
+        "b_i": jnp.zeros((n_heads,), jnp.float32),
+        "b_f": jnp.full((n_heads,), 3.0, jnp.float32),  # bias toward remember
+        "w_down": dense_init(ks[7], (di, d), dtype),
+    }
+
+
+def mlstm_inputs(params, x, n_heads: int):
+    """Sequence-parallel half: all projections + gate pre-activations."""
+    B, T, d = x.shape
+    di = params["w_up_v"].shape[1]
+    dh = di // n_heads
+    xv = x @ params["w_up_v"]
+    xg = x @ params["w_up_g"]
+    q = (xv @ params["w_q"]).reshape(B, T, n_heads, dh)
+    k = (xv @ params["w_k"]).reshape(B, T, n_heads, dh) / jnp.sqrt(dh).astype(x.dtype)
+    v = (xv @ params["w_v"]).reshape(B, T, n_heads, dh)
+    i_pre = xv.astype(jnp.float32) @ params["w_i"] + params["b_i"]  # (B,T,H)
+    f_pre = xv.astype(jnp.float32) @ params["w_f"] + params["b_f"]
+    return q, k, v, i_pre, f_pre, xg
+
+
+def mlstm_state_init(B: int, n_heads: int, dh: int):
+    return {
+        "C": jnp.zeros((B, n_heads, dh, dh), jnp.float32),
+        "n": jnp.zeros((B, n_heads, dh), jnp.float32),
+        "m": jnp.full((B, n_heads), -jnp.inf, jnp.float32),
+    }
+
+
+def mlstm_cell(state, q_t, k_t, v_t, i_pre, f_pre):
+    """One recurrent step.  q/k/v_t (B,H,dh); i/f_pre (B,H)."""
+    C, n, m = state["C"], state["n"], state["m"]
+    log_f = jax.nn.log_sigmoid(f_pre)
+    m_new = jax.lax.stop_gradient(jnp.maximum(log_f + m, i_pre))
+    f_sc = jnp.exp(log_f + m - m_new)[..., None, None]
+    i_sc = jnp.exp(i_pre - m_new)[..., None]
+    kf = k_t.astype(jnp.float32)
+    vf = v_t.astype(jnp.float32)
+    C = f_sc * C + (i_sc[..., None] * kf[..., :, None]) * vf[..., None, :]
+    n = f_sc[..., 0] * n + i_sc * kf
+    qf = q_t.astype(jnp.float32)
+    num = jnp.einsum("bhkv,bhk->bhv", C, qf)
+    den = jnp.abs(jnp.einsum("bhk,bhk->bh", n, qf))
+    h = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+    return {"C": C, "n": n, "m": m_new}, h
+
+
+def apply_mlstm(params, x, n_heads: int, state=None):
+    """x (B,T,d) -> (y (B,T,d), state)."""
+    B, T, d = x.shape
+    di = params["w_up_v"].shape[1]
+    dh = di // n_heads
+    q, k, v, i_pre, f_pre, xg = mlstm_inputs(params, x, n_heads)
+    if state is None:
+        state = mlstm_state_init(B, n_heads, dh)
+
+    def step(st, inp):
+        qt, kt, vt, it, ft = inp
+        st, h = mlstm_cell(st, qt, kt, vt, it, ft)
+        return st, h
+
+    xs = (q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+          i_pre.swapaxes(0, 1), f_pre.swapaxes(0, 1))
+    state, hs = chunked_scan(step, state, xs)
+    hs = hs.swapaxes(0, 1).reshape(B, T, di).astype(x.dtype)  # (B,T,di)
+    y = (hs * jax.nn.silu(xg.astype(jnp.float32)).astype(x.dtype)) @ params["w_down"]
+    return y, state
+
+
+def apply_mlstm_chunked(params, x, n_heads: int, state=None, chunk: int = 128):
+    """Exact chunkwise-parallel mLSTM (the Unfolded split at chunk level).
+
+    The recurrent form touches the (B,H,dk,dv) matrix memory every step —
+    O(T * state) HBM traffic that dominates training (EXPERIMENTS.md §Perf,
+    xlstm hillclimb).  Chunkwise, the state is read/written once per chunk
+    and the intra-chunk part becomes decay-masked attention (MXU matmuls):
+
+      F_t   = cumsum(log f) within the chunk;  a_s = i_s - F_s
+      M_t   = max(m0, cummax_s<=t a_s);        m_t = F_t + M_t
+      D_ts  = exp(a_s - M_t) * [s <= t]
+      num_t = e^{m0 - M_t} (q_t C0) + sum_s D_ts (q_t k_s) v_s
+      n_t   = e^{m0 - M_t} n0      + sum_s D_ts k_s
+      h_t   = num_t / max(|n_t q_t|, e^{-m_t})
+
+    Identical numerics to ``apply_mlstm`` (property-tested): the same
+    stabilizer recursion m_t = max(log f_t + m_{t-1}, i_t) unrolls to
+    F_t + M_t.  Falls back to the recurrent scan when T % chunk != 0.
+    """
+    B, T, d = x.shape
+    di = params["w_up_v"].shape[1]
+    dh = di // n_heads
+    if T % chunk or T <= chunk:
+        return apply_mlstm(params, x, n_heads, state)
+    q, k, v, i_pre, f_pre, xg = mlstm_inputs(params, x, n_heads)
+    if state is None:
+        state = mlstm_state_init(B, n_heads, dh)
+    n_chunks = T // chunk
+
+    def to_chunks(a):  # (B,T,H,...) -> (n, B, H, L, ...)
+        a = a.reshape((B, n_chunks, chunk) + a.shape[2:])
+        a = jnp.moveaxis(a, 3, 1)  # (B, H, n, L, ...) if heads present
+        return a
+
+    qc = jnp.moveaxis(q.reshape(B, n_chunks, chunk, n_heads, dh), 3, 1)
+    kc = jnp.moveaxis(k.reshape(B, n_chunks, chunk, n_heads, dh), 3, 1)
+    vc = jnp.moveaxis(v.reshape(B, n_chunks, chunk, n_heads, dh), 3, 1)
+    ic = jnp.moveaxis(i_pre.reshape(B, n_chunks, chunk, n_heads), 3, 1)
+    fc = jnp.moveaxis(f_pre.reshape(B, n_chunks, chunk, n_heads), 3, 1)
+    # all now (B, H, n, L, ...) -> scan over n
+    xs = tuple(jnp.moveaxis(a, 2, 0) for a in (qc, kc, vc, ic, fc))
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32))
+
+    def chunk_step(st, inp):
+        qt, kt, vt, it, ft = inp  # (B,H,L,dh) / (B,H,L)
+        C0, n0, m0 = st["C"], st["n"], st["m"]
+        qf = qt.astype(jnp.float32)
+        kf = kt.astype(jnp.float32)
+        vf = vt.astype(jnp.float32)
+        log_f = jax.nn.log_sigmoid(ft)                      # (B,H,L)
+        F = jnp.cumsum(log_f, axis=-1)
+        a = it - F                                          # (B,H,L)
+        M = jax.lax.stop_gradient(
+            jnp.maximum(m0[..., None], jax.lax.cummax(a, axis=2)))  # (B,H,L)
+        m_t = F + M
+        inter = jnp.exp(m0[..., None] - M)                  # (B,H,L)
+        D = jnp.exp(a[:, :, None, :] - M[..., None]) * tri  # (B,H,L,L) [t,s]
+        s_qk = jnp.einsum("bhtd,bhsd->bhts", qf, kf)
+        num = (inter[..., None] * jnp.einsum("bhtk,bhkv->bhtv", qf, C0)
+               + jnp.einsum("bhts,bhsv->bhtv", D * s_qk, vf))
+        n_t = (inter[..., None] * n0[:, :, None, :]
+               + jnp.einsum("bhts,bhsk->bhtk", D, kf))
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhtk,bhtk->bht", n_t, qf)),
+                          jnp.exp(-m_t))
+        h = num / den[..., None]                            # (B,H,L,dv)
+        # chunk-end state
+        w_end = jnp.exp(a - M[..., -1:])                    # (B,H,L)
+        C1 = (inter[..., -1, None, None] * C0
+              + jnp.einsum("bhs,bhsk,bhsv->bhkv", w_end, kf, vf))
+        n1 = (inter[..., -1, None] * n0
+              + jnp.einsum("bhs,bhsk->bhk", w_end, kf))
+        m1 = m_t[..., -1]
+        return {"C": C1, "n": n1, "m": m1}, h
+
+    state, hs = jax.lax.scan(jax.checkpoint(
+        chunk_step, policy=jax.checkpoint_policies.nothing_saveable),
+        state, xs)
+    # hs (n, B, H, L, dv) -> (B, T, di)
+    hs = jnp.moveaxis(hs, 0, 2).reshape(B, n_heads, T, dh)
+    hs = jnp.moveaxis(hs, 1, 2).reshape(B, T, di).astype(x.dtype)
+    y = (hs * jax.nn.silu(xg.astype(jnp.float32)).astype(x.dtype)) @ params["w_down"]
+    return y, state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, d: int, n_heads: int, dtype):
+    dh = d // n_heads
+    ks = jax.random.split(key, 3)
+    return {
+        "W": dense_init(ks[0], (d, 4 * d), dtype),       # input half (z,i,f,o)
+        "R": dense_init(ks[1], (n_heads, dh, 4 * dh), dtype),  # recurrent half
+        "b": jnp.zeros((4 * d,), jnp.float32),
+        "w_out": dense_init(ks[2], (d, d), dtype),
+    }
+
+
+def slstm_state_init(B: int, d: int):
+    return {
+        "h": jnp.zeros((B, d), jnp.float32),
+        "c": jnp.zeros((B, d), jnp.float32),
+        "n": jnp.ones((B, d), jnp.float32),
+        "m": jnp.zeros((B, d), jnp.float32),
+    }
+
+
+def slstm_cell(state, x_pre, R, n_heads: int):
+    """x_pre (B, 4d) = x_t W + b (input half, precomputed).  R (H,dh,4dh)."""
+    from repro.models.layers.common import shard_act
+
+    B = x_pre.shape[0]
+    d = x_pre.shape[1] // 4
+    dh = d // n_heads
+    h_prev = state["h"].reshape(B, n_heads, dh)
+    rec = jnp.einsum("bhd,hdk->bhk", h_prev.astype(R.dtype), R,
+                     preferred_element_type=jnp.float32)  # (B,H,4dh)
+    pre = x_pre.astype(jnp.float32).reshape(B, n_heads, 4 * dh) + rec
+    # gate axis sharded over 'model': spreads the serial R/dR traffic across
+    # the otherwise-idle tensor axis (EXPERIMENTS.md §Perf, xlstm iter 2)
+    pre = shard_act(pre, "batch", None, "ff")
+    # gate layout per head-block: (z, i, f, o), each dh wide
+    pre4 = pre.reshape(B, n_heads, 4, dh)
+    z = jnp.tanh(pre4[:, :, 0]).reshape(B, d)
+    i_pre = pre4[:, :, 1].reshape(B, d)
+    f_pre = pre4[:, :, 2].reshape(B, d)
+    o = jax.nn.sigmoid(pre4[:, :, 3]).reshape(B, d)
+    log_f = jax.nn.log_sigmoid(f_pre)
+    # h is invariant to the stabilizer (c and n carry the same exp(-m)
+    # factor, cancelling in c/n) -> keep it out of the autodiff graph
+    m_new = jax.lax.stop_gradient(jnp.maximum(log_f + state["m"], i_pre))
+    i_sc = jnp.exp(i_pre - m_new)
+    f_sc = jnp.exp(log_f + state["m"] - m_new)
+    c = f_sc * state["c"] + i_sc * z
+    n = f_sc * state["n"] + i_sc
+    h = o * (c / jnp.maximum(n, 1e-6))
+    return {"h": h, "c": c, "n": n, "m": m_new}
+
+
+def apply_slstm(params, x, n_heads: int, state=None):
+    """x (B,T,d) -> (y (B,T,d), state)."""
+    B, T, d = x.shape
+    if state is None:
+        state = slstm_state_init(B, d)
+    # Unfolded: input half hoisted out of the scan (one GEMM for all t)
+    x_pre = x @ params["W"] + params["b"].astype(x.dtype)  # (B,T,4d)
+
+    def step(st, xp):
+        st = slstm_cell(st, xp, params["R"], n_heads)
+        return st, st["h"]
+
+    state, hs = chunked_scan(step, state, x_pre.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).astype(x.dtype) @ params["w_out"]
+    return y, state

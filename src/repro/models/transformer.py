@@ -1,0 +1,451 @@
+"""Generic decoder assembly for every assigned architecture.
+
+One functional model covering: dense GQA transformers (opt. SWA), MoE
+(+ arctic dense residual), audio/vlm backbones over precomputed embeddings
+(frontend stubs per the assignment), xLSTM (mLSTM/sLSTM), and
+RecurrentGemma-style hybrids (RG-LRU + local attention, 1:2 pattern).
+
+Homogeneous stacks run under ``lax.scan`` over stacked layer params (compile
+time stays flat in depth — deepseek's 95 layers trace once) with a remat
+policy; heterogeneous stacks (ssm/hybrid) unroll a python loop.
+
+Caches:
+  attn   -> {"k","v"} (B, T_cache, KV) flattened kv (always divisible by the
+            model axis), ring-buffered at ``window`` when SWA bounds it
+  rglru  -> {"state" (B,W) fp32, "conv" (B,k-1,W)}
+  mlstm  -> {"C","n","m"}; slstm -> {"h","c","n","m"}
+plus a global {"idx": (B,) int32} cursor.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import attention as attn_lib
+from repro.models.layers import rglru as rglru_lib
+from repro.models.layers import xlstm as xlstm_lib
+from repro.models.layers.common import dense_init, param_dtype, shard_act
+from repro.models.layers.embedding import embed, init_embedding, unembed
+from repro.models.layers.mlp import apply_mlp, init_mlp
+from repro.models.layers.moe import apply_moe, init_moe
+from repro.models.layers.norm import init_norm, rms_norm
+from repro.models.layers.rope import apply_rope, mrope_angles, rope_angles
+
+NAIVE_ATTN_MAX_SEQ = 1024  # above this, blockwise/local paths engage
+
+
+# ===========================================================================
+# init
+# ===========================================================================
+
+
+def _init_attn(cfg: ModelConfig, key, dtype):
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    return {
+        "w_q": dense_init(ks[0], (d, cfg.q_dim), dtype),
+        "w_kv": dense_init(ks[1], (d, 2 * cfg.kv_dim), dtype),
+        "w_o": dense_init(ks[2], (cfg.q_dim, d), dtype),
+    }
+
+
+def _init_layer(cfg: ModelConfig, key, kind: str, dtype):
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p: Dict[str, Any] = {"norm1": init_norm(d, dtype)}
+    if kind == "attn":
+        p["attn"] = _init_attn(cfg, ks[0], dtype)
+    elif kind == "rglru":
+        w = cfg.rglru_width
+        kk = jax.random.split(ks[0], 5)
+        p["rec"] = {
+            "w_in": dense_init(kk[0], (d, w), dtype),
+            "w_gate": dense_init(kk[1], (d, w), dtype),
+            "conv": rglru_lib.init_conv1d(kk[2], w, cfg.conv1d_width, dtype),
+            "rglru": rglru_lib.init_rglru(kk[3], w, dtype),
+            "w_out": dense_init(kk[4], (w, d), dtype),
+        }
+    elif kind == "mlstm":
+        p["mlstm"] = xlstm_lib.init_mlstm(ks[0], d, cfg.n_heads, dtype)
+    elif kind == "slstm":
+        p["slstm"] = xlstm_lib.init_slstm(ks[0], d, cfg.n_heads, dtype)
+    else:
+        raise ValueError(kind)
+    if kind in ("attn", "rglru") and cfg.d_ff:
+        p["norm2"] = init_norm(d, dtype)
+        if cfg.n_experts:
+            p["moe"] = init_moe(ks[1], d, cfg.d_ff, cfg.n_experts, dtype,
+                                dense_ff=cfg.moe_dense_ff)
+        else:
+            p["mlp"] = init_mlp(ks[1], d, cfg.d_ff, dtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    dtype = param_dtype(cfg)
+    kinds = cfg.layer_kinds()
+    key, k_emb, k_out = jax.random.split(key, 3)
+    params: Dict[str, Any] = {"final_norm": init_norm(cfg.d_model, dtype)}
+    if cfg.embed_stub:
+        params["head"] = {"unembed": dense_init(k_out, (cfg.d_model, cfg.vocab_size), dtype)}
+    else:
+        params["head"] = init_embedding(k_emb, cfg.vocab_size, cfg.d_model, dtype,
+                                        cfg.tie_embeddings)
+    layer_keys = jax.random.split(key, cfg.n_layers)
+    layers = [_init_layer(cfg, layer_keys[i], kinds[i], dtype)
+              for i in range(cfg.n_layers)]
+    if cfg.scan_layers:
+        params["layers"] = jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+    else:
+        params["layers"] = layers
+    return params
+
+
+# ===========================================================================
+# caches
+# ===========================================================================
+
+
+def cache_len(cfg: ModelConfig, seq_len: int) -> int:
+    """SWA bounds the live KV working set to a ring of ``window`` slots."""
+    if cfg.window and cfg.window < seq_len:
+        return cfg.window
+    return seq_len
+
+
+def _init_layer_cache(cfg: ModelConfig, kind: str, batch: int, T: int, dtype):
+    if kind == "attn":
+        kv = cfg.kv_dim
+        return {
+            "k": jnp.zeros((batch, T, kv), dtype),
+            "v": jnp.zeros((batch, T, kv), dtype),
+        }
+    if kind == "rglru":
+        w = cfg.rglru_width
+        return {
+            "state": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv1d_width - 1, w), dtype),
+        }
+    if kind == "mlstm":
+        dh = 2 * cfg.d_model // cfg.n_heads
+        return xlstm_lib.mlstm_state_init(batch, cfg.n_heads, dh)
+    if kind == "slstm":
+        return xlstm_lib.slstm_state_init(batch, cfg.d_model)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> Dict[str, Any]:
+    dtype = param_dtype(cfg)
+    T = cache_len(cfg, seq_len)
+    kinds = cfg.layer_kinds()
+    per_layer = [_init_layer_cache(cfg, k, batch, T, dtype) for k in kinds]
+    if cfg.scan_layers:
+        layers = jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer)
+    else:
+        layers = per_layer
+    return {"layers": layers, "idx": jnp.zeros((batch,), jnp.int32)}
+
+
+# ===========================================================================
+# blocks
+# ===========================================================================
+
+
+def _rope_for(cfg: ModelConfig, positions):
+    if cfg.mrope_sections:
+        if positions.ndim == 2:  # (B,S) text-only -> all three streams equal
+            positions = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+        return mrope_angles(positions, cfg.head_dim, cfg.rope_theta,
+                            cfg.mrope_sections)
+    return rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+
+
+def _attn_block(cfg: ModelConfig, p, x, rope_cs, cache, idx, mode: str):
+    """x (B,S,d).  Returns (out, new_cache)."""
+    B, S, d = x.shape
+    Hq, Hk, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["w_q"]).reshape(B, S, Hq, D)
+    kv = x @ p["w_kv"]
+    k, v = jnp.split(kv, 2, axis=-1)
+    cos, sin = rope_cs
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k.reshape(B, S, Hk, D), cos, sin).reshape(B, S, Hk * D)
+
+    new_cache = cache
+    if mode == "decode":
+        from repro.models.layers.common import current_mesh
+
+        T = cache["k"].shape[1]
+        slot = idx % T if (cfg.window and cfg.window <= T) else jnp.minimum(idx, T - 1)
+        k_cache = cache["k"].at[jnp.arange(B), slot].set(k[:, 0])
+        v_cache = cache["v"].at[jnp.arange(B), slot].set(v[:, 0])
+        k_cache = shard_act(k_cache, "batch", "cache_seq", None)
+        v_cache = shard_act(v_cache, "batch", "cache_seq", None)
+        new_cache = {"k": k_cache, "v": v_cache}
+        valid = jnp.minimum(idx + 1, T)  # number of live slots
+        # distributed: direct path (scores sharded over the T axis, softmax
+        # stats psum'd); single host: chunked online-softmax for memory
+        o = attn_lib.decode_attention(
+            q, k_cache.reshape(B, T, Hk, D), v_cache.reshape(B, T, Hk, D),
+            valid, window=0 if (cfg.window and cfg.window <= T) else cfg.window,
+            prefer_chunked=current_mesh() is None)
+    else:
+        k4 = k.reshape(B, S, Hk, D)
+        v4 = v.reshape(B, S, Hk, D)
+        # distributed prefill/train: GQA kv-head counts (2-8) don't divide
+        # the 16-way model axis, so the (Hk, G) grouping re-gathers k/v
+        # inside every blockwise chunk.  Repeating kv to Hq heads (when Hq
+        # divides the axis) makes every attention einsum head-local; the
+        # one-off repeat reshard replaces ~4 TB/chip of per-chunk gathers
+        # (EXPERIMENTS.md §Perf).
+        from repro.models.layers.common import current_mesh
+
+        mesh = current_mesh()
+        if mesh is not None and Hk < Hq:
+            msize = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+            if Hk % msize != 0:
+                # smallest duplication r with (Hk*r) % msize == 0 and
+                # Hq % (Hk*r) == 0 (grouping must stay valid)
+                rep = next((r for r in range(2, Hq // Hk + 1)
+                            if (Hk * r) % msize == 0 and Hq % (Hk * r) == 0),
+                           None)
+                if rep is not None:
+                    k4 = jnp.repeat(k4, rep, axis=2)
+                    v4 = jnp.repeat(v4, rep, axis=2)
+                    k4 = shard_act(k4, "batch", "seq", "heads", None)
+                    v4 = shard_act(v4, "batch", "seq", "heads", None)
+        if cfg.window and S > cfg.window:
+            o = attn_lib.local_attention(q, k4, v4, window=cfg.window)
+        elif S > NAIVE_ATTN_MAX_SEQ:
+            o = attn_lib.blockwise_attention(q, k4, v4)
+        else:
+            o = attn_lib.naive_attention(q, k4, v4, window=cfg.window)
+        if mode == "prefill":
+            T = cache["k"].shape[1]
+            if T >= S:
+                pad = ((0, 0), (0, T - S), (0, 0))
+                new_cache = {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad)}
+            else:  # ring: keep the last T positions at slot = pos % T
+                shift = (S - T) % T
+                new_cache = {"k": jnp.roll(k[:, S - T:], shift, axis=1),
+                             "v": jnp.roll(v[:, S - T:], shift, axis=1)}
+    o = shard_act(o.reshape(B, S, Hq * D), "batch", "seq", "qdim")
+    return o @ p["w_o"], new_cache
+
+
+def _rglru_block(cfg: ModelConfig, p, x, cache, mode: str):
+    B, S, d = x.shape
+    r = p["rec"]
+    gate = jax.nn.gelu((x @ r["w_gate"]).astype(jnp.float32)).astype(x.dtype)
+    h = x @ r["w_in"]
+    h = shard_act(h, "batch", "seq", "state")
+    conv_state = cache["conv"] if cache is not None else None
+    h, new_conv = rglru_lib.apply_conv1d(r["conv"], h, conv_state)
+    h0 = cache["state"] if cache is not None else None
+    if mode == "decode":
+        y, new_state = rglru_lib.decode_step(r["rglru"], h[:, 0], h0)
+        y = y[:, None, :]
+    else:
+        y, new_state = rglru_lib.apply_rglru(r["rglru"], h, h0)
+    y = y * gate
+    out = y @ r["w_out"]
+    new_cache = None
+    if cache is not None:
+        new_cache = {"state": new_state, "conv": new_conv}
+    return out, new_cache
+
+
+def _layer_apply(cfg: ModelConfig, kind: str, p, x, rope_cs, cache, idx, mode: str):
+    """Pre-norm residual block.  Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    if kind == "attn":
+        o, new_cache = _attn_block(cfg, p["attn"], h, rope_cs, cache, idx, mode)
+    elif kind == "rglru":
+        o, new_cache = _rglru_block(cfg, p, h, cache, mode)
+    elif kind == "mlstm":
+        if mode == "decode":
+            o, state = xlstm_lib.apply_mlstm(p["mlstm"], h, cfg.n_heads, cache)
+        else:  # chunkwise-parallel: O(T/L) state traffic (see §Perf)
+            o, state = xlstm_lib.apply_mlstm_chunked(p["mlstm"], h,
+                                                     cfg.n_heads, cache)
+        new_cache = state if cache is not None else None
+    elif kind == "slstm":
+        o, state = xlstm_lib.apply_slstm(p["slstm"], h, cfg.n_heads, cache)
+        new_cache = state if cache is not None else None
+    else:
+        raise ValueError(kind)
+    x = x + o
+    if "norm2" in p:
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        if "moe" in p:
+            cap = 0
+            if mode == "decode":
+                # decode: near-drop-free capacity without computing every
+                # expert over every token slot (capacity=T wastes E/k x the
+                # expert FLOPs — see EXPERIMENTS.md §Perf)
+                import math as _math
+
+                T = h.shape[0] * h.shape[1]
+                cf = max(4.0, cfg.capacity_factor)
+                cap = min(T, max(8, _math.ceil(
+                    T * cfg.experts_per_token * cf / cfg.n_experts)))
+            o, aux = apply_moe(p["moe"], h, k=cfg.experts_per_token,
+                               capacity_factor=cfg.capacity_factor,
+                               deterministic_capacity=cap)
+        else:
+            o = apply_mlp(p["mlp"], h)
+        x = x + o
+    x = shard_act(x, "batch", "seq", "embed")
+    return x, new_cache, aux
+
+
+def _remat_wrap(cfg: ModelConfig, fn):
+    if cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots
+    else:
+        policy = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=policy)
+
+
+# ===========================================================================
+# forward
+# ===========================================================================
+
+
+def forward(cfg: ModelConfig, params, *, tokens=None, embeds=None,
+            positions=None, cache=None, mode: str = "train"):
+    """Returns (logits, new_cache, aux_loss).
+
+    train/prefill: tokens (B,S) or embeds (B,S,d).
+    decode: tokens (B,1) / embeds (B,1,d) + cache (required).
+    """
+    dtype = param_dtype(cfg)
+    if embeds is None:
+        x = embed(params["head"], tokens, dtype)
+    else:
+        x = embeds.astype(dtype)
+    B, S = x.shape[:2]
+    x = shard_act(x, "batch", "seq", "embed")
+
+    idx = cache["idx"] if cache is not None else None
+    if positions is None:
+        if mode == "decode":
+            positions = idx[:, None]  # (B,1)
+        else:
+            positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    rope_cs = _rope_for(cfg, positions)
+
+    kinds = cfg.layer_kinds()
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cfg.scan_layers:
+        kind = kinds[0]  # homogeneous by construction
+        g = cfg.remat_group if (cache is None and cfg.remat_group > 1
+                                and cfg.n_layers % cfg.remat_group == 0) else 1
+
+        def body(carry, inp):
+            x, aux = carry
+            if cache is not None:
+                p_l, cache_l = inp
+            else:
+                p_l, cache_l = inp, None
+            if g == 1:
+                x, new_cache_l, aux_l = _layer_apply(cfg, kind, p_l, x, rope_cs,
+                                                     cache_l, idx, mode)
+                aux = aux + aux_l
+            else:
+                # grouped remat: k layers per checkpoint unit, so only one
+                # residual per GROUP is stored for the backward pass
+                new_cache_l = None
+                for i in range(g):
+                    p_i = jax.tree.map(lambda a: a[i], p_l)
+                    x, _, aux_l = _layer_apply(cfg, kind, p_i, x, rope_cs,
+                                               None, idx, mode)
+                    aux = aux + aux_l
+            if new_cache_l is None:
+                new_cache_l = 0.0  # dummy scan output
+            return (x, aux), new_cache_l
+
+        body = _remat_wrap(cfg, body)
+        layer_params = params["layers"]
+        if g > 1:
+            layer_params = jax.tree.map(
+                lambda a: a.reshape((cfg.n_layers // g, g) + a.shape[1:]),
+                layer_params)
+        xs = (layer_params, cache["layers"]) if cache is not None else layer_params
+        (x, aux_total), new_layer_caches = jax.lax.scan(body, (x, aux_total), xs)
+    else:
+        new_layer_caches = []
+        for i, kind in enumerate(kinds):
+            p_l = params["layers"][i]
+            cache_l = cache["layers"][i] if cache is not None else None
+
+            def run(p_l, x, cache_l, kind=kind):
+                return _layer_apply(cfg, kind, p_l, x, rope_cs, cache_l, idx, mode)
+
+            run_m = _remat_wrap(cfg, run)
+            x, new_cache_l, aux_l = run_m(p_l, x, cache_l)
+            aux_total = aux_total + aux_l
+            new_layer_caches.append(new_cache_l)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params["head"], x)
+
+    new_cache = None
+    if cache is not None:
+        step = 1 if mode == "decode" else S
+        new_cache = {"layers": new_layer_caches, "idx": idx + step}
+    return logits, new_cache, aux_total
+
+
+# ===========================================================================
+# losses / step functions (model-level; the launcher wraps these in pjit)
+# ===========================================================================
+
+
+def loss_fn(cfg: ModelConfig, params, batch) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """Next-token CE.  batch: {tokens|embeds, labels?}."""
+    tokens = batch.get("tokens")
+    embeds = batch.get("embeds")
+    positions = batch.get("positions")
+    logits, _, aux = forward(cfg, params, tokens=tokens, embeds=embeds,
+                             positions=positions, mode="train")
+    if "labels" in batch:
+        labels = batch["labels"]
+        tgt_logits = logits
+    else:
+        labels = tokens[:, 1:]
+        tgt_logits = logits[:, :-1]
+    logp = jax.nn.log_softmax(tgt_logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    loss = nll.mean()
+    total = loss + 0.01 * aux
+    return total, {"loss": loss, "aux_loss": aux}
+
+
+def prefill(cfg: ModelConfig, params, batch, seq_len: int):
+    """Full-sequence forward that also builds the cache."""
+    tokens = batch.get("tokens")
+    embeds = batch.get("embeds")
+    B = (tokens if tokens is not None else embeds).shape[0]
+    cache = init_cache(cfg, B, seq_len)
+    logits, new_cache, _ = forward(cfg, params, tokens=tokens, embeds=embeds,
+                                   positions=batch.get("positions"),
+                                   cache=cache, mode="prefill")
+    return logits, new_cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, batch):
+    """One token for every sequence in the batch."""
+    logits, new_cache, _ = forward(cfg, params, tokens=batch.get("tokens"),
+                                   embeds=batch.get("embeds"),
+                                   positions=batch.get("positions"),
+                                   cache=cache, mode="decode")
+    return logits, new_cache

@@ -1,0 +1,4 @@
+from repro.optim.compression import CompressionConfig, compress, init_error_state  # noqa: F401
+from repro.optim.optimizer import (  # noqa: F401
+    AdamWConfig, apply_updates, clip_by_global_norm, global_norm, init_state, lr_at,
+)

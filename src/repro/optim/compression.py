@@ -1,0 +1,79 @@
+"""Gradient compression for the slow cross-pod axis, with error feedback.
+
+Two schemes:
+  * int8: per-tensor absmax scaling; the cross-pod all-reduce then moves 4x
+    fewer bytes (the int8 payload is what a deployment ships over DCN).
+  * topk: keep the largest-|g| fraction per tensor, zero the rest.
+
+Both carry an error-feedback residual e_t (Karimireddy et al., 2019):
+    c_t = C(g_t + e_{t-1});  e_t = (g_t + e_{t-1}) - c_t
+which restores convergence despite the lossy operator — property-tested on
+a quadratic in tests/test_optim.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    scheme: str = "none"  # none | int8 | topk
+    topk_frac: float = 0.01
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _int8_roundtrip(g):
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q.astype(jnp.float32) * scale
+
+
+def _topk_roundtrip(g, frac: float):
+    flat = g.reshape(-1)
+    k = max(1, int(flat.shape[0] * frac))
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    kept = jnp.where(jnp.abs(flat) >= thresh, flat, 0.0)
+    return kept.reshape(g.shape)
+
+
+def compress(cfg: CompressionConfig, grads, err_state):
+    """Lossy-compress grads (fp32) with error feedback.
+
+    Returns (decompressed_grads, new_err_state).  The decompressed value is
+    exactly what every pod reconstructs after the compressed all-reduce.
+    """
+    if cfg.scheme == "none":
+        return grads, err_state
+
+    def one(g, e):
+        x = g.astype(jnp.float32) + e
+        if cfg.scheme == "int8":
+            c = _int8_roundtrip(x)
+        elif cfg.scheme == "topk":
+            c = _topk_roundtrip(x, cfg.topk_frac)
+        else:
+            raise ValueError(cfg.scheme)
+        return c, x - c
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err_state)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree.unflatten(treedef, [o[0] for o in out]),
+            jax.tree.unflatten(treedef, [o[1] for o in out]))
+
+
+def compressed_bytes(cfg: CompressionConfig, params) -> int:
+    """Bytes crossing the pod axis per step under the scheme (for roofline)."""
+    n = sum(p.size for p in jax.tree.leaves(params))
+    if cfg.scheme == "int8":
+        return n  # 1 byte/param (+ negligible scales)
+    if cfg.scheme == "topk":
+        return int(n * cfg.topk_frac) * 8  # value + index
+    return n * 4

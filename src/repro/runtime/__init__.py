@@ -1,0 +1,1 @@
+from repro.runtime.ft import FTConfig, StragglerWatchdog, TrainLoop  # noqa: F401

@@ -1,0 +1,1 @@
+from repro.serving.engine import Completion, Request, ServingEngine  # noqa: F401

@@ -1,0 +1,137 @@
+"""Batched serving engine: continuous batching over a fixed slot pool.
+
+The decode step is the transformer's analogue of SHARP's serial recurrent
+tail (one step per token, state-dependent), so the engine's job mirrors the
+paper's scheduling story: keep the parallel work (prefill of incoming
+requests) flowing around the serial work (batched decode) without stalling
+it.
+
+Mechanics:
+  * ``max_batch`` slots share one batched cache (allocated once).
+  * Admission: a free slot gets the next queued request; its prompt runs as
+    a single-request prefill whose cache rows are spliced into the batch
+    cache (slot-local positions via the per-slot ``idx`` cursor).
+  * Every engine tick decodes ALL active slots in one batched serve_step;
+    finished slots (EOS or max_new_tokens) free immediately.
+Greedy sampling by default; temperature optional.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tf
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    tokens: np.ndarray  # (prompt_len,)
+    max_new_tokens: int = 16
+    eos_id: int = -1  # -1: never
+
+
+@dataclasses.dataclass
+class Completion:
+    uid: int
+    tokens: List[int]
+    prompt_len: int
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, max_batch: int = 4,
+                 max_seq: int = 256, temperature: float = 0.0, seed: int = 0):
+        assert not cfg.embed_stub, "stub-frontend archs serve via embeds API"
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.temperature = temperature
+        self._key = jax.random.PRNGKey(seed)
+
+        self.cache = tf.init_cache(cfg, max_batch, max_seq)
+        self._decode = jax.jit(
+            lambda p, c, t: tf.decode_step(cfg, p, c, {"tokens": t}))
+        self._prefill = jax.jit(
+            lambda p, t: tf.prefill(cfg, p, {"tokens": t}, seq_len=max_seq))
+
+        self.queue: List[Request] = []
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.generated: List[List[int]] = [[] for _ in range(max_batch)]
+        self.last_token = np.zeros((max_batch, 1), np.int32)
+        self.done: List[Completion] = []
+        self.steps = 0
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _splice_cache(self, slot: int, req_cache):
+        # scan-stacked caches are (L, B, ...): the slot lives on axis 1;
+        # per-layer list caches are (B, ...): axis 0
+        axis = 1 if self.cfg.scan_layers else 0
+
+        def one(big, small):
+            if axis == 1:
+                return big.at[:, slot:slot + 1].set(small.astype(big.dtype))
+            return big.at[slot:slot + 1].set(small.astype(big.dtype))
+
+        layers = jax.tree.map(one, self.cache["layers"], req_cache["layers"])
+        idx = self.cache["idx"].at[slot].set(req_cache["idx"][0])
+        self.cache = {"layers": layers, "idx": idx}
+
+    def _admit(self):
+        for slot in range(self.max_batch):
+            if self.slots[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                tokens = jnp.asarray(req.tokens, jnp.int32)[None]
+                logits, req_cache = self._prefill(self.params, tokens)
+                self._splice_cache(slot, req_cache)
+                nxt = self._sample(logits[:, -1])
+                self.slots[slot] = req
+                self.generated[slot] = [int(nxt[0])]
+                self.last_token[slot, 0] = int(nxt[0])
+
+    def _sample(self, logits):
+        if self.temperature <= 0:
+            return np.asarray(jnp.argmax(logits, axis=-1))
+        self._key, sub = jax.random.split(self._key)
+        return np.asarray(jax.random.categorical(sub, logits / self.temperature))
+
+    def _retire(self):
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            gen = self.generated[slot]
+            if len(gen) >= req.max_new_tokens or (gen and gen[-1] == req.eos_id):
+                self.done.append(Completion(req.uid, gen, len(req.tokens)))
+                self.slots[slot] = None
+
+    # ------------------------------------------------------------------
+    def step(self):
+        """One engine tick: admit -> batched decode -> retire."""
+        self._admit()
+        if not any(s is not None for s in self.slots):
+            return
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(self.last_token))
+        nxt = self._sample(logits[:, 0])
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            self.generated[slot].append(int(nxt[slot]))
+            self.last_token[slot, 0] = int(nxt[slot])
+        self.steps += 1
+        self._retire()
+
+    def run_to_completion(self, max_ticks: int = 10_000) -> List[Completion]:
+        while (self.queue or any(s is not None for s in self.slots)):
+            self.step()
+            if self.steps > max_ticks:
+                raise RuntimeError("engine did not drain")
+        return self.done

@@ -1,0 +1,3 @@
+from repro.sharding.partition import (  # noqa: F401
+    batch_spec, cache_specs, param_shardings, param_specs,
+)

@@ -1,0 +1,213 @@
+"""Parameter / activation / cache partitioning rules (DP + FSDP + TP + EP).
+
+Rules are path+shape based and divisibility-checked against the actual mesh,
+so a single rule set serves every assigned architecture on any mesh shape
+(the 1000-node posture: bigger meshes only change the shape tuple).
+
+Scheme (logical -> physical):
+  batch         ('pod', 'data')     data parallel across pods and hosts
+  fsdp          ('pod', 'data')     param/optimizer-state sharding (ZeRO-3
+                                    style: gathered per-layer at use)
+  tensor        'model'             TP: heads / ffn / experts / vocab / gate-4H
+
+Per-tensor policy (matching dims checked for divisibility, else replicated):
+  embedding table (V, d)        -> (model, fsdp)
+  unembed (d, V)                -> (fsdp, model)
+  in-projections  (.., d, out)  -> (.., fsdp, model)   w_q, w_kv, w_gate, w_up,
+                                                        W, w_in, w_a, w_x, w_up_*
+  out-projections (.., in, d)   -> (.., model, fsdp)   w_o, w_down, w_out
+  MoE experts (E, d, f) / (E, f, d) -> (model=EP, fsdp, -) / (model, -, fsdp)
+  router (d, E)                 -> (-, model)
+  everything 1-D (norms, biases, Lambda) -> replicated
+Scan-stacked params carry a leading L dim, always unsharded.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+OUT_PROJ_NAMES = {"w_o", "w_down", "w_out"}
+IN_PROJ_NAMES = {"w_q", "w_kv", "w_gate", "w_up", "W", "w_in", "w_a", "w_x",
+                 "w_up_v", "w_up_g", "w_q2", "w_k", "w_v", "U", "R"}
+
+
+def _axes_in(mesh: Mesh, axes) -> Optional[Tuple[str, ...]]:
+    present = set(mesh.axis_names)
+    if isinstance(axes, str):
+        axes = (axes,)
+    axes = tuple(a for a in axes if a in present)
+    return axes or None
+
+
+def _size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = 1
+    for a in (axes,) if isinstance(axes, str) else axes:
+        n *= sizes[a]
+    return n
+
+
+def _fit(mesh: Mesh, dim: int, axes):
+    """axes if present-in-mesh and dim divides evenly, else None."""
+    axes = _axes_in(mesh, axes) if axes is not None else None
+    if axes is None:
+        return None
+    if dim % _size(mesh, axes) != 0:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def _param_spec(path_names, leaf, mesh: Mesh, fsdp_axes) -> P:
+    name = path_names[-1] if path_names else ""
+    shape = leaf.shape
+    nd = len(shape)
+    in_moe = "moe" in path_names
+    spec: list = [None] * nd
+    if nd <= 1:
+        return P(*spec)
+    # small tensors replicate: sharding them buys no memory and costs
+    # per-use collectives.  Exception: the sLSTM recurrent matrix R — its
+    # per-step dR accumulation must stay sharded with the gate axis or the
+    # backward pass all-reduces it every timestep (§Perf, xlstm iter 2).
+    size = 1
+    for s in shape:
+        size *= s
+    if size < 2**22 and name != "R":
+        return P(*spec)
+    if name == "R":  # (H, dh, 4dh): gate axis over 'model'
+        spec[-1] = _fit(mesh, shape[-1], "model")
+        return P(*spec)
+
+    # which trailing dims are the "real" matrix (strip scan-L / expert dims)
+    if name in ("router",):
+        spec[-1] = _fit(mesh, shape[-1], "model")
+        return P(*spec)
+
+    if in_moe and name in ("w_gate", "w_up", "w_down") and nd >= 3:
+        # (..., E, d, f) or (..., E, f, d): EP on E; FSDP on the ff dim.
+        # NOT on d: d is the dispatch-buffer contraction dim, and sharding
+        # it forces a weight regather (or an (E,C,ff) partial-sum
+        # all-reduce) inside every microbatch iteration — measured 4x
+        # collective blowup on arctic (EXPERIMENTS.md §Perf, refuted).
+        e_dim = nd - 3
+        spec[e_dim] = _fit(mesh, shape[e_dim], "model")
+        if name == "w_down":  # (E, f, d): fsdp on f... also contraction;
+            # use d (output dim): output (E,C,d@fsdp) reshards once/layer
+            spec[-1] = _fit(mesh, shape[-1], fsdp_axes)
+        else:  # (E, d, f): fsdp on f (non-contracting)
+            spec[-1] = _fit(mesh, shape[-1], fsdp_axes)
+        return P(*spec)
+
+    if name == "table":  # (V, d)
+        spec[-2] = _fit(mesh, shape[-2], "model")
+        spec[-1] = _fit(mesh, shape[-1], fsdp_axes)
+        return P(*spec)
+    if name == "unembed":  # (d, V)
+        spec[-2] = _fit(mesh, shape[-2], fsdp_axes)
+        spec[-1] = _fit(mesh, shape[-1], "model")
+        return P(*spec)
+
+    if name in OUT_PROJ_NAMES:
+        spec[-2] = _fit(mesh, shape[-2], "model")
+        spec[-1] = _fit(mesh, shape[-1], fsdp_axes)
+        return P(*spec)
+
+    # default / in-projection: (.., d_in, d_out) -> (fsdp, model)
+    spec[-2] = _fit(mesh, shape[-2], fsdp_axes)
+    spec[-1] = _fit(mesh, shape[-1], "model")
+    # avoid double-booking an axis if both dims resolved to overlapping axes
+    if spec[-2] is not None and spec[-1] is not None:
+        a = {spec[-2]} if isinstance(spec[-2], str) else set(spec[-2])
+        b = {spec[-1]} if isinstance(spec[-1], str) else set(spec[-1])
+        if a & b:
+            spec[-2] = None
+    return P(*spec)
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for k in path:
+        if hasattr(k, "key"):
+            names.append(str(k.key))
+        elif hasattr(k, "idx"):
+            names.append(str(k.idx))
+        else:
+            names.append(str(k))
+    return tuple(names)
+
+
+def param_specs(params_shape, mesh: Mesh, multi_pod_fsdp: bool = True,
+                fsdp: bool = True):
+    """Pytree of PartitionSpec matching ``params_shape`` (shapes or arrays).
+
+    ``fsdp=False``: weight-stationary (TP-only) layout — no per-use gathers;
+    the serving/decode configuration (see DESIGN.md §5)."""
+    if not fsdp:
+        fsdp_axes = ()
+    else:
+        fsdp_axes = ("pod", "data") if multi_pod_fsdp else ("data",)
+
+    def one(path, leaf):
+        return _param_spec(_path_names(path), leaf, mesh, fsdp_axes)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def param_shardings(params_shape, mesh: Mesh, **kw):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params_shape, mesh, **kw))
+
+
+# ---------------------------------------------------------------------------
+# batch / cache
+# ---------------------------------------------------------------------------
+
+
+def batch_spec(mesh: Mesh, batch_shape_tree):
+    """tokens/embeds/labels: batch dim over (pod, data) when divisible."""
+
+    def one(leaf):
+        dp = _fit(mesh, leaf.shape[0], ("pod", "data"))
+        spec = [dp] + [None] * (len(leaf.shape) - 1)
+        if len(leaf.shape) >= 3:  # embeds (B, S, d)
+            spec[-1] = _fit(mesh, leaf.shape[-1], "model")
+        return P(*spec)
+
+    return jax.tree.map(one, batch_shape_tree)
+
+
+def cache_specs(cache_shape, mesh: Mesh):
+    """KV caches (L?, B, T, KV): batch over dp, flattened kv over model;
+    recurrent states (B, W): width over model."""
+
+    def one(path, leaf):
+        names = _path_names(path)
+        nd = len(leaf.shape)
+        name = names[-1]
+        if name == "idx":
+            return P(_fit(mesh, leaf.shape[0], ("pod", "data")))
+        # stacked (scan) caches carry a leading L dim; list caches have a
+        # numeric layer index in their path instead
+        has_idx = any(n.isdigit() for n in names)
+        scan_l = 0 if has_idx else (1 if nd >= 3 else 0)
+        spec = [None] * nd
+        b_dim = scan_l
+        if b_dim < nd:
+            spec[b_dim] = _fit(mesh, leaf.shape[b_dim], ("pod", "data"))
+        if name in ("k", "v") and nd >= b_dim + 3:
+            # sequence-parallel KV cache: shard the T dim over 'model' so
+            # decode attention reduces softmax stats (KBs) across shards
+            # instead of all-gathering cache rows (MBs) — see EXPERIMENTS.md
+            # §Perf (recurrentgemma decode hillclimb, iteration 2)
+            spec[b_dim + 1] = _fit(mesh, leaf.shape[b_dim + 1], "model")
+        elif name in ("state", "h", "c", "n", "m") and nd == b_dim + 2:
+            spec[-1] = _fit(mesh, leaf.shape[-1], "model")
+        elif name == "conv" and nd == b_dim + 3:
+            spec[-1] = _fit(mesh, leaf.shape[-1], "model")
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)

@@ -1,0 +1,62 @@
+"""Tile-engine math: padding, cycles, selection (paper §4.2/§6)."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.tiling import (K_CHOICES, TileConfig, block_waste, mvm_cycles,
+                               padding_waste, select_block_shape, select_tile)
+
+
+@settings(max_examples=50, deadline=None)
+@given(rows=st.integers(1, 5000), cols=st.integers(1, 5000),
+       k=st.sampled_from(K_CHOICES), macs=st.sampled_from([1024, 4096, 65536]))
+def test_cycles_bounds(rows, cols, k, macs):
+    if k > macs:
+        return
+    t = TileConfig(k=k, macs=macs)
+    fixed = mvm_cycles(rows, cols, t, reconfigure=False)
+    rec = mvm_cycles(rows, cols, t, reconfigure=True)
+    ideal = rows * cols / macs
+    assert rec <= fixed                       # reconfiguration never hurts
+    assert fixed >= max(1, math.floor(ideal))  # can't beat the MAC budget
+    # fixed cycles == analytic ceil product
+    assert fixed == max(1, math.ceil(rows / t.k) * math.ceil(cols / t.cols))
+
+
+@settings(max_examples=50, deadline=None)
+@given(rows=st.integers(1, 3000), cols=st.integers(1, 3000),
+       k=st.sampled_from(K_CHOICES))
+def test_padding_waste_range(rows, cols, k):
+    t = TileConfig(k=k, macs=4096)
+    w = padding_waste(rows, cols, t)
+    assert 0.0 <= w < 1.0
+    if rows % t.k == 0 and cols % t.cols == 0:
+        assert w == 0.0
+
+
+def test_select_tile_is_argmin():
+    for rows, cols, macs in [(1360, 340, 4096), (4096, 1024, 65536),
+                             (400, 100, 1024)]:
+        best = select_tile(rows, cols, macs)
+        best_c = mvm_cycles(rows, cols, best, reconfigure=True)
+        for k in K_CHOICES:
+            if k > macs:
+                continue
+            c = mvm_cycles(rows, cols, TileConfig(k=k, macs=macs),
+                           reconfigure=True)
+            assert best_c <= c
+
+
+@settings(max_examples=40, deadline=None)
+@given(m=st.integers(1, 4096), n=st.integers(1, 8192))
+def test_block_shape_constraints(m, n):
+    bm, bn = select_block_shape(m, n)
+    assert bm >= 1 and bn >= 128 or bn >= n  # lane-aligned
+    assert bm * bn * 4 <= 4 * 2**20  # default VMEM budget
+    assert 0.0 <= block_waste(m, n, bm, bn) < 1.0
+
+
+def test_block_shape_prefers_zero_waste():
+    bm, bn = select_block_shape(1024, 4096)
+    assert 1024 % bm == 0 and 4096 % bn == 0  # divisible dims -> no waste

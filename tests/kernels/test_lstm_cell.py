@@ -1,0 +1,60 @@
+"""Per-kernel allclose: fused LSTM cell vs pure-jnp oracle (interpret=True)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.lstm_cell.ops import lstm_cell
+from repro.kernels.lstm_cell.ref import lstm_cell_ref
+
+
+def _mk(B, H, dtype, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    U4 = (jax.random.normal(ks[0], (H, 4, H), jnp.float32) * 0.2).astype(dtype)
+    xw = jax.random.normal(ks[1], (B, 4, H), jnp.float32).astype(dtype)
+    h = jax.random.normal(ks[2], (B, H), jnp.float32).astype(dtype)
+    c = jax.random.normal(ks[3], (B, H), jnp.float32)
+    return U4, xw, h, c
+
+
+SHAPES = [(1, 32), (2, 64), (3, 100), (2, 256), (1, 340), (2, 513)]
+BLOCKS = [(32, 32), (64, 32), (128, 128)]
+
+
+@pytest.mark.parametrize("B,H", SHAPES)
+@pytest.mark.parametrize("bh,bk", BLOCKS)
+def test_allclose_fp32(B, H, bh, bk):
+    U4, xw, h, c = _mk(B, H, jnp.float32)
+    ho, co = lstm_cell(U4, xw, h, c, block_h=min(bh, H), block_k=min(bk, H))
+    hr, cr = lstm_cell_ref(U4, xw, h, c)
+    np.testing.assert_allclose(np.asarray(ho), np.asarray(hr), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(co), np.asarray(cr), atol=2e-5)
+
+
+@pytest.mark.parametrize("B,H", [(2, 64), (2, 100)])
+def test_allclose_bf16(B, H):
+    U4, xw, h, c = _mk(B, H, jnp.bfloat16)
+    ho, co = lstm_cell(U4, xw, h, c, block_h=64, block_k=32)
+    hr, cr = lstm_cell_ref(U4, xw, h, c)
+    np.testing.assert_allclose(np.asarray(ho, np.float32),
+                               np.asarray(hr, np.float32), atol=3e-2)
+
+
+def test_autotuned_blocks():
+    U4, xw, h, c = _mk(2, 200, jnp.float32)
+    ho, co = lstm_cell(U4, xw, h, c)  # blocks from the autotune table
+    hr, cr = lstm_cell_ref(U4, xw, h, c)
+    np.testing.assert_allclose(np.asarray(ho), np.asarray(hr), atol=2e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(B=st.integers(1, 4), H=st.integers(8, 96),
+       bh=st.sampled_from([16, 32, 64]), bk=st.sampled_from([16, 32, 64]))
+def test_property_any_shape(B, H, bh, bk):
+    U4, xw, h, c = _mk(B, H, jnp.float32, seed=B * 1000 + H)
+    ho, co = lstm_cell(U4, xw, h, c, block_h=min(bh, H), block_k=min(bk, H))
+    hr, cr = lstm_cell_ref(U4, xw, h, c)
+    np.testing.assert_allclose(np.asarray(ho), np.asarray(hr), atol=2e-5)
+    # |h| <= 1 by construction (sigmoid * tanh)
+    assert np.all(np.abs(np.asarray(ho)) <= 1.0 + 1e-6)

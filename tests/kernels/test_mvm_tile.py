@@ -1,0 +1,55 @@
+"""Per-kernel allclose: reconfigurable tiled MVM vs oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.mvm_tile.ops import mvm
+from repro.kernels.mvm_tile.ref import mvm_ref
+
+
+def _mk(B, X, N, dtype, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(ks[0], (B, X), jnp.float32).astype(dtype)
+    W = (jax.random.normal(ks[1], (X, N), jnp.float32) * 0.1).astype(dtype)
+    b = jax.random.normal(ks[2], (N,), jnp.float32)
+    return x, W, b
+
+
+@pytest.mark.parametrize("B,X,N", [
+    (1, 64, 128), (4, 100, 300), (2, 340, 1360), (8, 513, 129), (1, 32, 32),
+])
+@pytest.mark.parametrize("bn,bk", [(128, 64), (256, 128)])
+def test_allclose_fp32(B, X, N, bn, bk):
+    x, W, b = _mk(B, X, N, jnp.float32)
+    y = mvm(x, W, b, block_n=min(bn, N), block_k=min(bk, X))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(mvm_ref(x, W, b)),
+                               atol=2e-5, rtol=1e-5)
+
+
+def test_no_bias_and_vector_input():
+    x, W, _ = _mk(1, 96, 160, jnp.float32)
+    y = mvm(x[0], W)  # (X,) path
+    np.testing.assert_allclose(np.asarray(y), np.asarray(mvm_ref(x, W)[0]),
+                               atol=2e-5, rtol=1e-5)
+    assert y.shape == (160,)
+
+
+@pytest.mark.parametrize("dtype,atol", [(jnp.bfloat16, 5e-2), (jnp.float32, 2e-5)])
+def test_dtypes(dtype, atol):
+    x, W, b = _mk(2, 128, 256, dtype)
+    y = mvm(x, W, b)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(mvm_ref(x, W, b), np.float32),
+                               atol=atol, rtol=1e-2)
+
+
+@settings(max_examples=15, deadline=None)
+@given(B=st.integers(1, 3), X=st.integers(8, 200), N=st.integers(8, 200),
+       bn=st.sampled_from([32, 64, 128]), bk=st.sampled_from([32, 64]))
+def test_property_edges(B, X, N, bn, bk):
+    x, W, b = _mk(B, X, N, jnp.float32, seed=X * 211 + N)
+    y = mvm(x, W, b, block_n=min(bn, N), block_k=min(bk, X))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(mvm_ref(x, W, b)),
+                               atol=3e-5, rtol=1e-4)

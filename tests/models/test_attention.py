@@ -1,0 +1,103 @@
+"""Attention paths agree: naive == blockwise == local(SWA) == decode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.layers import attention as at
+from repro.models.layers.rope import apply_rope, mrope_angles, rope_angles
+
+
+def _qkv(B, S, Hq, Hk, D, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hk, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hk, D), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("Hq,Hk", [(4, 4), (8, 2), (4, 1)])
+def test_blockwise_equals_naive(Hq, Hk):
+    q, k, v = _qkv(2, 64, Hq, Hk, 32)
+    ref = at.naive_attention(q, k, v)
+    out = at.blockwise_attention(q, k, v, q_chunk=16, kv_chunk=16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(nq=st.integers(1, 4), nk=st.integers(1, 4), seed=st.integers(0, 5))
+def test_blockwise_chunk_grid(nq, nk, seed):
+    S = 48
+    q, k, v = _qkv(1, S, 4, 2, 16, seed)
+    ref = at.naive_attention(q, k, v)
+    qc = S // nq if S % nq == 0 else S
+    kc = S // nk if S % nk == 0 else S
+    if S % qc or S % kc:
+        return
+    out = at.blockwise_attention(q, k, v, q_chunk=qc, kv_chunk=kc)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("S,W", [(64, 16), (60, 16), (33, 8), (16, 16)])
+def test_local_equals_naive_windowed(S, W):
+    q, k, v = _qkv(2, S, 4, 2, 16)
+    ref = at.naive_attention(q, k, v, window=W)
+    out = at.local_attention(q, k, v, window=W)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_decode_equals_last_row_of_naive():
+    B, S, Hq, Hk, D = 2, 32, 8, 2, 16
+    q, k, v = _qkv(B, S, Hq, Hk, D)
+    full = at.naive_attention(q, k, v)
+    o = at.decode_attention(q[:, -1:], k, v, jnp.full((B,), S, jnp.int32))
+    np.testing.assert_allclose(np.asarray(o[:, 0]), np.asarray(full[:, -1]),
+                               atol=2e-5)
+
+
+def test_chunked_decode_equals_direct():
+    """The flash-decode chunked path (long caches) == direct softmax."""
+    B, T, Hq, Hk, D = 2, 64, 8, 2, 16
+    q, k, v = _qkv(B, T, Hq, Hk, D)
+    import repro.models.layers.attention as A
+    idx = jnp.array([40, 64], jnp.int32)
+    direct = at.decode_attention(q[:, -1:], k, v, idx)
+    chunked = A._decode_attention_chunked(q[:, -1:], k, v, idx, window=0,
+                                          chunk=16)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(direct),
+                               atol=2e-5)
+    # windowed
+    d2 = at.decode_attention(q[:, -1:], k, v, idx, window=8)
+    c2 = A._decode_attention_chunked(q[:, -1:], k, v, idx, window=8, chunk=16)
+    np.testing.assert_allclose(np.asarray(c2), np.asarray(d2), atol=2e-5)
+
+
+def test_rope_preserves_norm_and_relativity():
+    S, D = 16, 32
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, S, 2, D))
+    pos = jnp.arange(S)[None]
+    cos, sin = rope_angles(pos, D, 10000.0)
+    y = apply_rope(x, cos, sin)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-5)
+    # relativity: <R(p)q, R(p+d)k> depends only on d
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, D))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, D))
+    def dot_at(p, d):
+        cq, sq = rope_angles(jnp.array([[p]]), D, 10000.0)
+        ck, sk = rope_angles(jnp.array([[p + d]]), D, 10000.0)
+        return float((apply_rope(q, cq, sq) * apply_rope(k, ck, sk)).sum())
+    assert abs(dot_at(0, 3) - dot_at(7, 3)) < 1e-3
+
+
+def test_mrope_degenerates_to_rope_for_text():
+    """Equal position streams == standard RoPE (Qwen2-VL property)."""
+    S, D = 12, 32
+    pos = jnp.arange(S)[None]
+    pos3 = jnp.broadcast_to(pos[None], (3, 1, S))
+    c1, s1 = rope_angles(pos, D, 10000.0)
+    c3, s3 = mrope_angles(pos3, D, 10000.0, (4, 6, 6))
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c3), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s3), atol=1e-6)

@@ -1,0 +1,88 @@
+"""MoE routing invariants + dense-reference equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.layers import moe as moe_lib
+
+
+def _params(d, ff, E, seed=0):
+    return moe_lib.init_moe(jax.random.PRNGKey(seed), d, ff, E, jnp.float32)
+
+
+def test_matches_dense_reference_when_no_drops():
+    B, S, d, ff, E, k = 2, 8, 16, 32, 8, 2
+    p = _params(d, ff, E)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, d))
+    y, aux = moe_lib.apply_moe(p, x, k=k, capacity_factor=1.0,
+                               deterministic_capacity=B * S)  # no drops
+    y_ref = moe_lib.moe_reference(p, x, k=k)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(T=st.integers(4, 64), E=st.sampled_from([4, 8]), k=st.integers(1, 3),
+       seed=st.integers(0, 3))
+def test_route_invariants(T, E, k, seed):
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (T, E))
+    C = max(1, T * k // E)
+    e_idx, s_idx, w, valid = moe_lib.route(logits, k, C, E)
+    e, s, v = np.asarray(e_idx), np.asarray(s_idx), np.asarray(valid)
+    w = np.asarray(w)
+    # weights: renormalized top-k sums to 1
+    np.testing.assert_allclose(w.sum(-1), 1.0, atol=1e-5)
+    # expert ids in range; no duplicate expert per token
+    assert (e >= 0).all() and (e < E).all()
+    for t in range(e.shape[0]):
+        assert len(set(e[t])) == k
+    # each (expert, slot) pair held by at most one (token, choice)
+    pairs = [(int(e[t, j]), int(s[t, j]))
+             for t in range(T) for j in range(k) if v[t, j]]
+    assert len(pairs) == len(set(pairs))
+    # all valid slots below capacity
+    assert all(0 <= slot < C for _, slot in pairs)
+    # capacity accounting: expert load == min(demand, C)
+    demand = np.bincount(e.reshape(-1), minlength=E)
+    load = np.bincount([p[0] for p in pairs], minlength=E)
+    np.testing.assert_array_equal(load, np.minimum(demand, C))
+
+
+def test_dropped_tokens_contribute_zero():
+    """At tiny capacity, overflow tokens fall back to the residual (output 0)."""
+    B, S, d, ff, E, k = 1, 64, 8, 16, 4, 1  # demand ~16/expert vs capacity 8
+    p = _params(d, ff, E)
+    x = jax.random.normal(jax.random.PRNGKey(2), (B, S, d))
+    y, _ = moe_lib.apply_moe(p, x, k=k, capacity_factor=1e-9)  # capacity -> min
+    # some tokens must be dropped (16 tokens, 4 experts, cap 8 floor)
+    y_full, _ = moe_lib.apply_moe(p, x, k=k, deterministic_capacity=B * S,
+                                  capacity_factor=1.0)
+    assert not np.allclose(np.asarray(y), np.asarray(y_full))
+
+
+def test_aux_loss_balanced_vs_skewed():
+    E = 8
+    T = 256
+    balanced = jnp.tile(jnp.eye(E), (T // E, 1)) * 4.0
+    skewed = jnp.zeros((T, E)).at[:, 0].set(4.0)
+    top_b = jax.lax.top_k(balanced, 1)[1]
+    top_s = jax.lax.top_k(skewed, 1)[1]
+    lb = moe_lib.aux_load_balance_loss(balanced, top_b, E)
+    ls = moe_lib.aux_load_balance_loss(skewed, top_s, E)
+    assert float(ls) > float(lb)  # skew is penalized
+    assert float(lb) == pytest.approx(1.0, abs=0.3)  # ~1 at perfect balance
+
+
+def test_arctic_dense_residual_branch():
+    from repro.models.layers.mlp import apply_mlp
+
+    d, ff, E = 8, 16, 4
+    p = moe_lib.init_moe(jax.random.PRNGKey(0), d, ff, E, jnp.float32,
+                         dense_ff=16)
+    assert "dense" in p
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 4, d))
+    y, _ = moe_lib.apply_moe(p, x, k=2, capacity_factor=4.0)
+    y_no_dense = y - apply_mlp(p["dense"], x)
+    assert np.isfinite(np.asarray(y)).all()
+    assert not np.allclose(np.asarray(y), np.asarray(y_no_dense))

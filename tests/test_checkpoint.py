@@ -1,0 +1,72 @@
+"""Checkpointer: roundtrip, async commit protocol, GC, elasticity hooks."""
+import os
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"params": {"w": jax.random.normal(k, (8, 8)),
+                       "b": jnp.zeros((8,), jnp.bfloat16)},
+            "opt": {"count": jnp.array(3, jnp.int32)}}
+
+
+def test_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    tree = _tree()
+    ck.save(10, tree, blocking=True)
+    assert ck.latest_step() == 10
+    out = ck.restore(10, jax.tree.map(jnp.zeros_like, tree))
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_async_save_commits(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _tree(), blocking=False)
+    ck.wait()
+    assert ck.latest_step() == 1
+    assert os.path.exists(tmp_path / "step_1" / ".complete")
+
+
+def test_incomplete_checkpoint_ignored(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _tree(), blocking=True)
+    # simulate a crash mid-write: step_2 exists without the commit marker
+    os.makedirs(tmp_path / "step_2")
+    assert ck.latest_step() == 1
+    with pytest.raises(FileNotFoundError):
+        ck.restore(2, _tree())
+
+
+def test_gc_keeps_newest(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, _tree(), blocking=True)
+    names = sorted(os.listdir(tmp_path))
+    assert "step_3" in names and "step_4" in names
+    assert "step_1" not in names and "step_2" not in names
+
+
+def test_structure_mismatch_raises(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _tree(), blocking=True)
+    with pytest.raises(AssertionError):
+        ck.restore(1, {"just": jnp.zeros(3)})
+
+
+def test_restore_respects_dtype(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    tree = {"w": jnp.ones((4,), jnp.bfloat16)}
+    ck.save(5, tree, blocking=True)
+    out = ck.restore(5, tree)
+    assert out["w"].dtype == jnp.bfloat16

@@ -1,0 +1,57 @@
+"""Data pipeline: determinism, host sharding, learnable structure."""
+import numpy as np
+import pytest
+
+from repro.data import DataConfig, SyntheticPipeline
+
+
+def test_determinism():
+    cfg = DataConfig(vocab_size=64, seq_len=16, global_batch=4, seed=7)
+    a = SyntheticPipeline(cfg).batch_at(13)
+    b = SyntheticPipeline(cfg).batch_at(13)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = SyntheticPipeline(cfg).batch_at(14)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_host_sharding_disjoint_and_deterministic():
+    full = DataConfig(vocab_size=64, seq_len=8, global_batch=8, seed=1)
+    h0 = DataConfig(vocab_size=64, seq_len=8, global_batch=8, seed=1,
+                    num_hosts=2, host_id=0)
+    h1 = DataConfig(vocab_size=64, seq_len=8, global_batch=8, seed=1,
+                    num_hosts=2, host_id=1)
+    b0 = SyntheticPipeline(h0).batch_at(3)["tokens"]
+    b1 = SyntheticPipeline(h1).batch_at(3)["tokens"]
+    assert b0.shape == (4, 8) and b1.shape == (4, 8)
+    assert not np.array_equal(b0, b1)  # different streams per host
+
+
+def test_markov_has_learnable_structure():
+    """Bigram stats of the stream match the generating table (so a trained
+    bigram model beats uniform)."""
+    cfg = DataConfig(vocab_size=8, seq_len=256, global_batch=8, seed=3)
+    pipe = SyntheticPipeline(cfg)
+    counts = np.zeros((8, 8))
+    for step in range(4):
+        toks = pipe.batch_at(step)["tokens"]
+        for row in toks:
+            np.add.at(counts, (row[:-1], row[1:]), 1)
+    emp = counts / np.maximum(counts.sum(-1, keepdims=True), 1)
+    # empirical bigram ~ generator table
+    assert np.abs(emp - pipe._trans).max() < 0.15
+    # and decidedly non-uniform
+    assert emp.max() > 2.0 / 8
+
+
+def test_embed_stub_batches():
+    cfg = DataConfig(vocab_size=32, seq_len=8, global_batch=2, embed_dim=16)
+    b = SyntheticPipeline(cfg).batch_at(0)
+    assert b["embeds"].shape == (2, 8, 16)
+    assert b["labels"].shape == (2, 8)
+    assert b["embeds"].dtype == np.float32
+
+
+def test_tokens_in_range():
+    cfg = DataConfig(vocab_size=11, seq_len=64, global_batch=4, source="markov")
+    t = SyntheticPipeline(cfg).batch_at(0)["tokens"]
+    assert t.min() >= 0 and t.max() < 11

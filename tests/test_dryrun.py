@@ -1,0 +1,45 @@
+"""Dry-run machinery end-to-end on a small fake mesh (subprocess)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from conftest import REPO_ROOT, subprocess_env
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("starcoder2-3b", "decode_32k"),
+    ("recurrentgemma-2b", "long_500k"),
+])
+def test_dryrun_cell_small_mesh(arch, shape, tmp_path):
+    env = subprocess_env(16)
+    env["REPRO_DRYRUN_SMALL"] = "1"
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--mesh", "both", "--out", str(tmp_path),
+         "--no-hlo"],
+        capture_output=True, text=True, env=env, cwd=REPO_ROOT, timeout=900)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr[-2000:]}"
+    assert "[FAILED" not in r.stdout
+    cells = [json.load(open(tmp_path / f)) for f in os.listdir(tmp_path)
+             if f.endswith(".json")]
+    assert len(cells) == 2  # both meshes
+    for c in cells:
+        assert c["status"] == "ok"
+        assert c["memory"]["peak_bytes_per_device"] > 0
+        assert c["cost_analysis"].get("flops", 0) > 0
+
+
+def test_dryrun_skip_rule(tmp_path):
+    """Pure full-attention arch must SKIP long_500k (documented), not fail."""
+    env = subprocess_env(16)
+    env["REPRO_DRYRUN_SMALL"] = "1"
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "deepseek-67b",
+         "--shape", "long_500k", "--mesh", "pod", "--out", str(tmp_path),
+         "--no-hlo"],
+        capture_output=True, text=True, env=env, cwd=REPO_ROOT, timeout=300)
+    assert r.returncode == 0, r.stdout + r.stderr[-2000:]
+    assert "skipped" in r.stdout

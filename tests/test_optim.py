@@ -1,0 +1,92 @@
+"""Optimizer + gradient compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (AdamWConfig, CompressionConfig, apply_updates,
+                         clip_by_global_norm, compress, global_norm,
+                         init_error_state, init_state, lr_at)
+
+
+def test_adamw_descends_quadratic():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                      total_steps=100, clip_norm=1e9)
+    params = {"w": jnp.array([[3.0, -2.0]])}
+    state = init_state(params)
+    for _ in range(100):
+        grads = jax.tree.map(lambda p: 2 * p, params)  # d/dp ||p||^2
+        params, state, m = apply_updates(cfg, params, grads, state)
+    assert float(jnp.abs(params["w"]).max()) < 0.1
+
+
+def test_clipping():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+    # below the threshold: untouched
+    g2 = {"a": jnp.full((4,), 0.01)}
+    c2, _ = clip_by_global_norm(g2, 1.0)
+    np.testing.assert_allclose(np.asarray(c2["a"]), 0.01, rtol=1e-6)
+
+
+def test_lr_schedule():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=110, min_lr_frac=0.1)
+    assert float(lr_at(cfg, 0)) == pytest.approx(0.1)
+    assert float(lr_at(cfg, 9)) == pytest.approx(1.0)
+    assert float(lr_at(cfg, 110)) == pytest.approx(0.1, abs=1e-3)
+    # monotone decay after warmup
+    vals = [float(lr_at(cfg, s)) for s in range(10, 110, 10)]
+    assert all(a >= b for a, b in zip(vals, vals[1:]))
+
+
+def test_weight_decay_only_on_matrices():
+    cfg = AdamWConfig(lr=0.1, weight_decay=1.0, warmup_steps=0, clip_norm=1e9)
+    params = {"mat": jnp.ones((2, 2)), "bias": jnp.ones((2,))}
+    state = init_state(params)
+    zero_g = jax.tree.map(jnp.zeros_like, params)
+    p2, _, _ = apply_updates(cfg, params, zero_g, state)
+    assert float(p2["mat"][0, 0]) < 1.0   # decayed
+    assert float(p2["bias"][0]) == 1.0    # exempt
+
+
+@pytest.mark.parametrize("scheme", ["int8", "topk"])
+def test_compression_error_feedback_preserves_signal(scheme):
+    """Sum of compressed outputs ~ sum of raw grads (EF property)."""
+    cfg = CompressionConfig(scheme=scheme, topk_frac=0.25)
+    params = {"w": jnp.zeros((64,))}
+    err = init_error_state(params)
+    rng = np.random.default_rng(0)
+    total_raw = np.zeros(64)
+    total_comp = np.zeros(64)
+    for i in range(50):
+        g = {"w": jnp.asarray(rng.normal(size=64).astype(np.float32))}
+        c, err = compress(cfg, g, err)
+        total_raw += np.asarray(g["w"])
+        total_comp += np.asarray(c["w"])
+    resid = np.abs(total_raw - total_comp).max()
+    assert resid < np.abs(total_raw).max() * 0.5 + 1.0  # residual bounded
+
+
+def test_compression_convergence_on_quadratic():
+    """EF-compressed AdamW still minimizes a quadratic."""
+    acfg = AdamWConfig(lr=0.05, weight_decay=0.0, warmup_steps=0, clip_norm=1e9)
+    ccfg = CompressionConfig(scheme="topk", topk_frac=0.25)
+    params = {"w": jnp.linspace(-2, 2, 32)}
+    state = init_state(params)
+    err = init_error_state(params)
+    for _ in range(300):
+        grads = jax.tree.map(lambda p: 2 * p, params)
+        grads, err = compress(ccfg, grads, err)
+        params, state, _ = apply_updates(acfg, params, grads, state)
+    assert float(jnp.abs(params["w"]).max()) < 0.15
+
+
+def test_int8_roundtrip_bounded_error():
+    from repro.optim.compression import _int8_roundtrip
+
+    g = jnp.asarray(np.random.default_rng(0).normal(size=1000) * 5)
+    r = _int8_roundtrip(g)
+    scale = float(jnp.max(jnp.abs(g))) / 127.0
+    assert float(jnp.max(jnp.abs(r - g))) <= scale * 0.5 + 1e-6

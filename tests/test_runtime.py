@@ -1,0 +1,76 @@
+"""Fault tolerance: recovery-from-checkpoint, straggler watchdog,
+exact-replay semantics."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.runtime import FTConfig, StragglerWatchdog, TrainLoop
+
+
+def _toy_setup(tmp_path, ckpt_every=5):
+    """A deterministic 'trainer': params accumulate batch sums."""
+
+    def train_step(params, opt, batch):
+        new_p = {"w": params["w"] + batch.sum()}
+        new_o = {"count": opt["count"] + 1}
+        return new_p, new_o, {"loss": -params["w"]}
+
+    def batch_fn(step):
+        return jnp.asarray([step], jnp.float32)  # pure function of step
+
+    cfg = FTConfig(ckpt_dir=str(tmp_path), ckpt_every=ckpt_every,
+                   max_restarts=3)
+    return train_step, batch_fn, cfg
+
+
+def test_recovery_produces_exact_result(tmp_path):
+    train_step, batch_fn, cfg = _toy_setup(tmp_path)
+    p0 = {"w": jnp.zeros(())}
+    o0 = {"count": jnp.zeros((), jnp.int32)}
+
+    loop = TrainLoop(train_step, batch_fn, cfg)
+    loop.failure_at_steps = {12}
+    p, o, step = loop.run(p0, o0, 0, 20)
+    assert loop.restarts == 1
+    assert step == 20
+    # the result equals the fault-free run: sum of 0..19
+    assert float(p["w"]) == sum(range(20))
+    assert int(o["count"]) == 20  # replayed steps counted exactly once
+
+
+def test_gives_up_after_max_restarts(tmp_path):
+    train_step, batch_fn, cfg = _toy_setup(tmp_path)
+    loop = TrainLoop(train_step, batch_fn, cfg)
+    loop.failure_at_steps = {6, 7, 8, 9}  # re-injected after each restart
+    with pytest.raises(RuntimeError):
+        loop.run({"w": jnp.zeros(())}, {"count": jnp.zeros((), jnp.int32)},
+                 0, 20)
+
+
+def test_no_checkpoint_yet_raises_cleanly(tmp_path):
+    train_step, batch_fn, cfg = _toy_setup(tmp_path, ckpt_every=100)
+    loop = TrainLoop(train_step, batch_fn, cfg)
+    loop.failure_at_steps = {2}
+    with pytest.raises(RuntimeError, match="no checkpoint"):
+        loop.run({"w": jnp.zeros(())}, {"count": jnp.zeros((), jnp.int32)},
+                 0, 10)
+
+
+def test_straggler_watchdog():
+    wd = StragglerWatchdog(factor=3.0, alpha=0.5)
+    for s in range(10):
+        assert not wd.observe(s, 0.1)
+    assert wd.observe(10, 1.0)       # 10x the EWMA -> flagged
+    assert wd.flagged == [10]
+    # the outlier must not poison the EWMA
+    assert not wd.observe(11, 0.12)
+
+
+def test_metrics_history_records_all_steps(tmp_path):
+    train_step, batch_fn, cfg = _toy_setup(tmp_path)
+    loop = TrainLoop(train_step, batch_fn, cfg)
+    loop.run({"w": jnp.zeros(())}, {"count": jnp.zeros((), jnp.int32)}, 0, 7)
+    assert [m["step"] for m in loop.metrics_history] == list(range(7))
