@@ -1,0 +1,16 @@
+# Tier-1 verify + benchmark entry points.
+PY ?= python
+export PYTHONPATH := src:$(PYTHONPATH)
+
+.PHONY: test bench-kernels bench
+
+test:
+	$(PY) -m pytest -x -q
+
+# Kernel microbench suite; writes BENCH_kernels.json (committed — the
+# cross-PR perf trajectory).
+bench-kernels:
+	$(PY) benchmarks/run.py --suite kernels
+
+bench:
+	$(PY) benchmarks/run.py

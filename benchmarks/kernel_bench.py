@@ -13,8 +13,10 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import pallas_launch_count
 from repro.kernels.decode_attention.ops import decode_attention, decode_attention_ref
-from repro.kernels.lstm_cell.ops import lstm_cell, lstm_cell_ref
+from repro.kernels.lstm_cell.ops import (lstm_cell, lstm_cell_ref, lstm_seq,
+                                         lstm_seq_ref)
 from repro.kernels.mvm_tile.ops import mvm, mvm_ref
 from repro.kernels.rglru.ops import rglru_scan, rglru_scan_ref
 
@@ -41,6 +43,34 @@ def kernels(emit) -> None:
          f"B{B}xH{H}")
     emit("kernel/lstm_cell/ref", _time(jax.jit(lstm_cell_ref), U4, xw, h, c),
          f"B{B}xH{H}")
+
+    # ---- sequence-fused recurrence: 1 launch vs T (the PR's tentpole) ----
+    T = 32
+    xw_seq = jax.random.normal(ks[1], (B, T, 4, H), jnp.float32)
+    h0 = jnp.zeros((B, H), jnp.float32)
+    c0 = jnp.zeros((B, H), jnp.float32)
+
+    @jax.jit
+    def per_step_scan(U4, xw_seq, h0, c0):
+        """The seed's path: lax.scan re-enters the cell kernel every step —
+        T launches, (h, c) round-tripping between them."""
+        def step(carry, xw_t):
+            h, c = lstm_cell(U4, xw_t, carry[0], carry[1], interpret=True)
+            return (h, c), h
+        (_, _), hs = jax.lax.scan(step, (h0, c0), xw_seq.swapaxes(0, 1))
+        return hs
+
+    fused = jax.jit(lambda U4, xw, h, c: lstm_seq(U4, xw, h, c,
+                                                  interpret=True)[0])
+    n_per_step = pallas_launch_count(per_step_scan, U4, xw_seq, h0, c0)
+    n_fused = pallas_launch_count(fused, U4, xw_seq, h0, c0)
+    emit("kernel/lstm_seq/per_step_pallas",
+         _time(per_step_scan, U4, xw_seq, h0, c0),
+         f"B{B}xH{H}xT{T} launches={n_per_step}")
+    emit("kernel/lstm_seq/fused_pallas", _time(fused, U4, xw_seq, h0, c0),
+         f"B{B}xH{H}xT{T} launches={n_fused}")
+    emit("kernel/lstm_seq/ref", _time(jax.jit(lstm_seq_ref), U4, xw_seq, h0, c0),
+         f"B{B}xH{H}xT{T}")
 
     x = jax.random.normal(ks[0], (B, 512), jnp.float32)
     W = jax.random.normal(ks[1], (512, 1024), jnp.float32) * 0.05

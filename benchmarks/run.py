@@ -1,43 +1,77 @@
 """Benchmark harness: one function per paper table/figure + kernel
 microbenches + the dry-run roofline table.  Prints ``name,us_per_call,
-derived`` CSV (stdout is the artifact; tee it to bench_output.txt)."""
+derived`` CSV (stdout is the artifact; tee it to bench_output.txt).
+
+``--suite kernels`` runs only the kernel microbenches and persists the rows
+to ``BENCH_kernels.json`` (override with ``--json``) so the perf trajectory
+accumulates across PRs; the test tier smoke-runs this suite.
+"""
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 
-
-def emit(name: str, us_per_call: float, derived: str = "") -> None:
-    print(f"{name},{us_per_call:.2f},{derived}", flush=True)
+SUITES = ("all", "kernels", "tables")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="substring filter over benchmark names")
+    ap.add_argument("--suite", default="all", choices=SUITES)
+    ap.add_argument("--json", default=None,
+                    help="write rows as JSON (default BENCH_<suite>.json "
+                         "for non-'all' suites)")
     ap.add_argument("--skip-roofline", action="store_true")
     args = ap.parse_args()
+
+    rows = []
+
+    def emit(name: str, us_per_call: float, derived: str = "") -> None:
+        rows.append({"name": name, "us_per_call": round(us_per_call, 2),
+                     "derived": derived})
+        print(f"{name},{us_per_call:.2f},{derived}", flush=True)
 
     import kernel_bench
     import paper_tables
 
     print("name,us_per_call,derived")
-    benches = list(paper_tables.ALL) + [kernel_bench.kernels]
+    benches = []
+    if args.suite in ("all", "tables"):
+        benches += list(paper_tables.ALL)
+    if args.suite in ("all", "kernels"):
+        benches.append(kernel_bench.kernels)
     for fn in benches:
         if args.only and args.only not in fn.__name__:
             continue
         fn(emit)
 
-    if not args.skip_roofline and (not args.only or "roofline" in args.only):
+    if (args.suite == "all" and not args.skip_roofline
+            and (not args.only or "roofline" in args.only)):
         import roofline
 
         if os.path.isdir("artifacts/dryrun"):
             roofline.emit_rows(emit)
         else:
             emit("roofline/SKIPPED", 0.0, "run repro.launch.dryrun first")
+
+    json_path = args.json
+    if json_path is None and args.suite != "all" and not args.only:
+        # default artifact only for FULL suite runs — a filtered run must
+        # not clobber the committed trajectory file with partial rows
+        json_path = f"BENCH_{args.suite}.json"
+    if json_path:
+        import jax
+
+        payload = {"suite": args.suite, "backend": jax.default_backend(),
+                   "rows": rows}
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"# wrote {json_path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -12,7 +12,8 @@ import json
 import os
 from typing import Dict, Optional, Tuple
 
-from repro.core.tiling import TileConfig, select_block_shape, select_tile
+from repro.core.tiling import (TileConfig, select_block_shape,
+                               select_time_block, select_tile)
 
 DEFAULT_PATH = os.path.join("artifacts", "autotune_table.json")
 
@@ -22,11 +23,13 @@ class ConfigTable:
         self.path = path
         self._tiles: Dict[str, int] = {}
         self._blocks: Dict[str, Tuple[int, int]] = {}
+        self._seq_blocks: Dict[str, int] = {}
         if os.path.exists(path):
             with open(path) as f:
                 data = json.load(f)
             self._tiles = data.get("tiles", {})
             self._blocks = {k: tuple(v) for k, v in data.get("blocks", {}).items()}
+            self._seq_blocks = data.get("seq_blocks", {})
 
     # -- paper tile engine ------------------------------------------------
     def tile(self, rows: int, cols: int, macs: int) -> TileConfig:
@@ -42,10 +45,18 @@ class ConfigTable:
             self._blocks[key] = select_block_shape(m, n, **kw)
         return self._blocks[key]
 
+    def seq_block(self, T: int, B: int, H: int, **kw) -> int:
+        """T-block for the sequence-fused LSTM kernel."""
+        key = f"{T}x{B}x{H}"
+        if key not in self._seq_blocks:
+            self._seq_blocks[key] = select_time_block(T, B, H, **kw)
+        return self._seq_blocks[key]
+
     def save(self):
         os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
         with open(self.path, "w") as f:
-            json.dump({"tiles": self._tiles, "blocks": self._blocks}, f, indent=1)
+            json.dump({"tiles": self._tiles, "blocks": self._blocks,
+                       "seq_blocks": self._seq_blocks}, f, indent=1)
 
 
 _GLOBAL: Optional[ConfigTable] = None

@@ -18,9 +18,33 @@ structure*, which is what the paper is about:
               hoisted GEMM is MXU-dense and, once the data dependence is cut,
               XLA's scheduler overlaps it with the serial tail — the paper's
               across-sequence overlap.
+  fused       unfolded taken to its endpoint: the recurrent scan itself moves
+              inside ONE Pallas kernel launch (kernels.lstm_cell.lstm_seq),
+              with (h, c) resident in VMEM scratch for all T steps and the
+              hoisted xw streamed in T-block stripes — the per-step dispatch
+              and the state HBM round-trip both disappear.  One pallas_call
+              per layer invocation instead of T.
+
+Stack-level scheduling (``run_stack``) additionally accepts
+
+  wavefront   layer l at time t depends only on layer l-1 at time t, so an
+              L-layer stack over T steps (chunked into nk T-blocks) runs as
+              L + nk - 1 anti-diagonal *slots* instead of L·nk serial cell
+              evaluations.  Each slot gathers its active (layer, chunk)
+              cells — a contiguous run of layers — and executes them as ONE
+              G-batched sequence-fused kernel launch; each cell's input half
+              (the hoisted GEMM against the previous layer's just-produced
+              chunk) is issued in the same slot and carries no recurrent
+              dependence, so it overlaps with the serial tail exactly as in
+              the paper's Fig. 8.d, now across layers as well as time.
+              Bidirectional stacks break the time alignment (the backward
+              direction consumes the previous layer's FULL sequence) and
+              fall back to per-layer fused execution.
 
 ``tile`` (from core.tiling) controls the dispatch granularity of the
-batch/unfolded paths, mirroring the reconfigurable tile-engine.
+batch/unfolded paths, mirroring the reconfigurable tile-engine;
+``core.tiling.select_time_block`` (via the autotune table) picks the fused
+paths' T-stripe under the VMEM budget.
 """
 from __future__ import annotations
 
@@ -30,9 +54,16 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.unfolded import unfold
+from repro.kernels.common import cdiv
 from repro.models.layers.lstm import cell_update
 
-SCHEDULES = ("sequential", "batch", "intergate", "unfolded")
+# NOTE: repro.kernels.lstm_cell.ops imports repro.core.autotune; importing
+# it lazily inside the fused/wavefront paths keeps repro.core's package
+# import acyclic regardless of which side is imported first.
+
+SCHEDULES = ("sequential", "batch", "intergate", "unfolded", "fused")
+STACK_SCHEDULES = SCHEDULES + ("wavefront",)
 
 
 # ---------------------------------------------------------------------------
@@ -139,11 +170,39 @@ def run_layer_unfolded(params, xs, cell_kernel=None):
     return hs.swapaxes(0, 1)
 
 
+def run_layer_fused(params, xs, block_t: int = 0, interpret=None,
+                    seq_kernel=None):
+    """Sequence-fused schedule: the whole recurrence in ONE kernel launch.
+
+    The input half is hoisted exactly as in ``unfolded`` (routed through
+    core.unfolded.unfold), but the scan is replaced by the Pallas
+    sequence kernel: state stays in VMEM scratch, xw streams in T-stripes.
+    """
+    from repro.kernels.lstm_cell.ops import as_seq_kernel
+
+    B, T, X = xs.shape
+    H = params["U"].shape[0]
+    kern = seq_kernel or as_seq_kernel(interpret=interpret, block_t=block_t)
+
+    def input_fn(xs):
+        return jnp.einsum("btx,xg->btg", xs, params["W"]) + params["b"]
+
+    def seq_fn(state, pre):
+        h0, c0 = state
+        hs, h_n, c_n = kern(params["U"], pre, h0, c0)
+        return (h_n.astype(xs.dtype), c_n), hs.astype(xs.dtype)
+
+    _, hs = unfold(input_fn, None, xs, _init_state(B, H, xs.dtype),
+                   seq_fn=seq_fn)
+    return hs
+
+
 _LAYER_FNS = {
     "sequential": run_layer_sequential,
     "batch": run_layer_batch,
     "intergate": run_layer_intergate,
     "unfolded": run_layer_unfolded,
+    "fused": run_layer_fused,
 }
 
 
@@ -160,6 +219,11 @@ def run_layer(params, xs, schedule: str = "unfolded", **kw):
 
 def run_stack(stack_params, xs, schedule: str = "unfolded", **kw):
     """stack_params from models.layers.lstm.init_lstm_stack.  xs (B,T,X)."""
+    if schedule == "wavefront":
+        return run_stack_wavefront(stack_params, xs, **kw)
+    if schedule not in _LAYER_FNS:
+        raise ValueError(
+            f"unknown schedule {schedule!r}; options {STACK_SCHEDULES}")
     y = xs
     for layer in stack_params["layers"]:
         if "fwd" in layer:  # bidirectional
@@ -170,3 +234,62 @@ def run_stack(stack_params, xs, schedule: str = "unfolded", **kw):
         else:
             y = run_layer(layer, y, schedule, **kw)
     return y
+
+
+# ---------------------------------------------------------------------------
+# wavefront: anti-diagonal (layer, time-chunk) scheduling over the stack
+# ---------------------------------------------------------------------------
+
+
+def wavefront_slots(n_layers: int, T: int, block_t: int) -> int:
+    """Number of anti-diagonal slots: L + ceil(T / block_t) - 1."""
+    return n_layers + cdiv(T, block_t) - 1
+
+
+def run_stack_wavefront(stack_params, xs, block_t: int = 0, interpret=None):
+    """Wavefront schedule: cell (l, k) = layer l over time-chunk k runs in
+    slot s = l + k; every slot's cells (a contiguous run of layers) execute
+    as ONE G-batched sequence-fused kernel launch.
+
+    The sequence is zero-padded to a whole number of chunks — dependencies
+    are time-aligned, so pad-region garbage never flows into real outputs
+    and is sliced off at the end.
+    """
+    from repro.kernels.lstm_cell.ops import lstm_seq
+
+    layers = stack_params["layers"]
+    if any("fwd" in l for l in layers):  # bidirectional: no time alignment
+        return run_stack(stack_params, xs, "fused",
+                         block_t=block_t, interpret=interpret)
+    L = len(layers)
+    B, T, X = xs.shape
+    H = layers[0]["U"].shape[0]
+    bt = block_t or min(T, 16)
+    nk = cdiv(T, bt)
+    xs_pad = jnp.pad(xs, ((0, 0), (0, nk * bt - T), (0, 0)))
+
+    U_all = jnp.stack([l["U"].reshape(H, 4, H) for l in layers])  # (L,H,4,H)
+    h = jnp.zeros((L, B, H), xs.dtype)
+    c = jnp.zeros((L, B, H), jnp.float32)
+    outs = [[None] * nk for _ in range(L)]  # (B, bt, H) chunks
+
+    for s in range(L + nk - 1):
+        lo = max(0, s - nk + 1)
+        hi = min(L - 1, s)
+        # input halves for this slot's cells: layer l consumes the chunk the
+        # previous layer produced in slot s-1 (layer 0 reads the input)
+        xw = []
+        for l in range(lo, hi + 1):
+            k = s - l
+            src = xs_pad[:, k * bt:(k + 1) * bt] if l == 0 else outs[l - 1][k]
+            xw.append((jnp.einsum("btx,xg->btg", src, layers[l]["W"])
+                       + layers[l]["b"]).reshape(B, bt, 4, H))
+        hs, h_n, c_n = lstm_seq(
+            U_all[lo:hi + 1], jnp.stack(xw), h[lo:hi + 1], c[lo:hi + 1],
+            block_t=bt, interpret=interpret)
+        h = h.at[lo:hi + 1].set(h_n.astype(h.dtype))
+        c = c.at[lo:hi + 1].set(c_n)
+        for i, l in enumerate(range(lo, hi + 1)):
+            outs[l][s - l] = hs[i].astype(xs.dtype)
+
+    return jnp.concatenate(outs[L - 1], axis=1)[:, :T]

@@ -20,6 +20,7 @@ Two artifacts live here:
 """
 from __future__ import annotations
 
+import functools
 import math
 from dataclasses import dataclass
 from typing import List, Sequence, Tuple
@@ -105,6 +106,7 @@ def block_waste(m: int, n: int, bm: int, bn: int) -> float:
     return 1.0 - (m * n) / (em * en)
 
 
+@functools.lru_cache(maxsize=None)
 def select_block_shape(m: int, n: int, *, vmem_budget: int = 4 * 2**20,
                        bytes_per_el: int = 4,
                        bm_choices: Sequence[int] = (8, 16, 32, 64, 128, 256, 512),
@@ -128,3 +130,35 @@ def select_block_shape(m: int, n: int, *, vmem_budget: int = 4 * 2**20,
     assert best is not None, (m, n)
     bm, bn = best[1]
     return min(bm, _round_up(m, SUBLANE)), min(bn, _round_up(n, LANE))
+
+
+@functools.lru_cache(maxsize=None)
+def select_time_block(T: int, B: int, H: int, *, vmem_budget: int = 8 * 2**20,
+                      bytes_per_el: int = 4,
+                      bt_choices: Sequence[int] = (1, 2, 4, 8, 16, 32, 64,
+                                                   128, 256),
+                      ) -> int:
+    """T-block for the sequence-fused LSTM kernel (kernels.lstm_cell).
+
+    The kernel's VMEM working set per grid step is the resident recurrent
+    weight U (4H²), the streamed xw stripe (B·bt·4H), the hs output stripe
+    (B·bt·H), and the state + seed tiles (4·B·H).  Pick the bt minimizing
+    the T-edge ceil-padding waste, then the largest such bt (fewest grid
+    steps / launch amortization), under the budget — the time-axis analogue
+    of ``select_block_shape``."""
+    if T <= 0:
+        return 1
+
+    def footprint(bt: int) -> int:
+        return bytes_per_el * (4 * H * H + B * bt * 5 * H + 4 * B * H)
+
+    best = None
+    for bt in bt_choices:
+        bt = min(bt, T)
+        if bt > 1 and footprint(bt) > vmem_budget:
+            continue
+        waste = math.ceil(T / bt) * bt - T
+        key = (round(waste / T, 6), -bt)
+        if best is None or key < best[0]:
+            best = (key, bt)
+    return best[1]

@@ -24,13 +24,20 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.models.layers.lstm import cell_update
 
 
-def unfold(input_fn: Callable, recur_fn: Callable, xs, state):
+def unfold(input_fn: Callable, recur_fn: Callable, xs, state, *,
+           seq_fn: Optional[Callable] = None):
     """Generic unfolded runner.
 
     input_fn: xs (B,T,...) -> precomputed (B,T,...) input-half tensors
     recur_fn: (state, pre_t) -> (state, out_t)
+    seq_fn:   (state, pre) -> (state, outs) — a sequence-fused recurrence
+              (e.g. kernels.lstm_cell.ops.as_seq_kernel) that consumes the
+              whole precomputed tensor in ONE kernel launch, replacing the
+              per-step scan entirely.  ``pre``/``outs`` stay batch-major.
     """
     pre = input_fn(xs)
+    if seq_fn is not None:
+        return seq_fn(state, pre)
 
     def step(st, pre_t):
         return recur_fn(st, pre_t)

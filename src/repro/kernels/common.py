@@ -15,3 +15,43 @@ def cdiv(a: int, b: int) -> int:
 
 def round_up(a: int, b: int) -> int:
     return cdiv(a, b) * b
+
+
+# ---------------------------------------------------------------------------
+# structural launch accounting
+# ---------------------------------------------------------------------------
+
+
+def _subjaxprs(value):
+    """Yield any jaxprs hiding inside an eqn param value."""
+    if hasattr(value, "jaxpr"):          # ClosedJaxpr
+        yield value.jaxpr
+    elif hasattr(value, "eqns"):         # raw Jaxpr
+        yield value
+    elif isinstance(value, (list, tuple)):
+        for v in value:
+            yield from _subjaxprs(v)
+
+
+def _count_launches(jaxpr, mult: int) -> int:
+    total = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            total += mult
+        inner_mult = mult
+        if eqn.primitive.name == "scan":
+            inner_mult = mult * eqn.params.get("length", 1)
+        for value in eqn.params.values():
+            for sub in _subjaxprs(value):
+                total += _count_launches(sub, inner_mult)
+    return total
+
+
+def pallas_launch_count(fn, *args, **kwargs) -> int:
+    """Number of pallas_call launches ``fn(*args)`` issues at runtime.
+
+    Traverses the jaxpr, multiplying launches under ``lax.scan`` by the trip
+    count — the structural proof behind "1 launch vs T" claims (a scanned
+    per-step kernel traces once but launches T times)."""
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+    return _count_launches(closed.jaxpr, 1)

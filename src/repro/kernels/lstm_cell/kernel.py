@@ -1,15 +1,28 @@
-"""Fused LSTM recurrent step as a Pallas TPU kernel.
+"""Fused LSTM recurrence as Pallas TPU kernels.
 
-SHARP's three pipeline stages (Compute Unit -> A-MFU -> Cell Updater)
-collapse into one VMEM-resident kernel: the recurrent MVM U·h accumulates in
-a VMEM scratch tile, and on the last reduction step the gate activations and
-the cell/hidden update run as the epilogue on the same tile — the TPU
-analogue of SHARP's "output-based tiling" (no HBM round-trip between the
-MVM, activation and update stages).
+Two granularities live here:
 
+``lstm_cell_pallas`` — ONE recurrent step.  SHARP's three pipeline stages
+(Compute Unit -> A-MFU -> Cell Updater) collapse into one VMEM-resident
+kernel: the recurrent MVM U·h accumulates in a VMEM scratch tile, and on the
+last reduction step the gate activations and the cell/hidden update run as
+the epilogue on the same tile — the TPU analogue of SHARP's "output-based
+tiling" (no HBM round-trip between the MVM, activation and update stages).
 Grid: (j over H output columns, k over H reduction rows); k innermost so the
 accumulator tile is revisited.  Block shapes come from the autotune table
 (core.tiling.select_block_shape), mirroring the paper's per-model K-width.
+
+``lstm_seq_pallas`` — the WHOLE sequence.  The per-step kernel still pays T
+kernel launches and T HBM round-trips of (h, c) when driven by ``lax.scan``;
+SHARP's point (§5, Fig. 8.d) is that the recurrent state should stay
+resident while timesteps stream through the datapath.  Here the time loop
+moves *inside* a single ``pallas_call``: the grid's innermost dimension
+walks T-blocks, the precomputed input half ``xw[:, t]`` streams in stripe by
+stripe via the BlockSpec index map, and (h, c) live in VMEM scratch that
+persists across grid steps — state never touches HBM between timesteps.  A
+leading grid dimension ``g`` batches independent recurrences (distinct U per
+cell), which is what the wavefront multi-layer schedule packs an
+anti-diagonal of (layer, time-chunk) cells into.
 """
 from __future__ import annotations
 
@@ -90,3 +103,102 @@ def lstm_cell_pallas(U4, xw_t, h_prev, c_prev, *, block_h: int, block_k: int,
         interpret=interpret,
     )(h_prev, U4, xw_t, c_prev)
     return h_out, c_out
+
+
+# ===========================================================================
+# sequence-fused kernel: time loop inside ONE pallas_call
+# ===========================================================================
+
+
+def _seq_kernel(xw_ref, u_ref, h0_ref, c0_ref, hs_ref, hn_ref, cn_ref,
+                h_scr, c_scr, *, block_t: int, T: int):
+    """One grid step = one T-block of one recurrence ``g``.
+
+    Grid is (G, n_t) with t innermost; (h, c) persist in VMEM scratch across
+    the t walk and are re-seeded from (h0, c0) at each cell's first block.
+    """
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _seed():
+        h_scr[...] = h0_ref[0].astype(jnp.float32)
+        c_scr[...] = c0_ref[0].astype(jnp.float32)
+
+    U = u_ref[0]                      # (H, 4, H) — resident across the walk
+    H = U.shape[0]
+    U2 = U.reshape(H, 4 * H)
+    xw_blk = xw_ref[0]                # (B, block_t, 4, H) — streamed stripe
+    B = xw_blk.shape[0]
+    base = t * block_t
+
+    def step(i, carry):
+        h, c, ys = carry
+        xw_t = jax.lax.dynamic_index_in_dim(xw_blk, i, axis=1,
+                                            keepdims=False)  # (B, 4, H)
+        gates = xw_t.astype(jnp.float32) + jax.lax.dot_general(
+            h, U2, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ).reshape(B, 4, H)
+        ig = jax.nn.sigmoid(gates[:, 0])
+        fg = jax.nn.sigmoid(gates[:, 1])
+        gg = jnp.tanh(gates[:, 2])
+        og = jax.nn.sigmoid(gates[:, 3])
+        c_new = fg * c + ig * gg
+        h_new = og * jnp.tanh(c_new)
+        # T-edge mask: the last block's tail reads BlockSpec padding
+        # (undefined, NaN under interpret) — freeze the state there
+        valid = base + i < T
+        h = jnp.where(valid, h_new, h)
+        c = jnp.where(valid, c_new, c)
+        ys = jax.lax.dynamic_update_index_in_dim(ys, h, i, axis=1)
+        return h, c, ys
+
+    ys0 = jnp.zeros((B, block_t, H), jnp.float32)
+    h, c, ys = jax.lax.fori_loop(
+        0, block_t, step, (h_scr[...], c_scr[...], ys0))
+    h_scr[...] = h
+    c_scr[...] = c
+    hs_ref[0] = ys.astype(hs_ref.dtype)
+    hn_ref[0] = h.astype(hn_ref.dtype)
+    cn_ref[0] = c
+
+
+def lstm_seq_pallas(U4, xw, h0, c0, *, block_t: int, interpret: bool = True):
+    """Sequence-fused LSTM recurrence — ONE kernel launch for all T steps.
+
+    U4 (G,H,4,H); xw (G,B,T,4,H) precomputed input half (+bias);
+    h0 (G,B,H); c0 (G,B,H).  Returns (hs (G,B,T,H), h_T (G,B,H),
+    c_T (G,B,H)).  ``G`` batches independent recurrences (e.g. the cells of
+    one wavefront slot); pass G=1 for a single layer.
+    """
+    G, B, T, _, H = xw.shape
+    bt = max(1, min(block_t, T))
+    n_t = cdiv(T, bt)
+
+    kernel = functools.partial(_seq_kernel, block_t=bt, T=T)
+    hs, h_n, c_n = pl.pallas_call(
+        kernel,
+        grid=(G, n_t),
+        in_specs=[
+            pl.BlockSpec((1, B, bt, 4, H), lambda g, t: (g, 0, t, 0, 0)),  # xw
+            pl.BlockSpec((1, H, 4, H), lambda g, t: (g, 0, 0, 0)),         # U4
+            pl.BlockSpec((1, B, H), lambda g, t: (g, 0, 0)),               # h0
+            pl.BlockSpec((1, B, H), lambda g, t: (g, 0, 0)),               # c0
+        ],
+        out_specs=[
+            pl.BlockSpec((1, B, bt, H), lambda g, t: (g, 0, t, 0)),        # hs
+            pl.BlockSpec((1, B, H), lambda g, t: (g, 0, 0)),               # h_T
+            pl.BlockSpec((1, B, H), lambda g, t: (g, 0, 0)),               # c_T
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((G, B, T, H), h0.dtype),
+            jax.ShapeDtypeStruct((G, B, H), h0.dtype),
+            jax.ShapeDtypeStruct((G, B, H), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((B, H), jnp.float32),   # h — resident across t
+            pltpu.VMEM((B, H), jnp.float32),   # c — resident across t
+        ],
+        interpret=interpret,
+    )(xw, U4, h0, c0)
+    return hs, h_n, c_n

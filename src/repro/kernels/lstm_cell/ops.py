@@ -1,4 +1,4 @@
-"""Jitted public wrapper for the fused LSTM cell kernel."""
+"""Jitted public wrappers for the fused LSTM kernels (cell + sequence)."""
 from __future__ import annotations
 
 import functools
@@ -8,8 +8,8 @@ import jax.numpy as jnp
 
 from repro.core.autotune import table
 from repro.kernels.common import default_interpret, round_up
-from repro.kernels.lstm_cell.kernel import lstm_cell_pallas
-from repro.kernels.lstm_cell.ref import lstm_cell_ref
+from repro.kernels.lstm_cell.kernel import lstm_cell_pallas, lstm_seq_pallas
+from repro.kernels.lstm_cell.ref import lstm_cell_ref, lstm_seq_ref
 
 
 @functools.partial(jax.jit, static_argnames=("block_h", "block_k", "interpret"))
@@ -42,4 +42,54 @@ def as_cell_kernel(interpret: bool | None = None):
     return cell
 
 
-__all__ = ["lstm_cell", "lstm_cell_ref", "as_cell_kernel"]
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def lstm_seq(U4, xw, h0=None, c0=None, *, block_t: int = 0,
+             interpret: bool | None = None):
+    """Sequence-fused recurrence: ONE pallas_call for the whole T walk.
+
+    U4 (H,4,H) or, for a batch of G independent cells, (G,H,4,H); xw
+    (B,T,4,H) / (G,B,T,4,H) precomputed input half; h0/c0 optional (…B,H)
+    initial state (zeros when omitted).  Returns (hs, h_T, c_T); ``hs`` is
+    (…B,T,H).  ``block_t`` (the streamed T-stripe) defaults to the autotune
+    table's VMEM-budget choice."""
+    stacked = xw.ndim == 5
+    if not stacked:
+        U4, xw = U4[None], xw[None]
+        if h0 is not None:
+            h0, c0 = h0[None], c0[None]
+    G, B, T, _, H = xw.shape
+    if h0 is None:
+        h0 = jnp.zeros((G, B, H), xw.dtype)
+        c0 = jnp.zeros((G, B, H), jnp.float32)
+    if T == 0:  # degenerate empty sequence: state passes through
+        hs = jnp.zeros((G, B, 0, H), h0.dtype)
+        return (hs, h0, c0.astype(jnp.float32)) if stacked else \
+            (hs[0], h0[0], c0[0].astype(jnp.float32))
+    if not block_t:
+        block_t = table().seq_block(T, B, H)
+    if interpret is None:
+        interpret = default_interpret()
+    hs, h_n, c_n = lstm_seq_pallas(U4, xw, h0, c0, block_t=block_t,
+                                   interpret=interpret)
+    if not stacked:
+        hs, h_n, c_n = hs[0], h_n[0], c_n[0]
+    return hs, h_n, c_n
+
+
+def as_seq_kernel(interpret: bool | None = None, block_t: int = 0):
+    """Adapter for core.schedules.run_layer_fused / core.unfolded.unfold.
+
+    Schedules store U as (H, 4H) gate-major and the hoisted input half as
+    (B, T, 4H); the kernel wants the gate axis unpacked to (4, H)."""
+
+    def seq(U, xw, h0=None, c0=None):
+        H = U.shape[0]
+        B, T = xw.shape[0], xw.shape[1]
+        return lstm_seq(U.reshape(H, 4, H), xw.reshape(B, T, 4, H), h0, c0,
+                        block_t=block_t, interpret=interpret)
+
+    return seq
+
+
+__all__ = ["lstm_cell", "lstm_cell_ref", "as_cell_kernel",
+           "lstm_seq", "lstm_seq_ref", "as_seq_kernel"]

@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the fused LSTM recurrent step."""
+"""Pure-jnp oracles for the fused LSTM kernels (single step + sequence)."""
 import jax
 import jax.numpy as jnp
 
@@ -15,3 +15,21 @@ def lstm_cell_ref(U4, xw_t, h_prev, c_prev):
     c = f * c_prev.astype(jnp.float32) + i * g
     h = o * jnp.tanh(c)
     return h.astype(h_prev.dtype), c
+
+
+def lstm_seq_ref(U4, xw, h0, c0):
+    """Scan-based oracle for the sequence-fused kernel.
+
+    U4 (H,4,H) or (G,H,4,H); xw (B,T,4,H) or (G,B,T,4,H); h0/c0 (…B,H).
+    Returns (hs (…B,T,H), h_T (…B,H), c_T (…B,H))."""
+    if xw.ndim == 5:
+        return jax.vmap(lstm_seq_ref)(U4, xw, h0, c0)
+
+    def step(carry, xw_t):
+        h, c = carry
+        h, c = lstm_cell_ref(U4, xw_t, h, c)
+        return (h, c), h
+
+    (h_n, c_n), hs = jax.lax.scan(
+        step, (h0, c0.astype(jnp.float32)), xw.swapaxes(0, 1))
+    return hs.swapaxes(0, 1), h_n, c_n

@@ -11,6 +11,13 @@ Mechanics:
   * Admission: a free slot gets the next queued request; its prompt runs as
     a single-request prefill whose cache rows are spliced into the batch
     cache (slot-local positions via the per-slot ``idx`` cursor).
+  * Prefill is *bucketed*: the jitted prefill only ever sees power-of-two
+    prompt lengths (the largest bucket <= the prompt), so XLA compiles once
+    per bucket instead of once per unique prompt length; the remainder
+    tokens run through the single-token decode step (compiled once for the
+    batch-1 admission shape, separate from the batched tick's compile).
+    Chunked prefill + decode is positionally identical to a full prefill
+    (causal attention / per-step recurrent updates), so results are exact.
   * Every engine tick decodes ALL active slots in one batched serve_step;
     finished slots (EOS or max_new_tokens) free immediately.
 Greedy sampling by default; temperature optional.
@@ -60,6 +67,8 @@ class ServingEngine:
         self._prefill = jax.jit(
             lambda p, t: tf.prefill(cfg, p, {"tokens": t}, seq_len=max_seq))
 
+        self.prefill_lengths: set = set()  # distinct jitted prefill shapes
+
         self.queue: List[Request] = []
         self.slots: List[Optional[Request]] = [None] * max_batch
         self.generated: List[List[int]] = [[] for _ in range(max_batch)]
@@ -69,6 +78,8 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
+        if len(req.tokens) == 0:
+            raise ValueError(f"request {req.uid}: empty prompt")
         self.queue.append(req)
 
     def _splice_cache(self, slot: int, req_cache):
@@ -85,14 +96,32 @@ class ServingEngine:
         idx = self.cache["idx"].at[slot].set(req_cache["idx"][0])
         self.cache = {"layers": layers, "idx": idx}
 
+    def _prefill_bucketed(self, tokens):
+        """Prefill a (1, L) prompt with a bucketed compile footprint.
+
+        The jitted prefill runs on the largest power-of-two prefix b <= L
+        (one compile per bucket, ever); the L - b remainder tokens advance
+        through the single-token decode path (one extra compile for the
+        batch-1 shape).  Returns (last_token_logits (1, V), cache)."""
+        L = tokens.shape[1]
+        bucket = 1 << (L.bit_length() - 1)  # largest power of two <= L
+        self.prefill_lengths.add(bucket)
+        logits, cache = self._prefill(self.params, tokens[:, :bucket])
+        last = logits[:, -1]
+        for t in range(bucket, L):
+            step_logits, cache = self._decode(
+                self.params, cache, tokens[:, t:t + 1])
+            last = step_logits[:, -1]
+        return last, cache
+
     def _admit(self):
         for slot in range(self.max_batch):
             if self.slots[slot] is None and self.queue:
                 req = self.queue.pop(0)
                 tokens = jnp.asarray(req.tokens, jnp.int32)[None]
-                logits, req_cache = self._prefill(self.params, tokens)
+                logits, req_cache = self._prefill_bucketed(tokens)
                 self._splice_cache(slot, req_cache)
-                nxt = self._sample(logits[:, -1])
+                nxt = self._sample(logits)
                 self.slots[slot] = req
                 self.generated[slot] = [int(nxt[0])]
                 self.last_token[slot, 0] = int(nxt[0])

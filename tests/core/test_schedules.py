@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._hyp import given, settings, st
 
 from repro.configs.sharp_lstm import reduced
 from repro.core import schedules as sch
@@ -67,6 +67,49 @@ def test_bidirectional_stack():
     for s in sch.SCHEDULES:
         np.testing.assert_allclose(np.asarray(sch.run_stack(stack, xs, s)),
                                    np.asarray(ref), atol=1e-5)
+
+
+def test_fused_layer_matches_reference():
+    """The sequence-fused Pallas path (one launch) == ground truth."""
+    params, xs = _mk(2, 9, 48)
+    out = sch.run_layer(params, xs, "fused", interpret=True)
+    ref = reference_unroll(params, xs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+
+@pytest.mark.parametrize("T,block_t", [(1, 0), (7, 3), (11, 4), (12, 16)])
+def test_wavefront_matches_unfolded(T, block_t):
+    """Stack-level equivalence: L+nk-1 anti-diagonal slots == serial L·T."""
+    cfg = reduced()
+    stack = init_lstm_stack(jax.random.PRNGKey(0), cfg, jnp.float32)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (2, T, cfg.lstm_input)) * 0.5
+    ref = sch.run_stack(stack, xs, "unfolded")
+    out = sch.run_stack(stack, xs, "wavefront", block_t=block_t,
+                        interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+
+def test_wavefront_slot_launch_count():
+    """A wavefront stack issues exactly L + ceil(T/bt) - 1 fused launches —
+    one G-batched kernel per anti-diagonal slot."""
+    from repro.kernels.common import pallas_launch_count
+    cfg = reduced()
+    L, T, bt = cfg.n_layers, 12, 4
+    stack = init_lstm_stack(jax.random.PRNGKey(0), cfg, jnp.float32)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (2, T, cfg.lstm_input)) * 0.5
+    n = pallas_launch_count(
+        lambda s, x: sch.run_stack(s, x, "wavefront", block_t=bt,
+                                   interpret=True), stack, xs)
+    assert n == sch.wavefront_slots(L, T, bt) == L + T // bt - 1
+
+
+def test_wavefront_bidirectional_falls_back():
+    cfg = dataclasses.replace(reduced(), bidirectional=True)
+    stack = init_lstm_stack(jax.random.PRNGKey(0), cfg, jnp.float32)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (2, 7, cfg.lstm_hidden)) * 0.5
+    ref = sch.run_stack(stack, xs, "intergate")
+    out = sch.run_stack(stack, xs, "wavefront", block_t=4, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
 
 
 def test_unfolded_hoists_input_gemm():

@@ -2,10 +2,11 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._hyp import given, settings, st
 
 from repro.core.tiling import (K_CHOICES, TileConfig, block_waste, mvm_cycles,
-                               padding_waste, select_block_shape, select_tile)
+                               padding_waste, select_block_shape,
+                               select_time_block, select_tile)
 
 
 @settings(max_examples=50, deadline=None)
@@ -60,3 +61,31 @@ def test_block_shape_constraints(m, n):
 def test_block_shape_prefers_zero_waste():
     bm, bn = select_block_shape(1024, 4096)
     assert 1024 % bm == 0 and 4096 % bn == 0  # divisible dims -> no waste
+
+
+def test_block_shape_selection_is_cached():
+    """The exploration used to re-run on every hot-path layer call."""
+    select_block_shape.cache_clear()
+    select_block_shape(300, 700)
+    hits = select_block_shape.cache_info().hits
+    select_block_shape(300, 700)
+    assert select_block_shape.cache_info().hits == hits + 1
+
+
+def test_select_time_block():
+    assert select_time_block(1, 1, 96) == 1
+    bt = select_time_block(64, 4, 256)
+    assert 1 <= bt <= 64 and 64 % bt == 0   # zero T-edge waste is available
+    assert select_time_block(7, 2, 96) == 7  # exact fit beats padded stripes
+    # huge H: U alone blows the budget -> degenerate single-step stripe
+    assert select_time_block(64, 8, 2048) == 1
+
+
+@settings(max_examples=30, deadline=None)
+@given(T=st.integers(1, 300), B=st.integers(1, 8),
+       H=st.sampled_from([32, 96, 256, 1024]))
+def test_time_block_constraints(T, B, H):
+    bt = select_time_block(T, B, H)
+    assert 1 <= bt <= T
+    if bt > 1:  # within the fused kernel's VMEM budget
+        assert 4 * (4 * H * H + B * bt * 5 * H + 4 * B * H) <= 8 * 2**20

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._hyp import given, settings, st
 
 from repro.kernels.lstm_cell.ops import lstm_cell
 from repro.kernels.lstm_cell.ref import lstm_cell_ref

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._hyp import given, settings, st
 
 from repro.kernels.rglru.ops import rglru_scan
 from repro.kernels.rglru.ref import rglru_scan_ref

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._hyp import given, settings, st
 
 from repro.models.layers import attention as at
 from repro.models.layers.rope import apply_rope, mrope_angles, rope_angles

@@ -1,0 +1,32 @@
+"""Smoke-run the kernel benchmark suite: ``benchmarks/run.py --suite
+kernels`` must execute end-to-end, write BENCH_kernels.json, and show the
+sequence-fused LSTM path beating the per-step Pallas path on the CPU-oracle
+metric — the perf trajectory this repo accumulates from PR 1 on."""
+import json
+import os
+import subprocess
+import sys
+
+from tests.conftest import REPO_ROOT, SRC
+
+
+def test_kernel_suite_writes_json(tmp_path):
+    out = tmp_path / "BENCH_kernels.json"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO_ROOT, "benchmarks", "run.py"),
+         "--suite", "kernels", "--json", str(out)],
+        cwd=REPO_ROOT, env=env, capture_output=True, text=True, timeout=560)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+
+    data = json.loads(out.read_text())
+    assert data["suite"] == "kernels"
+    rows = {r["name"]: r for r in data["rows"]}
+    assert "kernel/lstm_seq/fused_pallas" in rows
+    assert "kernel/lstm_seq/per_step_pallas" in rows
+    # the tentpole claim, measured: 1 launch beats T launches
+    assert "launches=1" in rows["kernel/lstm_seq/fused_pallas"]["derived"]
+    fused = rows["kernel/lstm_seq/fused_pallas"]["us_per_call"]
+    per_step = rows["kernel/lstm_seq/per_step_pallas"]["us_per_call"]
+    assert fused < per_step, (fused, per_step)

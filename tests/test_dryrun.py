@@ -6,7 +6,7 @@ import sys
 
 import pytest
 
-from conftest import REPO_ROOT, subprocess_env
+from tests.conftest import REPO_ROOT, subprocess_env
 
 
 @pytest.mark.parametrize("arch,shape", [

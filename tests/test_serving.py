@@ -51,6 +51,29 @@ def test_eos_stops_generation():
     assert done[0].tokens == ref[:3]
 
 
+def test_prefill_buckets_bound_compiles():
+    """Many distinct prompt lengths -> prefill only ever sees power-of-two
+    bucket lengths, so XLA compiles once per bucket, not once per length."""
+    cfg = get_reduced("starcoder2-3b")
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    lengths = [3, 5, 6, 7, 9, 11, 13]
+    engine = ServingEngine(cfg, params, max_batch=2, max_seq=64)
+    prompts = {}
+    for uid, n in enumerate(lengths):
+        prompts[uid] = rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+        engine.submit(Request(uid=uid, tokens=prompts[uid], max_new_tokens=4))
+    done = engine.run_to_completion()
+    assert len(done) == len(lengths)
+    # 7 distinct lengths collapse to buckets {2, 4, 8}
+    assert engine.prefill_lengths == {2, 4, 8}
+    assert all((b & (b - 1)) == 0 for b in engine.prefill_lengths)
+    # bucketed chunked prefill stays exact vs the full-prompt reference
+    for c in done:
+        ref = _reference_greedy(cfg, params, prompts[c.uid], 4)
+        assert c.tokens == ref, (c.uid, c.tokens, ref)
+
+
 def test_slots_are_reused():
     cfg = get_reduced("starcoder2-3b")
     params = tf.init_params(cfg, jax.random.PRNGKey(0))

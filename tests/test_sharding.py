@@ -7,7 +7,7 @@ import textwrap
 
 import pytest
 
-from conftest import REPO_ROOT, subprocess_env
+from tests.conftest import REPO_ROOT, subprocess_env
 
 
 def _run(code: str, n_devices: int = 8):
