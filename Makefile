@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test bench-kernels bench
+.PHONY: test bench-kernels bench-dispatch bench
 
 test:
 	$(PY) -m pytest -x -q
@@ -11,6 +11,11 @@ test:
 # cross-PR perf trajectory).
 bench-kernels:
 	$(PY) benchmarks/run.py --suite kernels
+
+# Tile-dispatcher suite; writes BENCH_dispatch.json (committed — packed
+# vs per-request launch counts + oracle latency).
+bench-dispatch:
+	$(PY) benchmarks/run.py --suite dispatch
 
 bench:
 	$(PY) benchmarks/run.py

@@ -15,7 +15,7 @@ import sys
 
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 
-SUITES = ("all", "kernels", "tables")
+SUITES = ("all", "kernels", "tables", "dispatch")
 
 
 def main() -> None:
@@ -36,6 +36,7 @@ def main() -> None:
                      "derived": derived})
         print(f"{name},{us_per_call:.2f},{derived}", flush=True)
 
+    import dispatch_bench
     import kernel_bench
     import paper_tables
 
@@ -45,6 +46,8 @@ def main() -> None:
         benches += list(paper_tables.ALL)
     if args.suite in ("all", "kernels"):
         benches.append(kernel_bench.kernels)
+    if args.suite in ("all", "dispatch"):
+        benches.append(dispatch_bench.dispatch)
     for fn in benches:
         if args.only and args.only not in fn.__name__:
             continue

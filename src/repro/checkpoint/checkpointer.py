@@ -45,7 +45,7 @@ class Checkpointer:
         self.wait()  # double-buffer: at most one in-flight save
         leaves, treedef = jax.tree.flatten(tree)
         host_leaves = [np.asarray(x) for x in leaves]  # snapshot now
-        paths = jax.tree.flatten_with_path(tree)[0]
+        paths = jax.tree_util.tree_flatten_with_path(tree)[0]
         names = ["/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in p)
                  for p, _ in paths]
 

@@ -45,11 +45,14 @@ class ConfigTable:
             self._blocks[key] = select_block_shape(m, n, **kw)
         return self._blocks[key]
 
-    def seq_block(self, T: int, B: int, H: int, **kw) -> int:
-        """T-block for the sequence-fused LSTM kernel."""
-        key = f"{T}x{B}x{H}"
+    def seq_block(self, T: int, B: int, H: int, *, gates: int = 4, **kw) -> int:
+        """T-block for the sequence-fused recurrent kernels (LSTM: gates=4,
+        GRU: gates=3).  Keys for gates=4 stay unsuffixed so persisted PR-1
+        tables remain valid."""
+        key = f"{T}x{B}x{H}" if gates == 4 else f"{T}x{B}x{H}g{gates}"
         if key not in self._seq_blocks:
-            self._seq_blocks[key] = select_time_block(T, B, H, **kw)
+            self._seq_blocks[key] = select_time_block(T, B, H, gates=gates,
+                                                      **kw)
         return self._seq_blocks[key]
 
     def save(self):

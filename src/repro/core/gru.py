@@ -10,6 +10,12 @@ serial.  The schedules below mirror core/schedules.py and are numerically
 equivalent (property-tested); the perf-model hook exposes the (slightly
 smaller) Unfolded win the paper predicts for GRU.
 
+``fused`` goes one further (mirroring core/schedules.py): the recurrent
+scan itself moves inside ONE Pallas kernel launch (kernels.gru_cell), with
+h resident in VMEM scratch for all T steps and the hoisted xw streamed in
+T-block stripes — the per-step dispatch and the state HBM round-trip both
+disappear, which is what lets the tile dispatcher plan GRU items.
+
 Gate order along the 3H axis: (z, r, n).
 """
 from __future__ import annotations
@@ -19,7 +25,7 @@ import jax.numpy as jnp
 
 from repro.models.layers.common import dense_init
 
-SCHEDULES = ("sequential", "intergate", "unfolded")
+SCHEDULES = ("sequential", "intergate", "unfolded", "fused")
 
 
 def init_gru_layer(key, x_dim: int, hidden: int, dtype):
@@ -29,6 +35,18 @@ def init_gru_layer(key, x_dim: int, hidden: int, dtype):
         "U": dense_init(k2, (hidden, 3 * hidden), dtype),
         "b": jnp.zeros((3 * hidden,), dtype),
     }
+
+
+def init_gru_stack(key, x_dim: int, hidden: int, n_layers: int, dtype):
+    """Multi-layer GRU stack params, shaped like models.layers.lstm's
+    ``init_lstm_stack`` ({"layers": [...]}) so the dispatcher can treat
+    LSTM and GRU stacks uniformly."""
+    layers = []
+    for i in range(n_layers):
+        key, sub = jax.random.split(key)
+        layers.append(init_gru_layer(sub, x_dim if i == 0 else hidden,
+                                     hidden, dtype))
+    return {"layers": layers}
 
 
 def _gates(xw, hu, H):
@@ -112,12 +130,29 @@ def run_layer_unfolded(params, xs):
     return hs.swapaxes(0, 1)
 
 
+def run_layer_fused(params, xs, block_t: int = 0, interpret=None,
+                    return_state: bool = False):
+    """Sequence-fused schedule: the whole GRU recurrence in ONE kernel
+    launch — the lstm_seq T-stripe pattern ported to the 3-gate cell.
+    ``return_state``: also return the exact t=T hidden state."""
+    from repro.kernels.gru_cell.ops import gru_seq
+
+    B, T, X = xs.shape
+    H = params["U"].shape[0]
+    xw = (jnp.einsum("btx,xg->btg", xs, params["W"])
+          + params["b"]).reshape(B, T, 3, H)
+    hs, h_n = gru_seq(params["U"].reshape(H, 3, H), xw, block_t=block_t,
+                      interpret=interpret)
+    hs = hs.astype(xs.dtype)
+    return (hs, h_n.astype(xs.dtype)) if return_state else hs
+
+
 _FNS = {"sequential": run_layer_sequential, "intergate": run_layer_intergate,
-        "unfolded": run_layer_unfolded}
+        "unfolded": run_layer_unfolded, "fused": run_layer_fused}
 
 
-def run_layer(params, xs, schedule: str = "unfolded"):
-    return _FNS[schedule](params, xs)
+def run_layer(params, xs, schedule: str = "unfolded", **kw):
+    return _FNS[schedule](params, xs, **kw)
 
 
 # --- perf-model hook (3 gates instead of 4; tail has no cell state) --------
@@ -127,11 +162,8 @@ def gru_step_cycles(H: int, X: int, design) -> float:
     """Critical-path cycles per GRU step under the SHARP model."""
     import math
 
-    from repro.core.perfmodel import ACT_LAT
+    from repro.core.perfmodel import ACT_LAT, _tile_for
     from repro.core.tiling import mvm_cycles
-
-    tile = design_tile = None
-    from repro.core.perfmodel import _tile_for
 
     tile = _tile_for(design, 3 * H, max(H, X))
     rc = design.reconfigure

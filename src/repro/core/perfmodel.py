@@ -130,6 +130,65 @@ def energy_j(cfg: ModelConfig, T: int, design: Design,
 
 
 # ===========================================================================
+# dispatch-plan scoring (repro.dispatch planner)
+# ===========================================================================
+
+# Fixed cost charged per kernel launch (dispatch + state HBM round-trip) —
+# the cycle-model analogue of what the sequence-fused kernels eliminate.
+# Calibrated coarse: a launch is worth a few hundred retired tiles.
+LAUNCH_CYCLES = 400
+
+
+def recurrent_step_cycles(family: str, H: int, X: int, design: Design) -> float:
+    """Per-step critical-path cycles of one recurrent cell under the design's
+    schedule, per family.  RG-LRU has no recurrent MVM (diagonal recurrence):
+    its step is the pointwise tail only."""
+    if family == "lstm":
+        return step_cycles(H, X, design)
+    if family == "gru":
+        from repro.core.gru import gru_step_cycles
+
+        return gru_step_cycles(H, X, design)
+    if family == "rglru":
+        return ACT_LAT + math.ceil(H / max(design.k or 64, 1))
+    raise ValueError(family)
+
+
+def stack_plan_cycles(family: str, H: int, X: int, T: int, L: int,
+                      design: Design, *, nk: int,
+                      launch_cycles: float = LAUNCH_CYCLES) -> float:
+    """Wall-clock cycle estimate of running an L-layer stack over T steps as
+    an (L x nk) wavefront of time-chunks (nk=1 == the per-layer fused path).
+
+    Slot s holds up to min(L, nk) cells which execute *concurrently* on the
+    tile engine (one G-batched launch), so the wall is the slot count times
+    one chunk's serial cost, plus the per-launch overhead — the quantity the
+    planner minimizes when it chooses a schedule and T-striping per item.
+    """
+    nk = max(1, min(nk, T)) if T else 1
+    bt = -(-T // nk) if T else 0
+    per0 = recurrent_step_cycles(family, H, X, design)
+    per = recurrent_step_cycles(family, H, H, design) if L > 1 else per0
+    # a slot's serial cost is one chunk through one (average) layer: the
+    # wave mixes layer-0 and deeper cells, so charge the stack's per-layer
+    # mean — this also keeps nk=1 exactly equal to per_step's compute
+    # (same work, L launches instead of L·T)
+    slot_cost = bt * (per0 + (L - 1) * per) / L
+    slots = L + nk - 1
+    return slots * slot_cost + slots * launch_cycles
+
+
+def per_step_plan_cycles(family: str, H: int, X: int, T: int, L: int,
+                         design: Design, *,
+                         launch_cycles: float = LAUNCH_CYCLES) -> float:
+    """Wall-clock cycle estimate of the per-step fallback: every (layer,
+    timestep) cell is its own launch with its state round-tripping HBM."""
+    per0 = recurrent_step_cycles(family, H, X, design)
+    per = recurrent_step_cycles(family, H, H, design) if L > 1 else per0
+    return T * (per0 + (L - 1) * per) + L * T * launch_cycles
+
+
+# ===========================================================================
 # paper figure/table generators
 # ===========================================================================
 

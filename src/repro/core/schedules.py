@@ -171,12 +171,14 @@ def run_layer_unfolded(params, xs, cell_kernel=None):
 
 
 def run_layer_fused(params, xs, block_t: int = 0, interpret=None,
-                    seq_kernel=None):
+                    seq_kernel=None, return_state: bool = False):
     """Sequence-fused schedule: the whole recurrence in ONE kernel launch.
 
     The input half is hoisted exactly as in ``unfolded`` (routed through
     core.unfolded.unfold), but the scan is replaced by the Pallas
     sequence kernel: state stays in VMEM scratch, xw streams in T-stripes.
+    ``return_state``: also return the exact t=T (h, c) — the dispatcher's
+    serving-prefill path needs it.
     """
     from repro.kernels.lstm_cell.ops import as_seq_kernel
 
@@ -192,9 +194,9 @@ def run_layer_fused(params, xs, block_t: int = 0, interpret=None,
         hs, h_n, c_n = kern(params["U"], pre, h0, c0)
         return (h_n.astype(xs.dtype), c_n), hs.astype(xs.dtype)
 
-    _, hs = unfold(input_fn, None, xs, _init_state(B, H, xs.dtype),
-                   seq_fn=seq_fn)
-    return hs
+    state, hs = unfold(input_fn, None, xs, _init_state(B, H, xs.dtype),
+                       seq_fn=seq_fn)
+    return (hs, state) if return_state else hs
 
 
 _LAYER_FNS = {
@@ -246,6 +248,16 @@ def wavefront_slots(n_layers: int, T: int, block_t: int) -> int:
     return n_layers + cdiv(T, block_t) - 1
 
 
+def wavefront_active(s: int, n_layers: int, nk: int):
+    """Layer range [lo, hi] whose cells (l, k=s-l) are live in slot ``s``
+    of an (n_layers x nk) wavefront; empty range when s is out of bounds.
+    Shared with repro.dispatch, whose planner packs several items' cells
+    into one global slot timeline."""
+    lo = max(0, s - nk + 1)
+    hi = min(n_layers - 1, s)
+    return lo, hi
+
+
 def run_stack_wavefront(stack_params, xs, block_t: int = 0, interpret=None):
     """Wavefront schedule: cell (l, k) = layer l over time-chunk k runs in
     slot s = l + k; every slot's cells (a contiguous run of layers) execute
@@ -274,8 +286,7 @@ def run_stack_wavefront(stack_params, xs, block_t: int = 0, interpret=None):
     outs = [[None] * nk for _ in range(L)]  # (B, bt, H) chunks
 
     for s in range(L + nk - 1):
-        lo = max(0, s - nk + 1)
-        hi = min(L - 1, s)
+        lo, hi = wavefront_active(s, L, nk)
         # input halves for this slot's cells: layer l consumes the chunk the
         # previous layer produced in slot s-1 (layer 0 reads the input)
         xw = []

@@ -132,30 +132,44 @@ def select_block_shape(m: int, n: int, *, vmem_budget: int = 4 * 2**20,
     return min(bm, _round_up(m, SUBLANE)), min(bn, _round_up(n, LANE))
 
 
+SEQ_VMEM_BUDGET = 8 * 2**20  # working-set bound for the sequence kernels
+
+
+def seq_block_footprint(bt: int, B: int, H: int, *, gates: int = 4,
+                        bytes_per_el: int = 4) -> int:
+    """VMEM working set of one sequence-kernel grid step at T-stripe ``bt``:
+    resident U (gates·H²) + streamed xw stripe (B·bt·gates·H) + hs stripe
+    (B·bt·H) + state/seed tiles (≤4·B·H)."""
+    return bytes_per_el * (gates * H * H + B * bt * (gates + 1) * H
+                           + 4 * B * H)
+
+
 @functools.lru_cache(maxsize=None)
-def select_time_block(T: int, B: int, H: int, *, vmem_budget: int = 8 * 2**20,
-                      bytes_per_el: int = 4,
+def select_time_block(T: int, B: int, H: int, *,
+                      vmem_budget: int = SEQ_VMEM_BUDGET,
+                      bytes_per_el: int = 4, gates: int = 4,
                       bt_choices: Sequence[int] = (1, 2, 4, 8, 16, 32, 64,
                                                    128, 256),
                       ) -> int:
-    """T-block for the sequence-fused LSTM kernel (kernels.lstm_cell).
+    """T-block for the sequence-fused recurrent kernels (kernels.lstm_cell,
+    kernels.gru_cell).
 
     The kernel's VMEM working set per grid step is the resident recurrent
-    weight U (4H²), the streamed xw stripe (B·bt·4H), the hs output stripe
-    (B·bt·H), and the state + seed tiles (4·B·H).  Pick the bt minimizing
-    the T-edge ceil-padding waste, then the largest such bt (fewest grid
-    steps / launch amortization), under the budget — the time-axis analogue
-    of ``select_block_shape``."""
+    weight U (gates·H²), the streamed xw stripe (B·bt·gates·H), the hs
+    output stripe (B·bt·H), and the state + seed tiles (4·B·H for the LSTM's
+    (h, c), half for GRU's h-only — bounded above by the LSTM case).  Pick
+    the bt minimizing the T-edge ceil-padding waste, then the largest such
+    bt (fewest grid steps / launch amortization), under the budget — the
+    time-axis analogue of ``select_block_shape``.  ``gates`` is 4 for the
+    LSTM, 3 for GRU."""
     if T <= 0:
         return 1
-
-    def footprint(bt: int) -> int:
-        return bytes_per_el * (4 * H * H + B * bt * 5 * H + 4 * B * H)
 
     best = None
     for bt in bt_choices:
         bt = min(bt, T)
-        if bt > 1 and footprint(bt) > vmem_budget:
+        if bt > 1 and seq_block_footprint(
+                bt, B, H, gates=gates, bytes_per_el=bytes_per_el) > vmem_budget:
             continue
         waste = math.ceil(T / bt) * bt - T
         key = (round(waste / T, 6), -bt)

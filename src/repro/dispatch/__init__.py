@@ -1,0 +1,11 @@
+"""Tile dispatcher: dependency-aware dispatch runtime for recurrent stacks.
+
+See README.md in this directory for the mapping to SHARP §5–6.
+"""
+from repro.dispatch.executor import execute
+from repro.dispatch.planner import (Cell, DispatchPlan, ItemPlan, Slot,
+                                    plan)
+from repro.dispatch.workitem import WorkItem
+
+__all__ = ["WorkItem", "plan", "execute", "DispatchPlan", "ItemPlan",
+           "Slot", "Cell"]

@@ -1,0 +1,227 @@
+"""The dispatch executor: runs a DispatchPlan through the Pallas kernels.
+
+The packed slot timeline executes in order; each ``Slot`` becomes exactly
+one G-batched sequence-fused kernel launch (kernels.lstm_cell.lstm_seq or
+kernels.gru_cell.gru_seq), with each cell's hoisted input GEMM issued in
+the same slot (no recurrent dependence, so it overlaps the serial tail —
+the paper's Fig. 8.d across items as well as layers).  Per-(item, layer)
+recurrent state lives in host-side arrays between slots and inside VMEM
+scratch within a launch; the final chunk of every layer is launched at its
+true remainder length (the kernels T-edge-mask internally), so the state
+left behind after the last slot is the exact t=T state — which is what the
+serving engine splices into its decode slots.
+
+Numerics: the per-cell math inside a G-batched launch is identical to the
+G=1 launch (the kernel grid walks cells independently), so a packed plan's
+outputs match per-item execution exactly — property-tested in
+tests/dispatch/.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.dispatch.planner import DispatchPlan, ItemPlan
+from repro.dispatch.workitem import GATES
+
+
+def _hoist(layer_params, src, gates: int):
+    """One cell's input half: (B, bt, X) @ (X, gates·H) + b -> (B,bt,g,H)."""
+    B, bt, _ = src.shape
+    H = layer_params["U"].shape[0]
+    xw = (jnp.einsum("btx,xg->btg", src, layer_params["W"])
+          + layer_params["b"])
+    return xw.reshape(B, bt, gates, H)
+
+
+def execute(plan: DispatchPlan, params: Dict[int, dict],
+            inputs: Dict[int, jnp.ndarray], *,
+            interpret: Optional[bool] = None,
+            collect_state: bool = False):
+    """Run ``plan``.  params[uid] = stack params ({"layers": [...]}),
+    inputs[uid] = xs (B, T, X).  Returns outputs {uid: (B, T, H)} — or
+    (outputs, states) with states[uid] = {"h": (L,B,H)[, "c": (L,B,H)]}
+    (exact t=T recurrent state) when ``collect_state``.
+
+    ``collect_state`` reroutes unpacked (external) unidirectional items
+    through the per-layer fused path — the only surface that returns exact
+    state — so for those items the plan's per_step/per_layer launch
+    accounting describes the stateless execution, not this one.
+    """
+    from repro.core import schedules as sch
+    from repro.kernels.gru_cell.ops import gru_seq
+    from repro.kernels.lstm_cell.ops import lstm_seq
+
+    # fail fast, before any work: a plan may legitimately carry plan-only
+    # items (ItemPlan.executable == False) for admission pricing — callers
+    # filter those out before executing (see examples/dispatch_demo.py)
+    plan_only = [ip.uid for ip in plan.items if not ip.executable]
+    if plan_only:
+        raise NotImplementedError(
+            f"plan contains plan-only items (uids {plan_only}): multi-layer "
+            "rglru executes through its model, not the dispatcher — filter "
+            "by ItemPlan.executable before execute()")
+
+    outputs: Dict[int, jnp.ndarray] = {}
+    states: Dict[int, dict] = {}
+
+    # ---- external fallbacks (bidirectional / per-step / rglru / T=0) ----
+    for ip in plan.items:
+        if ip.uid not in plan.external:
+            continue
+        it = ip.item
+        xs = inputs[it.uid]
+        if it.family == "rglru":
+            outputs[it.uid] = _run_rglru(ip, xs, interpret=interpret)
+            if collect_state:
+                states[it.uid] = {}  # rglru recurrence exposes no (h, c)
+            continue
+        if collect_state and not it.bidirectional:
+            # state collection forces the per-layer fused path (the seq
+            # kernels are the only surface that returns exact t=T state)
+            outputs[it.uid], states[it.uid] = _run_stack_collect(
+                it, params[it.uid], xs, interpret=interpret)
+            continue
+        if it.family == "gru":
+            outputs[it.uid] = _run_gru_stack(ip, params[it.uid], xs,
+                                             interpret=interpret)
+        elif ip.schedule == "per_step":
+            # honest accounting: per_step really is one cell-kernel launch
+            # per (layer, step) — L·T launches, matching naive_launches
+            from repro.kernels.lstm_cell.ops import as_cell_kernel
+
+            outputs[it.uid] = sch.run_stack(
+                params[it.uid], xs, "unfolded",
+                cell_kernel=as_cell_kernel(interpret=interpret))
+        else:
+            outputs[it.uid] = sch.run_stack(params[it.uid], xs, "fused",
+                                            interpret=interpret)
+        if collect_state:
+            states[it.uid] = {}  # bidirectional: no single t=T state
+
+    # ---- packed wavefront timeline --------------------------------------
+    live: Dict[int, dict] = {}
+    for ip in plan.items:
+        if ip.uid in plan.external:
+            continue
+        it = ip.item
+        dtype = inputs[it.uid].dtype
+        live[it.uid] = {
+            "plan": ip,
+            "h": [jnp.zeros((it.B, it.H), dtype) for _ in range(it.L)],
+            "c": [jnp.zeros((it.B, it.H), jnp.float32)
+                  for _ in range(it.L)] if it.family == "lstm" else None,
+            "outs": [[None] * ip.nk for _ in range(it.L)],
+        }
+
+    for slot in plan.slots:
+        gates = GATES[slot.family]
+        xws, us, hs, cs = [], [], [], []
+        for cell in slot.cells:
+            st = live[cell.uid]
+            ip: ItemPlan = st["plan"]
+            layer = params[cell.uid]["layers"][cell.layer]
+            t0 = cell.chunk * ip.block_t
+            if cell.layer == 0:
+                src = inputs[cell.uid][:, t0:t0 + slot.chunk_len]
+            else:
+                src = st["outs"][cell.layer - 1][cell.chunk]
+            xws.append(_hoist(layer, src, gates))
+            us.append(layer["U"].reshape(slot.H, gates, slot.H))
+            hs.append(st["h"][cell.layer])
+            if slot.family == "lstm":
+                cs.append(st["c"][cell.layer])
+
+        xw = jnp.stack(xws)          # (G, B, bt, gates, H)
+        U = jnp.stack(us)            # (G, H, gates, H)
+        h0 = jnp.stack(hs)           # (G, B, H)
+        if slot.family == "lstm":
+            out, h_n, c_n = lstm_seq(U, xw, h0, jnp.stack(cs),
+                                     block_t=slot.chunk_len,
+                                     interpret=interpret)
+        else:
+            out, h_n = gru_seq(U, xw, h0, block_t=slot.chunk_len,
+                               interpret=interpret)
+            c_n = None
+
+        for g, cell in enumerate(slot.cells):
+            st = live[cell.uid]
+            st["h"][cell.layer] = h_n[g].astype(h0.dtype)
+            if c_n is not None:
+                st["c"][cell.layer] = c_n[g]
+            st["outs"][cell.layer][cell.chunk] = \
+                out[g].astype(inputs[cell.uid].dtype)
+
+    for uid, st in live.items():
+        it = st["plan"].item
+        outputs[uid] = jnp.concatenate(st["outs"][it.L - 1], axis=1)
+        if collect_state:
+            states[uid] = {"h": jnp.stack(st["h"])}
+            if st["c"] is not None:
+                states[uid]["c"] = jnp.stack(st["c"])
+
+    return (outputs, states) if collect_state else outputs
+
+
+def _run_gru_stack(ip: ItemPlan, stack, xs, *, interpret=None):
+    """GRU stack fallback (mirrors core.schedules.run_stack for GRU layers,
+    including the bidirectional fwd/bwd split)."""
+    from repro.core import gru as gru_mod
+
+    schedule = "unfolded" if ip.schedule == "per_step" else "fused"
+    kw = {} if schedule == "unfolded" else \
+        {"interpret": interpret, "block_t": ip.block_t}
+    y = xs
+    for layer in stack["layers"]:
+        if "fwd" in layer:
+            f = gru_mod.run_layer(layer["fwd"], y, schedule, **kw)
+            b = gru_mod.run_layer(layer["bwd"], jnp.flip(y, axis=1),
+                                  schedule, **kw)
+            y = jnp.concatenate([f, jnp.flip(b, axis=1)], axis=-1)
+        else:
+            y = gru_mod.run_layer(layer, y, schedule, **kw)
+    return y
+
+
+def _run_stack_collect(item, stack, xs, *, interpret=None):
+    """Unidirectional lstm/gru stack, layer by layer through the fused
+    schedule APIs (return_state=True), returning (outputs, exact t=T
+    states) — the fallback path when a caller needs state (serving
+    prefill) for an unpacked item."""
+    from repro.core import gru as gru_mod
+    from repro.core import schedules as sch
+
+    y = xs
+    hs_f, cs_f = [], []
+    for layer in stack["layers"]:
+        if item.family == "lstm":
+            y, (h_n, c_n) = sch.run_layer_fused(layer, y,
+                                                interpret=interpret,
+                                                return_state=True)
+            cs_f.append(c_n)
+        else:
+            y, h_n = gru_mod.run_layer_fused(layer, y, interpret=interpret,
+                                             return_state=True)
+        hs_f.append(h_n.astype(xs.dtype))
+    state = {"h": jnp.stack(hs_f)}
+    if cs_f:
+        state["c"] = jnp.stack(cs_f)
+    return y, state
+
+
+def _run_rglru(ip: ItemPlan, xs, *, interpret=None):
+    """rglru items execute layer-by-layer through the fused scan kernel.
+
+    The dispatcher's contract for this family is the recurrence core only
+    (the surrounding block mixing belongs to the model): inputs arrive as
+    a (log_a, gx) pair per the kernel's signature, restricted to L == 1 —
+    multi-layer rglru items are plan-only (latency/launch accounting).
+    """
+    from repro.kernels.rglru.ops import rglru_scan
+
+    log_a, gx = xs
+    B, T, W = gx.shape
+    h0 = jnp.zeros((B, W), gx.dtype)
+    hs, _ = rglru_scan(log_a, gx, h0, interpret=interpret)
+    return hs

@@ -1,0 +1,365 @@
+"""The dispatch planner: WorkItems -> an explicit, inspectable DispatchPlan.
+
+This is the software rendition of SHARP's intelligent tile-based dispatch
+(§5) plus dynamic reconfiguration (§6): for every admitted item the planner
+
+  1. *tiles* it — the paper tile-engine K for its MVMs via
+     ``core.autotune.table().tile`` (offline table, §6.2.2), the Pallas MVM
+     block via ``table().block``, and the sequence kernel's T-stripe via
+     ``table().seq_block`` (VMEM-budgeted, per gate count);
+  2. *schedules* it — scores candidate execution shapes (per-layer
+     ``fused`` = one launch per layer, ``wavefront`` = anti-diagonal
+     (layer, time-chunk) cells, ``per_step`` fallback = one launch per
+     cell) with ``core.perfmodel`` cycle estimates and picks the cheapest;
+  3. *packs* it — cells of different items that share a launch signature
+     (family, H, B, chunk length, dtype) are co-scheduled into one global
+     slot timeline, each slot one G-batched sequence-kernel launch, so
+     independent recurrences hide each other's serial dependencies.
+
+The emitted ``DispatchPlan`` is a plain ordered tuple of ``Slot``s — every
+launch the executor will make, with its tile/block configuration — so plans
+can be printed, diffed, and unit-tested for determinism and launch counts.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Sequence, Tuple
+
+from repro.core.autotune import table
+from repro.core.perfmodel import (Design, LAUNCH_CYCLES,
+                                  per_step_plan_cycles, stack_plan_cycles)
+from repro.core.schedules import wavefront_active
+from repro.core.tiling import SEQ_VMEM_BUDGET, seq_block_footprint
+from repro.dispatch.workitem import WorkItem
+from repro.kernels.common import cdiv
+
+DEFAULT_MACS = 16384  # planner's reference tile-engine budget (paper 16K)
+
+
+@dataclass(frozen=True)
+class Cell:
+    """One (item, layer, time-chunk) unit of recurrent work."""
+    uid: int
+    layer: int
+    chunk: int
+
+
+@dataclass(frozen=True)
+class Slot:
+    """One batched kernel launch: G independent cells sharing a signature.
+
+    ``wave`` is the anti-diagonal index (all of a slot's cells have
+    layer + chunk == wave for their item); slots execute in ``index``
+    order and every cell's dependencies ran in an earlier wave.
+    """
+    index: int
+    wave: int
+    family: str
+    H: int
+    B: int
+    chunk_len: int          # timesteps per cell in this launch
+    dtype: str
+    tile_k: int             # paper tile-engine K for this launch's MVMs
+    mvm_block: Tuple[int, int]  # Pallas (bk, bh) block for the cell MVM
+    cells: Tuple[Cell, ...]
+
+    @property
+    def g(self) -> int:
+        return len(self.cells)
+
+    def describe(self) -> str:
+        cells = " ".join(f"({c.uid},l{c.layer},k{c.chunk})"
+                         for c in self.cells)
+        return (f"slot {self.index:3d} wave {self.wave:3d}  "
+                f"{self.family} H{self.H} B{self.B} bt{self.chunk_len} "
+                f"K{self.tile_k} blk{self.mvm_block}  G={self.g}  {cells}")
+
+
+@dataclass(frozen=True)
+class ItemPlan:
+    """Per-item planning outcome (shape, chosen schedule, tiling)."""
+    item: WorkItem
+    schedule: str           # wavefront | fused | per_step | per_layer
+    block_t: int            # chosen T-stripe (0 for non-striped fallbacks)
+    nk: int                 # number of time chunks
+    tile_k: int
+    mvm_block: Tuple[int, int]
+    naive_launches: int     # launches if this item ran alone
+    est_cycles: float       # perfmodel score of the chosen schedule
+
+    @property
+    def uid(self) -> int:
+        return self.item.uid
+
+    @property
+    def executable(self) -> bool:
+        """False for plan-only items (priced for admission control but not
+        runnable by the executor): multi-layer rglru, whose inter-layer
+        block mixing lives outside the recurrence dispatcher."""
+        return not (self.item.family == "rglru" and self.item.L != 1)
+
+    def describe(self) -> str:
+        it = self.item
+        tag = "" if self.executable else " [plan-only]"
+        return (f"item {it.uid:3d}  {it.family} H{it.H} L{it.L} B{it.B} "
+                f"T{it.T} X{it.X} prio{it.priority}  -> {self.schedule} "
+                f"bt={self.block_t} nk={self.nk} K={self.tile_k} "
+                f"blk={self.mvm_block} launches={self.naive_launches} "
+                f"est={self.est_cycles:.0f}cy{tag}")
+
+
+@dataclass(frozen=True)
+class DispatchPlan:
+    items: Tuple[ItemPlan, ...]
+    slots: Tuple[Slot, ...]     # the packed timeline (wavefront/fused items)
+    external: Tuple[int, ...]   # uids executed outside the slot timeline
+    macs: int
+
+    def item(self, uid: int) -> ItemPlan:
+        for ip in self.items:
+            if ip.uid == uid:
+                return ip
+        raise KeyError(uid)
+
+    @property
+    def launches(self) -> int:
+        ext = sum(ip.naive_launches for ip in self.items
+                  if ip.uid in self.external)
+        return len(self.slots) + ext
+
+    @property
+    def naive_launches(self) -> int:
+        """Launch count if every item ran alone (no cross-item packing)."""
+        return sum(ip.naive_launches for ip in self.items)
+
+    @property
+    def est_cycles(self) -> float:
+        return sum(ip.est_cycles for ip in self.items)
+
+    def describe(self) -> str:
+        lines = [f"DispatchPlan: {len(self.items)} items, "
+                 f"{len(self.slots)} packed slots, {self.launches} launches "
+                 f"(naive {self.naive_launches}), macs={self.macs}"]
+        lines += [ip.describe() for ip in self.items]
+        lines += [s.describe() for s in self.slots]
+        if self.external:
+            lines.append(f"external (unpacked fallback): {self.external}")
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# per-item scheduling
+# ---------------------------------------------------------------------------
+
+
+def _chunk_lens(T: int, bt: int) -> List[int]:
+    """Chunk lengths of a T walk striped at bt (last chunk = remainder)."""
+    if T == 0:
+        return []
+    nk = cdiv(T, bt)
+    out = [bt] * (nk - 1)
+    out.append(T - (nk - 1) * bt)
+    return out
+
+
+def _item_cells(ip: ItemPlan) -> Dict[int, List[Tuple[int, Cell]]]:
+    """wave -> [(chunk_len, Cell)] for one packable item."""
+    it = ip.item
+    lens = _chunk_lens(it.T, ip.block_t)
+    nk = len(lens)
+    waves: Dict[int, List[Tuple[int, Cell]]] = {}
+    for s in range(it.L + nk - 1):
+        lo, hi = wavefront_active(s, it.L, nk)
+        for l in range(lo, hi + 1):
+            k = s - l
+            waves.setdefault(s, []).append(
+                (lens[k], Cell(uid=it.uid, layer=l, chunk=k)))
+    return waves
+
+
+def _pack(item_plans: Sequence[ItemPlan], macs: int) -> Tuple[Slot, ...]:
+    """Merge items' wavefront cells into one slot timeline.
+
+    Every slot is one G-batched launch; cells group by launch signature
+    (family, H, B, chunk_len, dtype).  Deterministic: slots ordered by
+    (wave, signature), cells within a slot by item order_key then layer.
+    """
+    by_item = [(ip, _item_cells(ip)) for ip in item_plans]
+    n_waves = max((max(w) + 1 for _, w in by_item if w), default=0)
+    slots: List[Slot] = []
+    for s in range(n_waves):
+        groups: Dict[Tuple, List[Tuple[Tuple, Cell]]] = {}
+        for ip, waves in by_item:
+            it = ip.item
+            for chunk_len, cell in waves.get(s, []):
+                sig = (it.family, it.H, it.B, chunk_len, it.dtype)
+                groups.setdefault(sig, []).append(
+                    (it.order_key() + (cell.layer,), cell))
+        for sig in sorted(groups, key=str):
+            family, H, B, chunk_len, dtype = sig
+            cells = tuple(c for _, c in sorted(groups[sig],
+                                               key=lambda kc: kc[0]))
+            # the slot's own launch shape: its in-kernel MVM is the
+            # recurrent half (H x gates·H) per cell — X-independent, so
+            # cells of different-X items share this config honestly
+            gates = {"lstm": 4, "gru": 3}.get(family, 1)
+            tile_k = table().tile(gates * H, H, macs).k if macs else 0
+            mvm_block = table().block(H, H, vmem_budget=2 * 2**20)
+            slots.append(Slot(
+                index=len(slots), wave=s, family=family, H=H, B=B,
+                chunk_len=chunk_len, dtype=dtype, tile_k=tile_k,
+                mvm_block=mvm_block, cells=cells))
+    return tuple(slots)
+
+
+def _schedule_item(it: WorkItem, macs: int, design: Design) -> ItemPlan:
+    """Tile + score one item: pick fused/wavefront striping or fallback."""
+    tile_k = table().tile(it.gates * it.H, max(it.H, it.X), macs).k
+    mvm_block = table().block(it.H, it.H, vmem_budget=2 * 2**20)
+
+    if it.family == "rglru":
+        # diagonal recurrence: one fused scan launch per recurrent layer,
+        # no cross-layer wavefront (layers are separated by block mixing
+        # that lives outside the dispatcher)
+        est = stack_plan_cycles("rglru", it.H, it.X, it.T, it.L, design, nk=1)
+        return ItemPlan(item=it, schedule="fused", block_t=it.T or 1, nk=1,
+                        tile_k=tile_k, mvm_block=mvm_block,
+                        naive_launches=it.L, est_cycles=est)
+
+    if it.bidirectional:
+        # fwd/bwd break the wavefront time alignment (core.schedules):
+        # per-layer fused fallback, 2 launches per layer
+        est = 2 * stack_plan_cycles(it.family, it.H, it.X, it.T, it.L,
+                                    design, nk=1)
+        return ItemPlan(item=it, schedule="per_layer", block_t=0, nk=1,
+                        tile_k=tile_k, mvm_block=mvm_block,
+                        naive_launches=2 * it.L, est_cycles=est)
+
+    if it.T == 0:
+        return ItemPlan(item=it, schedule="fused", block_t=1, nk=0,
+                        tile_k=tile_k, mvm_block=mvm_block,
+                        naive_launches=0, est_cycles=0.0)
+
+    bt0 = table().seq_block(it.T, it.B, it.H, gates=it.gates)
+    cands = sorted({min(it.T, bt0), min(it.T, max(1, bt0 // 2)),
+                    min(it.T, bt0 * 2), it.T})
+    # wider-than-bt0 candidates must still respect the sequence kernels'
+    # VMEM working-set bound the autotune table enforces
+    cands = [bt for bt in cands
+             if bt <= 1 or seq_block_footprint(bt, it.B, it.H,
+                                               gates=it.gates)
+             <= SEQ_VMEM_BUDGET] or [min(it.T, bt0)]
+    scored = []
+    for bt in cands:
+        nk = cdiv(it.T, bt)
+        est = stack_plan_cycles(it.family, it.H, it.X, it.T, it.L,
+                                design, nk=nk)
+        scored.append((est, -bt, bt, nk, "wavefront" if nk > 1 else "fused"))
+    est_ps = per_step_plan_cycles(it.family, it.H, it.X, it.T, it.L, design)
+    scored.append((est_ps, 0, 0, it.T, "per_step"))
+    est, _, bt, nk, sched = min(scored)
+
+    if sched == "per_step":
+        # lstm per_step runs one cell-kernel launch per (layer, step); gru
+        # has no per-step pallas kernel (pure-jnp scan -> zero launches)
+        n = it.L * it.T if it.family == "lstm" else 0
+        return ItemPlan(item=it, schedule="per_step", block_t=0, nk=it.T,
+                        tile_k=tile_k, mvm_block=mvm_block,
+                        naive_launches=n, est_cycles=est)
+    ip = ItemPlan(item=it, schedule=sched, block_t=bt, nk=nk, tile_k=tile_k,
+                  mvm_block=mvm_block, naive_launches=0, est_cycles=est)
+    return _with_naive(ip)
+
+
+def _with_naive(ip: ItemPlan) -> ItemPlan:
+    """naive_launches = this item's own slot count when packed alone."""
+    from dataclasses import replace
+
+    alone = _pack([replace(ip, naive_launches=0)], macs=0)
+    return replace(ip, naive_launches=len(alone))
+
+
+# ---------------------------------------------------------------------------
+# the planner
+# ---------------------------------------------------------------------------
+
+
+def plan(items: Iterable[WorkItem], *, macs: int = DEFAULT_MACS,
+         align_stripes: bool = True) -> DispatchPlan:
+    """Plan a batch of WorkItems into an explicit DispatchPlan.
+
+    ``align_stripes``: items that could share launches (same family/H/B/
+    dtype) re-align to a common T-stripe when the perfmodel says the
+    re-striping cost is worth the packing (scored, not assumed).
+    """
+    items = sorted(items, key=WorkItem.order_key)
+    if len({it.uid for it in items}) != len(items):
+        raise ValueError("duplicate WorkItem uids")
+    design = Design(macs=macs, schedule="unfolded")
+
+    plans = {it.uid: _schedule_item(it, macs, design) for it in items}
+
+    if align_stripes:
+        _align_group_stripes(items, plans, design)
+
+    packable, external = [], []
+    for it in items:
+        ip = plans[it.uid]
+        if ip.schedule in ("wavefront", "fused") and it.family != "rglru" \
+                and it.T > 0:
+            packable.append(ip)
+        else:
+            external.append(ip.uid)
+
+    slots = _pack(packable, macs)
+    return DispatchPlan(items=tuple(plans[it.uid] for it in items),
+                        slots=slots, external=tuple(external), macs=macs)
+
+
+def _align_group_stripes(items: Sequence[WorkItem],
+                         plans: Dict[int, ItemPlan],
+                         design: Design) -> None:
+    """Re-stripe packable same-signature items to one shared block_t.
+
+    Candidate stripes are the members' chosen ones; each candidate is
+    scored as the group's summed perfmodel cycles MINUS a launch credit
+    for the cells that would merge into shared launches under that stripe
+    (computed by actually packing the trial plans) — so the planner only
+    re-stripes when the dependency structure genuinely lets items hide
+    each other's launches."""
+    from dataclasses import replace
+
+    groups: Dict[Tuple, List[WorkItem]] = {}
+    for it in items:
+        ip = plans[it.uid]
+        if ip.schedule in ("wavefront", "fused") and it.family != "rglru" \
+                and it.T > 0 and not it.bidirectional:
+            groups.setdefault((it.family, it.H, it.B, it.dtype), []).append(it)
+
+    def trial_plans(members, bt):
+        out = []
+        for m in members:
+            mbt = min(bt, m.T) if bt else plans[m.uid].block_t
+            nk = cdiv(m.T, mbt)
+            est = stack_plan_cycles(m.family, m.H, m.X, m.T, m.L, design,
+                                    nk=nk)
+            out.append(replace(plans[m.uid], block_t=mbt, nk=nk,
+                               schedule="wavefront" if nk > 1 else "fused",
+                               est_cycles=est))
+        return out
+
+    def group_cost(trial):
+        naive = sum(len(_pack([t], 0)) for t in trial)
+        packed = len(_pack(trial, 0))
+        return (sum(t.est_cycles for t in trial)
+                - LAUNCH_CYCLES * (naive - packed))
+
+    for sig, members in groups.items():
+        if len(members) < 2:
+            continue
+        # bt=0 keeps every member's own choice (the no-alignment baseline)
+        cands = [0] + sorted({plans[m.uid].block_t for m in members})
+        best = min(cands, key=lambda bt: (group_cost(trial_plans(members, bt)),
+                                          bt))
+        for t in trial_plans(members, best):
+            plans[t.uid] = _with_naive(t)

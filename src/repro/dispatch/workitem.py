@@ -1,0 +1,86 @@
+"""Workload descriptors for the tile dispatcher.
+
+A ``WorkItem`` is the dispatcher's unit of admission: one recurrent stack
+evaluation (family, B, T, H, L, dtype) plus scheduling metadata (priority,
+soft deadline).  It is deliberately *shape-only* — parameters and inputs
+are bound later, at execution — so the planner can be run offline over a
+traffic mix (the software analogue of SHARP's offline configuration
+exploration, §6.2.2) and its plans cached per shape.
+
+``WorkItem.from_config`` extracts the recurrent core of any
+``repro.configs`` ModelConfig:
+
+  family "rnn"            -> lstm  (the paper's own stacks; set
+                                    ``rnn_family="gru"`` for the §8 GRU
+                                    variant of the same dims)
+  family "ssm" / "hybrid" -> rglru (the gated-linear-recurrence core of
+                                    each recurrent block)
+
+Anything without a recurrence (dense/moe/audio/vlm) has nothing for this
+dispatcher to do and raises.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+
+from repro.configs.base import ModelConfig
+
+FAMILIES = ("lstm", "gru", "rglru")
+GATES = {"lstm": 4, "gru": 3, "rglru": 1}
+
+
+@dataclass(frozen=True)
+class WorkItem:
+    uid: int
+    family: str            # lstm | gru | rglru
+    B: int                 # batch rows of this item (1 per serving request)
+    T: int                 # time steps
+    H: int                 # hidden / recurrence width
+    L: int                 # recurrent layers
+    X: int = 0             # layer-0 input width; 0 -> H
+    dtype: str = "float32"
+    priority: int = 0      # lower runs earlier within a slot/admission wave
+    deadline_us: float = math.inf  # soft; tie-breaks equal priorities
+    bidirectional: bool = False
+
+    def __post_init__(self):
+        if self.family not in FAMILIES:
+            raise ValueError(f"unknown family {self.family!r}; {FAMILIES}")
+        if self.X == 0:
+            object.__setattr__(self, "X", self.H)
+        if min(self.B, self.H, self.L) < 1 or self.T < 0:
+            raise ValueError(f"degenerate item {self}")
+
+    @property
+    def gates(self) -> int:
+        return GATES[self.family]
+
+    def order_key(self):
+        """Admission / intra-slot ordering: priority, then deadline, then
+        uid (total, deterministic)."""
+        return (self.priority, self.deadline_us, self.uid)
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_config(cls, cfg: ModelConfig, T: int, *, B: int = 1,
+                    uid: int = 0, priority: int = 0,
+                    deadline_us: float = math.inf,
+                    rnn_family: str = "lstm") -> "WorkItem":
+        """Extract the recurrent workload of ``cfg`` as a WorkItem."""
+        if cfg.family == "rnn":
+            return cls(uid=uid, family=rnn_family, B=B, T=T,
+                       H=cfg.lstm_hidden, L=cfg.n_layers, X=cfg.lstm_input,
+                       dtype=cfg.dtype, priority=priority,
+                       deadline_us=deadline_us,
+                       bidirectional=cfg.bidirectional)
+        if cfg.family in ("ssm", "hybrid"):
+            kinds = cfg.layer_kinds()
+            n_rec = sum(1 for k in kinds if k != "attn") or cfg.n_layers
+            return cls(uid=uid, family="rglru", B=B, T=T,
+                       H=cfg.rglru_width or cfg.d_model, L=n_rec,
+                       X=cfg.rglru_width or cfg.d_model, dtype=cfg.dtype,
+                       priority=priority, deadline_us=deadline_us)
+        raise ValueError(
+            f"config {cfg.name!r} (family {cfg.family!r}) has no recurrent "
+            "core to dispatch")

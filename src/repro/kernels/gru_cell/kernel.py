@@ -1,0 +1,112 @@
+"""Sequence-fused GRU recurrence as a Pallas TPU kernel.
+
+The LSTM sequence kernel's T-stripe pattern (kernels.lstm_cell), ported to
+the GRU cell: the time loop lives inside ONE ``pallas_call``, the hidden
+state is VMEM-resident across the whole T walk, the precomputed input half
+streams in T-block stripes via the BlockSpec index map, and a leading grid
+dimension ``g`` batches independent recurrences (distinct U per cell) so
+the dispatcher can pack GRU cells into shared wavefront slots.
+
+The GRU is the harder Unfolded case (see core/gru.py): the reset gate
+couples into the candidate's recurrent term *multiplicatively*, so the
+epilogue is  n = tanh(xw_n + r·(U_n h))  rather than a pure pre-activation
+sum — but the dependence structure (one recurrent MVM per step, pointwise
+tail) is identical, and so is the fusion win: one launch instead of T, no
+per-step HBM round-trip of h.
+
+Gate order along the 3-axis: (z, r, n), matching core.gru.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import cdiv
+
+
+def _seq_kernel(xw_ref, u_ref, h0_ref, hs_ref, hn_ref, h_scr, *,
+                block_t: int, T: int):
+    """One grid step = one T-block of one recurrence ``g``.
+
+    Grid is (G, n_t) with t innermost; h persists in VMEM scratch across
+    the t walk and is re-seeded from h0 at each cell's first block.
+    """
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _seed():
+        h_scr[...] = h0_ref[0].astype(jnp.float32)
+
+    U = u_ref[0]                      # (H, 3, H) — resident across the walk
+    H = U.shape[0]
+    U2 = U.reshape(H, 3 * H)
+    xw_blk = xw_ref[0]                # (B, block_t, 3, H) — streamed stripe
+    B = xw_blk.shape[0]
+    base = t * block_t
+
+    def step(i, carry):
+        h, ys = carry
+        xw_t = jax.lax.dynamic_index_in_dim(xw_blk, i, axis=1,
+                                            keepdims=False)  # (B, 3, H)
+        hu = jax.lax.dot_general(
+            h, U2, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ).reshape(B, 3, H)
+        xw32 = xw_t.astype(jnp.float32)
+        z = jax.nn.sigmoid(xw32[:, 0] + hu[:, 0])
+        r = jax.nn.sigmoid(xw32[:, 1] + hu[:, 1])
+        n = jnp.tanh(xw32[:, 2] + r * hu[:, 2])
+        h_new = (1 - z) * n + z * h
+        # T-edge mask: the last block's tail reads BlockSpec padding
+        # (undefined, NaN under interpret) — freeze the state there
+        valid = base + i < T
+        h = jnp.where(valid, h_new, h)
+        ys = jax.lax.dynamic_update_index_in_dim(ys, h, i, axis=1)
+        return h, ys
+
+    ys0 = jnp.zeros((B, block_t, H), jnp.float32)
+    h, ys = jax.lax.fori_loop(0, block_t, step, (h_scr[...], ys0))
+    h_scr[...] = h
+    hs_ref[0] = ys.astype(hs_ref.dtype)
+    hn_ref[0] = h.astype(hn_ref.dtype)
+
+
+def gru_seq_pallas(U3, xw, h0, *, block_t: int, interpret: bool = True):
+    """Sequence-fused GRU recurrence — ONE kernel launch for all T steps.
+
+    U3 (G,H,3,H); xw (G,B,T,3,H) precomputed input half (+bias);
+    h0 (G,B,H).  Returns (hs (G,B,T,H), h_T (G,B,H)).  ``G`` batches
+    independent recurrences (e.g. the GRU cells of one wavefront slot);
+    pass G=1 for a single layer.
+    """
+    G, B, T, _, H = xw.shape
+    bt = max(1, min(block_t, T))
+    n_t = cdiv(T, bt)
+
+    kernel = functools.partial(_seq_kernel, block_t=bt, T=T)
+    hs, h_n = pl.pallas_call(
+        kernel,
+        grid=(G, n_t),
+        in_specs=[
+            pl.BlockSpec((1, B, bt, 3, H), lambda g, t: (g, 0, t, 0, 0)),  # xw
+            pl.BlockSpec((1, H, 3, H), lambda g, t: (g, 0, 0, 0)),         # U3
+            pl.BlockSpec((1, B, H), lambda g, t: (g, 0, 0)),               # h0
+        ],
+        out_specs=[
+            pl.BlockSpec((1, B, bt, H), lambda g, t: (g, 0, t, 0)),        # hs
+            pl.BlockSpec((1, B, H), lambda g, t: (g, 0, 0)),               # h_T
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((G, B, T, H), h0.dtype),
+            jax.ShapeDtypeStruct((G, B, H), h0.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((B, H), jnp.float32),   # h — resident across t
+        ],
+        interpret=interpret,
+    )(xw, U3, h0)
+    return hs, h_n

@@ -1,0 +1,46 @@
+"""Jitted public wrapper for the sequence-fused GRU kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.autotune import table
+from repro.kernels.common import default_interpret
+from repro.kernels.gru_cell.kernel import gru_seq_pallas
+from repro.kernels.gru_cell.ref import gru_seq_ref, gru_step_ref
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def gru_seq(U3, xw, h0=None, *, block_t: int = 0,
+            interpret: bool | None = None):
+    """Sequence-fused GRU recurrence: ONE pallas_call for the whole T walk.
+
+    U3 (H,3,H) or, for a batch of G independent cells, (G,H,3,H); xw
+    (B,T,3,H) / (G,B,T,3,H) precomputed input half; h0 optional (…B,H)
+    initial state (zeros when omitted).  Returns (hs, h_T); ``hs`` is
+    (…B,T,H).  ``block_t`` (the streamed T-stripe) defaults to the autotune
+    table's VMEM-budget choice (gates=3)."""
+    stacked = xw.ndim == 5
+    if not stacked:
+        U3, xw = U3[None], xw[None]
+        if h0 is not None:
+            h0 = h0[None]
+    G, B, T, _, H = xw.shape
+    if h0 is None:
+        h0 = jnp.zeros((G, B, H), xw.dtype)
+    if T == 0:  # degenerate empty sequence: state passes through
+        hs = jnp.zeros((G, B, 0, H), h0.dtype)
+        return (hs, h0) if stacked else (hs[0], h0[0])
+    if not block_t:
+        block_t = table().seq_block(T, B, H, gates=3)
+    if interpret is None:
+        interpret = default_interpret()
+    hs, h_n = gru_seq_pallas(U3, xw, h0, block_t=block_t, interpret=interpret)
+    if not stacked:
+        hs, h_n = hs[0], h_n[0]
+    return hs, h_n
+
+
+__all__ = ["gru_seq", "gru_seq_ref", "gru_step_ref"]

@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for the fused GRU sequence kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def gru_step_ref(U3, xw_t, h_prev):
+    """U3 (H, 3, H); xw_t (B, 3, H) precomputed input half (+bias);
+    h_prev (B, H).  Gate order along the 3-axis: (z, r, n).  Returns h."""
+    hu = jnp.einsum("bx,xgj->bgj", h_prev, U3,
+                    preferred_element_type=jnp.float32)
+    xw32 = xw_t.astype(jnp.float32)
+    z = jax.nn.sigmoid(xw32[:, 0] + hu[:, 0])
+    r = jax.nn.sigmoid(xw32[:, 1] + hu[:, 1])
+    n = jnp.tanh(xw32[:, 2] + r * hu[:, 2])
+    h = (1 - z) * n + z * h_prev.astype(jnp.float32)
+    return h.astype(h_prev.dtype)
+
+
+def gru_seq_ref(U3, xw, h0):
+    """Scan-based oracle for the sequence-fused GRU kernel.
+
+    U3 (H,3,H) or (G,H,3,H); xw (B,T,3,H) or (G,B,T,3,H); h0 (…B,H).
+    Returns (hs (…B,T,H), h_T (…B,H))."""
+    if xw.ndim == 5:
+        return jax.vmap(gru_seq_ref)(U3, xw, h0)
+
+    def step(h, xw_t):
+        h = gru_step_ref(U3, xw_t, h)
+        return h, h
+
+    h_n, hs = jax.lax.scan(step, h0, xw.swapaxes(0, 1))
+    return hs.swapaxes(0, 1), h_n

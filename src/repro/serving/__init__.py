@@ -1,1 +1,3 @@
 from repro.serving.engine import Completion, Request, ServingEngine  # noqa: F401
+from repro.serving.recurrent import (  # noqa: F401
+    RecurrentCompletion, RecurrentRequest, RecurrentServingEngine)

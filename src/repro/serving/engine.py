@@ -115,16 +115,36 @@ class ServingEngine:
         return last, cache
 
     def _admit(self):
+        """Admission wave: claim every free slot for the queue's head, then
+        hand the whole wave to ``_prefill_admitted`` at once (the base
+        engine prefills per request; the recurrent engine overrides this
+        with one dispatcher-packed wavefront execution)."""
+        pairs = []
         for slot in range(self.max_batch):
-            if self.slots[slot] is None and self.queue:
+            while self.slots[slot] is None and self.queue:
                 req = self.queue.pop(0)
-                tokens = jnp.asarray(req.tokens, jnp.int32)[None]
-                logits, req_cache = self._prefill_bucketed(tokens)
-                self._splice_cache(slot, req_cache)
-                nxt = self._sample(logits)
+                if req.max_new_tokens <= 0:
+                    # zero-token request: complete immediately — never
+                    # occupies a slot, never reaches prefill/decode
+                    self.done.append(Completion(req.uid, [], len(req.tokens)))
+                    continue
+                pairs.append((slot, req))
                 self.slots[slot] = req
-                self.generated[slot] = [int(nxt[0])]
-                self.last_token[slot, 0] = int(nxt[0])
+                break
+        if not pairs:  # queue drained mid-tick (or only zero-token reqs)
+            return
+        self._prefill_admitted(pairs)
+
+    def _prefill_admitted(self, pairs):
+        """Prefill one admission wave.  Base engine: per-request bucketed
+        prefill spliced into the batch cache."""
+        for slot, req in pairs:
+            tokens = jnp.asarray(req.tokens, jnp.int32)[None]
+            logits, req_cache = self._prefill_bucketed(tokens)
+            self._splice_cache(slot, req_cache)
+            nxt = self._sample(logits)
+            self.generated[slot] = [int(nxt[0])]
+            self.last_token[slot, 0] = int(nxt[0])
 
     def _sample(self, logits):
         if self.temperature <= 0:

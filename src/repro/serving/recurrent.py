@@ -1,0 +1,200 @@
+"""Recurrent-stack serving: dispatcher-backed continuous batching for the
+paper's own LSTM family.
+
+The transformer engine (serving.engine) admits requests one prefill at a
+time; recurrent stacks can do strictly better, because *prefill itself is a
+recurrence* — an (L layers x T steps) dependency grid.  This engine admits
+every free slot's request in one wave, describes each prompt as a
+``dispatch.WorkItem``, and runs ONE packed ``DispatchPlan``: the requests'
+(layer, time-chunk) cells share wavefront slots, so G-batched sequence-
+kernel launches hide the per-request serial dependencies behind each other
+(ROADMAP item "Wavefront in serving").  The executor leaves behind each
+request's exact t=T per-layer (h, c), which splices into the engine's
+batched decode state exactly like the transformer engine splices KV-cache
+rows.
+
+Decode then proceeds engine-style: one tick = one batched step across all
+active slots (L sequence-kernel launches at T=1), each new top-layer output
+frame fed back as the next step's input (requires X == H, which the paper's
+stacks satisfy).  Requests are *frame* streams, not token streams — the
+serving analogue of an RNN acoustic/regression service (cf. the MASR-style
+per-shape serving story, PAPERS.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.dispatch import WorkItem, execute, plan
+
+
+@dataclasses.dataclass
+class RecurrentRequest:
+    uid: int
+    frames: np.ndarray          # (T, X) prompt feature frames
+    max_new_frames: int = 0     # autoregressive continuation steps
+    priority: int = 0
+
+
+@dataclasses.dataclass
+class RecurrentCompletion:
+    uid: int
+    prompt_len: int
+    outputs: np.ndarray         # (T, H) top-layer prefill outputs
+    generated: np.ndarray       # (max_new_frames, H) fed-back continuation
+
+
+class RecurrentServingEngine:
+    """Continuous batching over a fixed slot pool, recurrent edition."""
+
+    def __init__(self, cfg: ModelConfig, stack_params, max_batch: int = 4,
+                 macs: int = 16384, interpret: Optional[bool] = None):
+        assert cfg.family == "rnn", "recurrent engine serves rnn stacks"
+        assert not cfg.bidirectional, \
+            "bidirectional stacks have no streaming decode"
+        self.cfg = cfg
+        self.params = stack_params
+        self.max_batch = max_batch
+        self.macs = macs
+        self.interpret = interpret
+        L, H = cfg.n_layers, cfg.lstm_hidden
+        self.L, self.H = L, H
+
+        # batched recurrent state: one column per slot (the recurrent
+        # analogue of the transformer engine's batch cache)
+        self.h = jnp.zeros((L, max_batch, H), jnp.float32)
+        self.c = jnp.zeros((L, max_batch, H), jnp.float32)
+        self.last_y = jnp.zeros((max_batch, 1, H), jnp.float32)
+
+        self.queue: List[RecurrentRequest] = []
+        self.slots: List[Optional[RecurrentRequest]] = [None] * max_batch
+        self.prefill_out: List[Optional[np.ndarray]] = [None] * max_batch
+        self.generated: List[List[np.ndarray]] = [[] for _ in range(max_batch)]
+        self.done: List[RecurrentCompletion] = []
+        self.steps = 0
+        self._admit_seq = 0  # WorkItem ids: engine-internal, so duplicate
+        #                      request uids never collide inside a plan
+        # dispatch accounting (inspected by tests/benchmarks)
+        self.prefill_waves = 0
+        self.packed_launches = 0
+        self.naive_launches = 0
+        self.last_plan = None
+
+    # ------------------------------------------------------------------
+    def submit(self, req: RecurrentRequest):
+        frames = np.asarray(req.frames)
+        if frames.ndim != 2 or frames.shape[0] == 0:
+            raise ValueError(f"request {req.uid}: prompt must be (T>0, X)")
+        if frames.shape[1] != self.cfg.lstm_input:
+            raise ValueError(
+                f"request {req.uid}: X={frames.shape[1]} != "
+                f"lstm_input={self.cfg.lstm_input}")
+        if req.max_new_frames > 0 and self.cfg.lstm_input != self.H:
+            raise ValueError("feedback decode requires lstm_input == hidden")
+        self.queue.append(req)
+
+    # ------------------------------------------------------------------
+    def _admit(self):
+        """One admission wave -> one packed DispatchPlan for ALL newly
+        admitted prompts (replacing one-slot-at-a-time prefill)."""
+        pairs = []
+        for slot in range(self.max_batch):
+            if self.slots[slot] is None and self.queue:
+                pairs.append((slot, self.queue.pop(0)))
+        if not pairs:  # queue drained mid-tick: nothing to dispatch
+            return
+
+        wids = {}
+        for slot, req in pairs:
+            wids[slot] = self._admit_seq
+            self._admit_seq += 1
+        items = [WorkItem.from_config(
+            self.cfg, T=len(req.frames), B=1, uid=wids[slot],
+            priority=req.priority) for slot, req in pairs]
+        p = plan(items, macs=self.macs)
+        params = {wids[slot]: self.params for slot, _ in pairs}
+        inputs = {wids[slot]: jnp.asarray(req.frames, jnp.float32)[None]
+                  for slot, req in pairs}
+        outs, states = execute(p, params, inputs, interpret=self.interpret,
+                               collect_state=True)
+        self.prefill_waves += 1
+        self.packed_launches += p.launches
+        self.naive_launches += p.naive_launches
+        self.last_plan = p
+
+        for slot, req in pairs:
+            st = states[wids[slot]]
+            self.h = self.h.at[:, slot].set(st["h"][:, 0].astype(jnp.float32))
+            self.c = self.c.at[:, slot].set(st["c"][:, 0])
+            out = np.asarray(outs[wids[slot]][0])       # (T, H)
+            self.prefill_out[slot] = out
+            self.last_y = self.last_y.at[slot, 0].set(
+                jnp.asarray(out[-1], jnp.float32))
+            self.slots[slot] = req
+            self.generated[slot] = []
+        self._retire()  # zero-new-frame requests complete right here
+
+    # ------------------------------------------------------------------
+    def _decode_tick(self):
+        """One batched decode step across all slots: the last output frame
+        of every active request feeds back through the stack (L sequence-
+        kernel launches at T=1, batched over the slot axis)."""
+        from repro.kernels.lstm_cell.ops import lstm_seq
+
+        y = self.last_y                                  # (S, 1, H)
+        h_new, c_new = [], []
+        for l, layer in enumerate(self.params["layers"]):
+            H = self.H
+            xw = (jnp.einsum("btx,xg->btg", y, layer["W"])
+                  + layer["b"]).reshape(self.max_batch, 1, 4, H)
+            hs, h_n, c_n = lstm_seq(layer["U"].reshape(H, 4, H), xw,
+                                    self.h[l], self.c[l], block_t=1,
+                                    interpret=self.interpret)
+            h_new.append(h_n.astype(jnp.float32))
+            c_new.append(c_n)
+            y = hs.astype(jnp.float32)
+        self.h = jnp.stack(h_new)
+        self.c = jnp.stack(c_new)
+        self.last_y = y
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            self.generated[slot].append(np.asarray(y[slot, 0]))
+
+    def _retire(self):
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            if len(self.generated[slot]) >= req.max_new_frames:
+                gen = (np.stack(self.generated[slot])
+                       if self.generated[slot]
+                       else np.zeros((0, self.H), np.float32))
+                self.done.append(RecurrentCompletion(
+                    uid=req.uid, prompt_len=len(req.frames),
+                    outputs=self.prefill_out[slot], generated=gen))
+                self.slots[slot] = None
+                self.generated[slot] = []
+
+    # ------------------------------------------------------------------
+    def step(self):
+        """One engine tick: admit (packed prefill) -> batched decode ->
+        retire."""
+        self._admit()
+        if not any(s is not None for s in self.slots):
+            return
+        self._decode_tick()
+        self.steps += 1
+        self._retire()
+
+    def run_to_completion(self, max_ticks: int = 10_000
+                          ) -> List[RecurrentCompletion]:
+        while self.queue or any(s is not None for s in self.slots):
+            self.step()
+            if self.steps > max_ticks:
+                raise RuntimeError("engine did not drain")
+        return self.done

@@ -1,0 +1,195 @@
+"""Executor: exact equivalence of packed execution + launch-count proofs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.sharp_lstm import lstm_config
+from repro.core import gru, schedules as sch
+from repro.dispatch import WorkItem, execute, plan
+from repro.kernels.common import pallas_launch_count
+from repro.kernels.lstm_cell.ops import lstm_seq_ref
+from repro.models.layers.lstm import init_lstm_stack
+
+MIX = [(lstm_config(64, layers=3), 24), (lstm_config(96, layers=2), 16),
+       (lstm_config(64, layers=4), 12)]
+
+
+def _setup(mix=MIX):
+    items = [WorkItem.from_config(c, T=t, uid=i)
+             for i, (c, t) in enumerate(mix)]
+    params = {i: init_lstm_stack(jax.random.PRNGKey(i), c, jnp.float32)
+              for i, (c, _) in enumerate(mix)}
+    inputs = {i: jax.random.normal(jax.random.PRNGKey(100 + i),
+                                   (1, t, c.lstm_hidden)) * 0.5
+              for i, (c, t) in enumerate(mix)}
+    return items, params, inputs
+
+
+def test_packed_matches_oracle_and_single_item_execution():
+    items, params, inputs = _setup()
+    p = plan(items)
+    outs = execute(p, params, inputs, interpret=True)
+    for i, (cfg, t) in enumerate(MIX):
+        oracle = sch.run_stack(params[i], inputs[i], "unfolded")
+        np.testing.assert_allclose(np.asarray(outs[i]), np.asarray(oracle),
+                                   atol=1e-4)
+        solo = execute(plan([items[i]]), {i: params[i]}, {i: inputs[i]},
+                       interpret=True)
+        # packing is numerically inert: the G-batched kernel walks each
+        # cell independently, so packed == solo exactly
+        np.testing.assert_array_equal(np.asarray(outs[i]),
+                                      np.asarray(solo[i]))
+
+
+def test_packed_launches_below_per_request_wavefront():
+    items, params, inputs = _setup()
+    p = plan(items)
+    n_packed = pallas_launch_count(
+        lambda pr, xs: execute(p, pr, xs, interpret=True), params, inputs)
+    n_per_req = sum(pallas_launch_count(
+        lambda pr, xs: sch.run_stack(pr, xs, "wavefront", interpret=True),
+        params[i], inputs[i]) for i in inputs)
+    assert n_packed == p.launches
+    assert n_packed < n_per_req
+
+
+def test_final_state_is_exact():
+    """The remainder-exact chunking leaves behind the true t=T state — the
+    contract the serving engine's decode splice relies on."""
+    items, params, inputs = _setup()
+    p = plan(items)
+    _, states = execute(p, params, inputs, interpret=True,
+                        collect_state=True)
+    for i, (cfg, t) in enumerate(MIX):
+        H = cfg.lstm_hidden
+        y = inputs[i]
+        for l, layer in enumerate(params[i]["layers"]):
+            xw = (jnp.einsum("btx,xg->btg", y, layer["W"])
+                  + layer["b"]).reshape(1, t, 4, H)
+            hs, h_n, c_n = lstm_seq_ref(
+                layer["U"].reshape(H, 4, H), xw,
+                jnp.zeros((1, H)), jnp.zeros((1, H)))
+            np.testing.assert_allclose(
+                np.asarray(states[i]["h"][l]), np.asarray(h_n), atol=1e-5)
+            np.testing.assert_allclose(
+                np.asarray(states[i]["c"][l]), np.asarray(c_n), atol=1e-5)
+            y = hs
+
+
+@pytest.mark.parametrize("Ts", [(11, 7, 5), (13, 13, 4)])
+def test_ragged_lengths_stay_exact(Ts):
+    """T-stripe remainders (T % bt != 0) execute at their true length."""
+    items, params, inputs = _setup([(c, t) for (c, _), t in zip(MIX, Ts)])
+    outs = execute(plan(items), params, inputs, interpret=True)
+    for i in inputs:
+        oracle = sch.run_stack(params[i], inputs[i], "unfolded")
+        assert outs[i].shape == oracle.shape
+        np.testing.assert_allclose(np.asarray(outs[i]), np.asarray(oracle),
+                                   atol=1e-4)
+
+
+def test_gru_items_execute_and_pack():
+    items = [WorkItem(uid=0, family="gru", B=1, T=12, H=48, L=3),
+             WorkItem(uid=1, family="gru", B=1, T=12, H=48, L=2)]
+    params = {i: gru.init_gru_stack(jax.random.PRNGKey(i), 48, 48, L,
+                                    jnp.float32)
+              for i, L in ((0, 3), (1, 2))}
+    inputs = {i: jax.random.normal(jax.random.PRNGKey(10 + i), (1, 12, 48))
+              * 0.5 for i in (0, 1)}
+    p = plan(items)
+    assert p.launches < p.naive_launches
+    outs = execute(p, params, inputs, interpret=True)
+    for i in inputs:
+        y = inputs[i]
+        for layer in params[i]["layers"]:
+            y = gru.run_layer(layer, y, "unfolded")
+        np.testing.assert_allclose(np.asarray(outs[i]), np.asarray(y),
+                                   atol=1e-4)
+
+
+def test_external_fallbacks_still_collect_state():
+    """Items the planner leaves unpacked (here: forced per_step) must still
+    return exact t=T state when asked — the serving engine depends on it."""
+    from dataclasses import replace as dc_replace
+
+    it = WorkItem(uid=0, family="lstm", B=1, T=7, H=48, L=2, X=96)
+    cfg = lstm_config(48, layers=2)
+    cfg = dc_replace(cfg, lstm_input=96)
+    params = {0: init_lstm_stack(jax.random.PRNGKey(0), cfg, jnp.float32)}
+    inputs = {0: jax.random.normal(jax.random.PRNGKey(1), (1, 7, 96)) * 0.5}
+    p = plan([it])
+    # force the external path regardless of what the scorer picked
+    from dataclasses import replace
+    p = replace(p, items=tuple(replace(ip, schedule="per_step")
+                               for ip in p.items),
+                slots=(), external=(0,))
+    outs, states = execute(p, params, inputs, interpret=True,
+                           collect_state=True)
+    oracle = sch.run_stack(params[0], inputs[0], "unfolded")
+    np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(oracle),
+                               atol=1e-4)
+    assert states[0]["h"].shape == (2, 1, 48)
+    assert states[0]["c"].shape == (2, 1, 48)
+    np.testing.assert_allclose(np.asarray(states[0]["h"][1]),
+                               np.asarray(oracle[:, -1]), atol=1e-5)
+
+
+def test_bidirectional_gru_fallback_executes():
+    it = WorkItem(uid=0, family="gru", B=1, T=6, H=24, L=2,
+                  bidirectional=True)
+    key = jax.random.PRNGKey(0)
+    layers = []
+    x_dim = 24
+    for _ in range(2):
+        key, kf, kb = jax.random.split(key, 3)
+        layers.append({"fwd": gru.init_gru_layer(kf, x_dim, 24, jnp.float32),
+                       "bwd": gru.init_gru_layer(kb, x_dim, 24, jnp.float32)})
+        x_dim = 48
+    params = {0: {"layers": layers}}
+    xs = jax.random.normal(jax.random.PRNGKey(1), (1, 6, 24)) * 0.5
+    p = plan([it])
+    assert p.item(0).schedule == "per_layer"
+    out = execute(p, params, {0: xs}, interpret=True)
+    # oracle: fwd/bwd reference unroll per layer
+    y = xs
+    for layer in layers:
+        f = gru.reference_unroll(layer["fwd"], y)
+        b = gru.reference_unroll(layer["bwd"], jnp.flip(y, axis=1))
+        y = jnp.concatenate([f, jnp.flip(b, axis=1)], axis=-1)
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(y), atol=1e-4)
+
+
+def test_plan_only_items_fail_fast_before_any_work():
+    from repro.configs import get_config
+
+    rg = WorkItem.from_config(get_config("recurrentgemma-2b"), T=8, uid=5)
+    lstm_it = WorkItem.from_config(lstm_config(48, layers=2), T=8, uid=0)
+    p = plan([rg, lstm_it])
+    with pytest.raises(NotImplementedError, match="plan-only"):
+        execute(p, {0: None, 5: None}, {0: None, 5: None}, interpret=True)
+
+
+def test_rglru_single_layer_executes():
+    from repro.kernels.rglru.ops import rglru_scan_ref
+
+    it = WorkItem(uid=0, family="rglru", B=2, T=16, H=64, L=1)
+    la = -jnp.abs(jax.random.normal(jax.random.PRNGKey(0), (2, 16, 64))) * 0.3
+    gx = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 64))
+    out = execute(plan([it]), {0: None}, {0: (la, gx)}, interpret=True)
+    ref, _ = rglru_scan_ref(la, gx, jnp.zeros((2, 64)))
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(ref),
+                               atol=1e-5)
+
+
+def test_mixed_families_in_one_plan():
+    items, params, inputs = _setup(MIX[:2])
+    items.append(WorkItem(uid=2, family="gru", B=1, T=16, H=96, L=2))
+    params[2] = gru.init_gru_stack(jax.random.PRNGKey(7), 96, 96, 2,
+                                   jnp.float32)
+    inputs[2] = jax.random.normal(jax.random.PRNGKey(17), (1, 16, 96)) * 0.5
+    p = plan(items)
+    fams = {s.family for s in p.slots}
+    assert fams == {"lstm", "gru"}
+    outs = execute(p, params, inputs, interpret=True)
+    assert set(outs) == {0, 1, 2}

@@ -1,0 +1,117 @@
+"""Planner: plan determinism, inspectability, packing and fallbacks."""
+import pytest
+
+from repro.configs import get_config
+from repro.configs.sharp_lstm import EESEN, lstm_config
+from repro.dispatch import WorkItem, plan
+
+
+def _mix(Ts=(24, 16, 12)):
+    cfgs = [lstm_config(64, layers=3), lstm_config(96, layers=2),
+            lstm_config(64, layers=4)]
+    return [WorkItem.from_config(c, T=t, uid=i)
+            for i, (c, t) in enumerate(zip(cfgs, Ts))]
+
+
+def test_plan_is_deterministic():
+    p1, p2 = plan(_mix()), plan(_mix())
+    assert p1.describe() == p2.describe()
+    assert p1.slots == p2.slots
+    assert p1.items == p2.items
+
+
+def test_plan_is_explicit_and_inspectable():
+    p = plan(_mix())
+    text = p.describe()
+    assert "slot" in text and "wave" in text and "K" in text
+    for s in p.slots:
+        assert s.cells and s.tile_k > 0 and len(s.mvm_block) == 2
+        assert s.chunk_len >= 1
+        for c in s.cells:
+            # the wavefront invariant: every cell sits on its anti-diagonal
+            assert c.layer + c.chunk == s.wave
+    for ip in p.items:
+        assert ip.schedule in ("wavefront", "fused", "per_step", "per_layer")
+        assert ip.tile_k > 0
+
+
+def test_slot_order_respects_dependencies():
+    """A cell's inputs — (l-1, k) and (l, k-1) — must run in earlier
+    waves, and slots are emitted in wave order."""
+    p = plan(_mix())
+    waves = [s.wave for s in p.slots]
+    assert waves == sorted(waves)
+    seen = set()
+    for s in p.slots:
+        for c in s.cells:
+            if c.layer > 0:
+                assert (c.uid, c.layer - 1, c.chunk) in seen
+            if c.chunk > 0:
+                assert (c.uid, c.layer, c.chunk - 1) in seen
+        seen.update((c.uid, c.layer, c.chunk) for c in s.cells)
+
+
+def test_packing_beats_per_item_launches():
+    p = plan(_mix())
+    assert p.launches < p.naive_launches
+    # every same-signature wave merged: at least one slot is G-batched
+    assert any(s.g > 1 for s in p.slots)
+
+
+def test_all_cells_covered_exactly_once():
+    p = plan(_mix())
+    for ip in p.items:
+        cells = [c for s in p.slots for c in s.cells if c.uid == ip.uid]
+        assert len(cells) == len(set(cells)) == ip.item.L * ip.nk
+
+
+def test_rglru_and_bidirectional_fall_back():
+    rg = WorkItem.from_config(get_config("recurrentgemma-2b"), T=8, uid=0)
+    assert rg.family == "rglru"
+    bi = WorkItem.from_config(EESEN, T=8, uid=1)
+    assert bi.bidirectional
+    lstm_it = WorkItem.from_config(lstm_config(64, layers=3), T=24, uid=2)
+    p = plan([rg, bi, lstm_it])
+    assert set(p.external) == {0, 1}
+    assert p.item(0).naive_launches == rg.L
+    assert p.item(1).schedule == "per_layer"
+    assert p.item(1).naive_launches == 2 * bi.L
+
+
+def test_duplicate_uids_rejected():
+    items = _mix()
+    with pytest.raises(ValueError):
+        plan([items[0], items[0]])
+
+
+def test_from_config_requires_a_recurrence():
+    with pytest.raises(ValueError):
+        WorkItem.from_config(get_config("starcoder2-3b"), T=8)
+
+
+def test_stripe_candidates_respect_vmem_budget():
+    """T-wide stripes the autotune table would reject must not sneak in
+    through the planner's candidate widening."""
+    from repro.core.tiling import SEQ_VMEM_BUDGET, seq_block_footprint
+
+    it = WorkItem(uid=0, family="lstm", B=2, T=512, H=512, L=1)
+    ip = plan([it]).item(0)
+    assert seq_block_footprint(ip.block_t, it.B, it.H,
+                               gates=it.gates) <= SEQ_VMEM_BUDGET
+
+
+def test_plan_only_items_are_flagged():
+    rg = WorkItem.from_config(get_config("recurrentgemma-2b"), T=8, uid=0)
+    p = plan([rg])
+    assert not p.item(0).executable
+    assert "[plan-only]" in p.item(0).describe()
+    one = WorkItem(uid=1, family="rglru", B=1, T=8, H=64, L=1)
+    assert plan([one]).item(1).executable
+
+
+def test_gru_items_plan_with_three_gates():
+    it = WorkItem(uid=0, family="gru", B=1, T=16, H=48, L=2)
+    assert it.gates == 3
+    p = plan([it, WorkItem(uid=1, family="gru", B=1, T=16, H=48, L=3)])
+    assert all(s.family == "gru" for s in p.slots)
+    assert p.launches < p.naive_launches

@@ -1,0 +1,155 @@
+"""Recurrent serving engine: dispatcher-packed multi-request prefill ==
+per-request serving, with launch accounting and edge-case guards."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.sharp_lstm import lstm_config
+from repro.core import schedules as sch
+from repro.models.layers.lstm import init_lstm_stack
+from repro.serving import RecurrentRequest, RecurrentServingEngine
+
+CFG = lstm_config(48, layers=3)
+
+
+def _engine(max_batch=4, **kw):
+    params = init_lstm_stack(jax.random.PRNGKey(0), CFG, jnp.float32)
+    return params, RecurrentServingEngine(CFG, params, max_batch=max_batch,
+                                          interpret=True, **kw)
+
+
+def _prompts(lengths, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.standard_normal((t, 48)).astype(np.float32) * 0.5
+            for t in lengths]
+
+
+def test_packed_prefill_matches_per_request_and_oracle():
+    prompts = _prompts((12, 12, 8))
+    params, eng = _engine()
+    for uid, p in enumerate(prompts):
+        eng.submit(RecurrentRequest(uid=uid, frames=p, max_new_frames=3))
+    done = {c.uid: c for c in eng.run_to_completion()}
+    assert sorted(done) == [0, 1, 2]
+    assert eng.prefill_waves == 1  # one packed admission wave, not 3
+
+    per_req_launches = 0
+    for uid, p in enumerate(prompts):
+        _, e1 = _engine(max_batch=1)
+        e1.submit(RecurrentRequest(uid=uid, frames=p, max_new_frames=3))
+        (c1,) = e1.run_to_completion()
+        per_req_launches += e1.packed_launches
+        np.testing.assert_allclose(done[uid].outputs, c1.outputs, atol=1e-5)
+        np.testing.assert_allclose(done[uid].generated, c1.generated,
+                                   atol=1e-5)
+        oracle = sch.run_stack(params, jnp.asarray(p)[None], "unfolded")
+        np.testing.assert_allclose(done[uid].outputs,
+                                   np.asarray(oracle[0]), atol=1e-4)
+    # the dispatch claim in serving: packed admission launches strictly
+    # fewer kernels than one-slot-at-a-time prefill
+    assert eng.packed_launches < per_req_launches
+
+
+def test_zero_new_frames_completes_at_prefill():
+    prompts = _prompts((9,))
+    _, eng = _engine(max_batch=2)
+    eng.submit(RecurrentRequest(uid=0, frames=prompts[0], max_new_frames=0))
+    (c,) = eng.run_to_completion()
+    assert c.generated.shape == (0, 48)
+    assert c.outputs.shape == (9, 48)
+    assert eng.steps == 0  # never reached a decode tick
+
+
+def test_empty_queue_mid_tick_is_a_noop():
+    _, eng = _engine()
+    eng.step()  # nothing queued, nothing active
+    assert eng.steps == 0 and not eng.done
+    eng.submit(RecurrentRequest(uid=0, frames=_prompts((6,))[0],
+                                max_new_frames=2))
+    done = eng.run_to_completion()
+    assert len(done) == 1
+    eng.step()  # drained engine ticks are also no-ops
+    assert len(eng.done) == 1
+
+
+def test_invalid_prompts_rejected():
+    _, eng = _engine()
+    with pytest.raises(ValueError):
+        eng.submit(RecurrentRequest(uid=0, frames=np.zeros((0, 48),
+                                                           np.float32)))
+    with pytest.raises(ValueError):
+        eng.submit(RecurrentRequest(uid=1, frames=np.zeros((4, 7),
+                                                           np.float32)))
+
+
+def test_wide_input_prefill_only_requests_serve():
+    """lstm_input != lstm_hidden: prefill-only requests must serve through
+    whatever schedule the planner picks (regression: per_step fallback used
+    to crash state collection)."""
+    import dataclasses
+
+    cfg = dataclasses.replace(lstm_config(48, layers=2), lstm_input=96)
+    params = init_lstm_stack(jax.random.PRNGKey(0), cfg, jnp.float32)
+    eng = RecurrentServingEngine(cfg, params, max_batch=2, interpret=True)
+    rng = np.random.default_rng(7)
+    prompts = {uid: rng.standard_normal((t, 96)).astype(np.float32)
+               for uid, t in ((0, 1), (1, 5))}
+    for uid, frames in prompts.items():
+        eng.submit(RecurrentRequest(uid=uid, frames=frames,
+                                    max_new_frames=0))
+    done = {c.uid: c for c in eng.run_to_completion()}
+    assert sorted(done) == [0, 1]
+    for uid, frames in prompts.items():
+        oracle = sch.run_stack(params, jnp.asarray(frames)[None], "unfolded")
+        np.testing.assert_allclose(done[uid].outputs,
+                                   np.asarray(oracle[0]), atol=1e-4)
+
+
+def test_duplicate_request_uids_are_served():
+    """Request uids are caller-owned labels (the base engine accepts
+    duplicates); the dispatcher keys plans by engine-internal ids."""
+    prompts = _prompts((8, 8), seed=5)
+    _, eng = _engine(max_batch=2)
+    for p in prompts:
+        eng.submit(RecurrentRequest(uid=7, frames=p, max_new_frames=1))
+    done = eng.run_to_completion()
+    assert [c.uid for c in done] == [7, 7]
+    assert all(c.generated.shape == (1, 48) for c in done)
+
+
+def test_per_step_launch_accounting_is_honest():
+    """A per_step plan must issue exactly the L·T cell-kernel launches it
+    reports (stateless path)."""
+    from dataclasses import replace
+    from repro.dispatch import plan as plan_fn, execute
+    from repro.kernels.common import pallas_launch_count
+
+    cfg = lstm_config(32, layers=2)
+    params = {0: init_lstm_stack(jax.random.PRNGKey(0), cfg, jnp.float32)}
+    inputs = {0: jax.random.normal(jax.random.PRNGKey(1), (1, 5, 32)) * 0.5}
+    from repro.dispatch import WorkItem
+    p = plan_fn([WorkItem.from_config(cfg, T=5, uid=0)])
+    forced = replace(p, items=tuple(replace(ip, schedule="per_step",
+                                            naive_launches=2 * 5)
+                                    for ip in p.items),
+                     slots=(), external=(0,))
+    n = pallas_launch_count(
+        lambda pr, xs: execute(forced, pr, xs, interpret=True),
+        params, inputs)
+    assert n == forced.launches == 10
+    outs = execute(forced, params, inputs, interpret=True)
+    oracle = sch.run_stack(params[0], inputs[0], "unfolded")
+    np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(oracle),
+                               atol=1e-4)
+
+
+def test_slots_are_reused_across_waves():
+    prompts = _prompts((8, 8, 8, 8, 8), seed=3)
+    _, eng = _engine(max_batch=2)
+    for uid, p in enumerate(prompts):
+        eng.submit(RecurrentRequest(uid=uid, frames=p, max_new_frames=2))
+    done = eng.run_to_completion()
+    assert sorted(c.uid for c in done) == [0, 1, 2, 3, 4]
+    assert all(c.generated.shape == (2, 48) for c in done)
+    assert eng.prefill_waves >= 2  # later arrivals admitted in later waves

@@ -1,0 +1,76 @@
+"""Sequence-fused GRU kernel: oracle equivalence + launch accounting —
+the lstm_seq acceptance grid ported to the 3-gate cell."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from tests._hyp import given, settings, st
+
+from repro.core import gru
+from repro.kernels.common import pallas_launch_count
+from repro.kernels.gru_cell.ops import gru_seq, gru_seq_ref
+
+
+def _mk(B, T, H, seed=0, G=0):
+    lead = (G,) if G else ()
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    U3 = jax.random.normal(ks[0], lead + (H, 3, H), jnp.float32) * 0.2
+    xw = jax.random.normal(ks[1], lead + (B, T, 3, H), jnp.float32)
+    h0 = jax.random.normal(ks[2], lead + (B, H), jnp.float32) * 0.5
+    return U3, xw, h0
+
+
+@pytest.mark.parametrize("B", [1, 4])
+@pytest.mark.parametrize("T", [1, 7, 64])
+@pytest.mark.parametrize("H", [96, 256])
+def test_acceptance_grid_fp32(B, T, H):
+    U3, xw, h0 = _mk(B, T, H, seed=B * 1000 + T * 10 + H)
+    hs, h_n = gru_seq(U3, xw, h0, interpret=True)
+    hr, hnr = gru_seq_ref(U3, xw, h0)
+    np.testing.assert_allclose(np.asarray(hs), np.asarray(hr), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_n), np.asarray(hnr), atol=1e-4)
+
+
+@pytest.mark.parametrize("T,bt", [(7, 3), (13, 5), (5, 8)])
+def test_time_block_edges(T, bt):
+    U3, xw, h0 = _mk(2, T, 96, seed=T * 100 + bt)
+    hs, h_n = gru_seq(U3, xw, h0, block_t=bt, interpret=True)
+    hr, hnr = gru_seq_ref(U3, xw, h0)
+    np.testing.assert_allclose(np.asarray(hs), np.asarray(hr), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_n), np.asarray(hnr), atol=1e-4)
+
+
+def test_stacked_cells_one_launch():
+    """G independent GRU recurrences in one batched launch — the wavefront
+    slot shape the dispatcher packs."""
+    G, B, T, H = 3, 2, 6, 64
+    U3, xw, h0 = _mk(B, T, H, seed=7, G=G)
+    hs, h_n = gru_seq(U3, xw, h0, block_t=4, interpret=True)
+    hr, hnr = gru_seq_ref(U3, xw, h0)
+    np.testing.assert_allclose(np.asarray(hs), np.asarray(hr), atol=1e-4)
+    launches = pallas_launch_count(
+        lambda u, x, h: gru_seq(u, x, h, block_t=4, interpret=True),
+        U3, xw, h0)
+    assert launches == 1
+
+
+def test_fused_layer_matches_reference_unroll_one_launch():
+    params = gru.init_gru_layer(jax.random.PRNGKey(0), 48, 48, jnp.float32)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (2, 11, 48)) * 0.5
+    out = gru.run_layer(params, xs, "fused", interpret=True)
+    ref = gru.reference_unroll(params, xs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+    n = pallas_launch_count(
+        lambda p, x: gru.run_layer(p, x, "fused", interpret=True), params, xs)
+    assert n == 1
+
+
+@settings(max_examples=10, deadline=None)
+@given(B=st.integers(1, 3), T=st.integers(1, 20),
+       H=st.sampled_from([8, 40, 96]), bt=st.sampled_from([1, 3, 8, 16]))
+def test_property_any_shape(B, T, H, bt):
+    U3, xw, h0 = _mk(B, T, H, seed=B + T * 7 + H)
+    hs, h_n = gru_seq(U3, xw, h0, block_t=bt, interpret=True)
+    hr, hnr = gru_seq_ref(U3, xw, h0)
+    np.testing.assert_allclose(np.asarray(hs), np.asarray(hr), atol=1e-4)

@@ -74,6 +74,32 @@ def test_prefill_buckets_bound_compiles():
         assert c.tokens == ref, (c.uid, c.tokens, ref)
 
 
+def test_zero_token_request_completes_without_prefill():
+    """max_new_tokens=0: complete immediately with no generated tokens —
+    must never occupy a slot, compile a prefill, or stall the admit wave
+    for the real requests behind it."""
+    cfg = get_reduced("starcoder2-3b")
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(4)
+    p0 = rng.integers(0, cfg.vocab_size, size=5).astype(np.int32)
+    p1 = rng.integers(0, cfg.vocab_size, size=5).astype(np.int32)
+    engine = ServingEngine(cfg, params, max_batch=1, max_seq=64)
+    engine.submit(Request(uid=0, tokens=p0, max_new_tokens=0))
+    engine.submit(Request(uid=1, tokens=p1, max_new_tokens=3))
+    done = {c.uid: c for c in engine.run_to_completion()}
+    assert done[0].tokens == []
+    assert done[1].tokens == _reference_greedy(cfg, params, p1, 3)
+
+
+def test_step_with_empty_queue_is_a_noop():
+    cfg = get_reduced("starcoder2-3b")
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    engine = ServingEngine(cfg, params, max_batch=2, max_seq=64)
+    engine.step()  # nothing queued mid-tick
+    assert engine.steps == 0 and not engine.done
+    assert engine.prefill_lengths == set()
+
+
 def test_slots_are_reused():
     cfg = get_reduced("starcoder2-3b")
     params = tf.init_params(cfg, jax.random.PRNGKey(0))
