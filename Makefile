@@ -2,10 +2,15 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test bench-kernels bench-dispatch bench
+.PHONY: test ci bench-kernels bench-dispatch bench
 
 test:
 	$(PY) -m pytest -x -q
+
+# What CI runs (.github/workflows/ci.yml): the tier-1 suite, which already
+# includes the benchmark smoke tests (tests/test_bench_smoke.py runs the
+# kernels + dispatch suites end-to-end and checks their claims).
+ci: test
 
 # Kernel microbench suite; writes BENCH_kernels.json (committed — the
 # cross-PR perf trajectory).

@@ -7,6 +7,13 @@ wavefront schedule (``run_stack(..., "wavefront")``).  Rows record the
 structural launch counts (pallas_launch_count — the dispatch claim) and the
 CPU-oracle wall time; outputs are verified equal against the pure-jnp
 unfolded oracle before anything is emitted.
+
+The decode sub-suite records the serving steady state: a planned tick (ONE
+chained launch over the k active slots' layer chains, cross-B packed) vs
+the pre-existing hand loop (L per-layer launches over the full slot pool) —
+verified bit-equal before emission.  The cross-B sub-suite records a
+mixed-B prefill mix packed (pad + in-kernel mask) vs the per-B-signature
+plan of the same items.
 """
 from __future__ import annotations
 
@@ -19,8 +26,10 @@ import numpy as np
 
 from repro.configs.sharp_lstm import lstm_config
 from repro.core import schedules as sch
-from repro.dispatch import WorkItem, execute, plan
+from repro.dispatch import (WorkItem, execute, plan, plan_decode,
+                            prepare_decode_stack)
 from repro.kernels.common import pallas_launch_count
+from repro.kernels.lstm_cell.ops import lstm_seq
 from repro.models.layers.lstm import init_lstm_stack
 
 MIX = [  # (config, T): different H / L / T — the adaptability scenario
@@ -86,3 +95,111 @@ def dispatch(emit) -> None:
     emit("dispatch/plan", 0.0,
          f"items={len(items)} launches={p.launches} "
          f"naive={p.naive_launches} est={p.est_cycles:.0f}cy")
+
+    _decode_rows(emit)
+    _cross_b_rows(emit)
+
+
+def _decode_rows(emit) -> None:
+    """Steady-state serving decode: planned (one chained launch over the k
+    active slots) vs the pre-existing loop (L per-layer launches over the
+    full max_batch pool, stale columns included)."""
+    H, L, k, max_batch = 64, 3, 3, 4
+    cfg = lstm_config(H, layers=L)
+    params = init_lstm_stack(jax.random.PRNGKey(0), cfg, jnp.float32)
+    rng = np.random.default_rng(3)
+    y = jnp.asarray(rng.standard_normal((k, 1, H)) * 0.5, jnp.float32)
+    h = jnp.asarray(rng.standard_normal((L, k, H)) * 0.3, jnp.float32)
+    c = jnp.asarray(rng.standard_normal((L, k, H)) * 0.3, jnp.float32)
+
+    items = [WorkItem(uid=i, family="lstm", B=1, T=1, H=H, L=L, share=0)
+             for i in range(k)]
+    p = plan_decode(items)
+    prep = prepare_decode_stack(params, "lstm")  # once, like the engine
+
+    def planned(y, h, c):
+        inputs = {i: y[i:i + 1] for i in range(k)}
+        init = {i: {"h": h[:, i:i + 1], "c": c[:, i:i + 1]}
+                for i in range(k)}
+        return execute(p, {i: params for i in range(k)}, inputs,
+                       interpret=True, collect_state=True, init_state=init,
+                       prepared={i: prep for i in range(k)})
+
+    def loop(y, h, c):
+        """The replaced _decode_tick: L launches over all max_batch
+        columns (the stale ones compute too)."""
+        pad = max_batch - k
+        yp = jnp.concatenate([y, jnp.zeros((pad, 1, H))])
+        hp = jnp.concatenate([h, jnp.zeros((L, pad, H))], axis=1)
+        cp = jnp.concatenate([c, jnp.zeros((L, pad, H))], axis=1)
+        h_new, c_new = [], []
+        for l, layer in enumerate(params["layers"]):
+            xw = (jnp.einsum("btx,xg->btg", yp, layer["W"])
+                  + layer["b"]).reshape(max_batch, 1, 4, H)
+            hs, h_n, c_n = lstm_seq(layer["U"].reshape(H, 4, H), xw, hp[l],
+                                    cp[l], block_t=1, interpret=True)
+            h_new.append(h_n)
+            c_new.append(c_n)
+            yp = hs.astype(jnp.float32)
+        return yp, jnp.stack(h_new), jnp.stack(c_new)
+
+    # -- correctness gate: planned tick == hand loop, bit-for-bit ---------
+    outs, states = planned(y, h, c)
+    y_ref, h_ref, c_ref = loop(y, h, c)
+    for i in range(k):
+        np.testing.assert_array_equal(np.asarray(outs[i][:, 0]),
+                                      np.asarray(y_ref[i]))
+        np.testing.assert_array_equal(np.asarray(states[i]["h"][:, 0]),
+                                      np.asarray(h_ref[:, i]))
+        np.testing.assert_array_equal(np.asarray(states[i]["c"][:, 0]),
+                                      np.asarray(c_ref[:, i]))
+
+    n_planned = pallas_launch_count(planned, y, h, c)
+    n_loop = pallas_launch_count(loop, y, h, c)
+    assert n_planned == p.launches == 1 < n_loop == L
+
+    emit("dispatch/decode_planned_tick", _time(planned, y, h, c),
+         f"H{H}L{L} active={k}/{max_batch} launches_per_tick={n_planned} "
+         f"rows={sum(it.B for it in items)} chained")
+    emit("dispatch/decode_loop_tick", _time(loop, y, h, c),
+         f"H{H}L{L} launches_per_tick={n_loop} rows={max_batch} "
+         "(stale columns computed)")
+
+
+def _cross_b_rows(emit) -> None:
+    """Cross-B packed prefill (pad + in-kernel mask) vs the equal-signature
+    unpacked (per-B-signature) plan of the same mixed-B items."""
+    H, L, T = 64, 3, 12
+    cfg = lstm_config(H, layers=L)
+    items = [WorkItem.from_config(cfg, T=T, B=b, uid=i)
+             for i, b in enumerate((2, 1, 1))]
+    packed, unpacked = plan(items), plan(items, cross_b=False)
+    assert packed.launches < unpacked.launches
+
+    params = {i: init_lstm_stack(jax.random.PRNGKey(i), cfg, jnp.float32)
+              for i in range(len(items))}
+    inputs = {i: jax.random.normal(jax.random.PRNGKey(50 + i),
+                                   (it.B, T, H)) * 0.5
+              for i, it in enumerate(items)}
+
+    def run_packed(pr, xs):
+        return execute(packed, pr, xs, interpret=True)
+
+    def run_unpacked(pr, xs):
+        return execute(unpacked, pr, xs, interpret=True)
+
+    outs_p, outs_u = run_packed(params, inputs), run_unpacked(params, inputs)
+    for i in inputs:
+        np.testing.assert_array_equal(np.asarray(outs_p[i]),
+                                      np.asarray(outs_u[i]))
+
+    n_p = pallas_launch_count(run_packed, params, inputs)
+    n_u = pallas_launch_count(run_unpacked, params, inputs)
+    assert n_p == packed.launches < n_u == unpacked.launches
+
+    shapes = "+".join(f"B{it.B}" for it in items) + f" H{H}L{L}T{T}"
+    emit("dispatch/cross_b_packed_prefill", _time(run_packed, params, inputs),
+         f"{shapes} launches={n_p} slots={len(packed.slots)}")
+    emit("dispatch/cross_b_unpacked_prefill",
+         _time(run_unpacked, params, inputs),
+         f"{shapes} launches={n_u} slots={len(unpacked.slots)}")

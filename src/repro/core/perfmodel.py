@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, replace
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.configs.base import ModelConfig
 from repro.core.tiling import K_CHOICES, TileConfig, mvm_cycles, select_tile
@@ -186,6 +186,41 @@ def per_step_plan_cycles(family: str, H: int, X: int, T: int, L: int,
     per0 = recurrent_step_cycles(family, H, X, design)
     per = recurrent_step_cycles(family, H, H, design) if L > 1 else per0
     return T * (per0 + (L - 1) * per) + L * T * launch_cycles
+
+
+# B rows retire through the datapath in row-tiles of this width (the MXU/
+# sublane granularity): padding a cell's B up to the tile edge is free,
+# which is what makes B-widened (padded + masked) slots usually beat an
+# extra same-signature launch.
+MXU_ROWS = 8
+
+
+def slot_launch_cycles(family: str, H: int, chunk_len: int,
+                       widths: Sequence[int], design: Design, *,
+                       launch_cycles: float = LAUNCH_CYCLES) -> float:
+    """Cycle cost of ONE G-batched sequence-kernel launch whose g-rows are
+    the given batch widths, padded to max(widths).
+
+    The kernel grid walks rows serially; each row's per-step cost scales
+    with its padded B-row-tile count.  The planner uses this to score a
+    B-widened slot (pad ragged widths to one launch, mask the dead rows)
+    against splitting by width (exact rows, one more launch each) — the
+    "B-widened vs G-batched" decision of cross-B packing."""
+    per = recurrent_step_cycles(family, H, H, design)
+    row_tiles = math.ceil(max(widths) / MXU_ROWS)
+    return len(widths) * chunk_len * per * row_tiles + launch_cycles
+
+
+def decode_plan_cycles(family: str, H: int, X: int, L: int, design: Design, *,
+                       launch_cycles: float = LAUNCH_CYCLES) -> float:
+    """Wall-clock cycle estimate of one chained T=1 decode launch: the L
+    layer cells are serially dependent (no wavefront exists at T=1), but
+    they share a single launch — the layer chain runs through VMEM scratch
+    inside one kernel — so only one launch overhead is paid per tick,
+    versus L for the per-layer path (stack_plan_cycles with nk=1)."""
+    per0 = recurrent_step_cycles(family, H, X, design)
+    per = recurrent_step_cycles(family, H, H, design) if L > 1 else per0
+    return per0 + (L - 1) * per + launch_cycles
 
 
 # ===========================================================================

@@ -11,10 +11,17 @@ true remainder length (the kernels T-edge-mask internally), so the state
 left behind after the last slot is the exact t=T state — which is what the
 serving engine splices into its decode slots.
 
+Cross-B packing executes here too: a slot row may be several parameter-
+sharing cells' batches concatenated (same U — the WorkItem.share contract),
+and rows narrower than the slot's width are zero-padded and masked
+in-kernel (``b_valid``) to exact no-ops.  ``chained`` slots (T=1 decode)
+run a whole tick's dependent layer chain in ONE launch via the decode
+kernels, the inter-layer value flowing through VMEM scratch.
+
 Numerics: the per-cell math inside a G-batched launch is identical to the
-G=1 launch (the kernel grid walks cells independently), so a packed plan's
-outputs match per-item execution exactly — property-tested in
-tests/dispatch/.
+G=1 launch (the kernel grid walks cells independently; padded rows are
+masked no-ops), so a packed plan's outputs match per-item execution
+exactly — property-tested in tests/dispatch/.
 """
 from __future__ import annotations
 
@@ -38,11 +45,26 @@ def _hoist(layer_params, src, gates: int):
 def execute(plan: DispatchPlan, params: Dict[int, dict],
             inputs: Dict[int, jnp.ndarray], *,
             interpret: Optional[bool] = None,
-            collect_state: bool = False):
+            collect_state: bool = False,
+            init_state: Optional[Dict[int, dict]] = None,
+            prepared: Optional[Dict[int, dict]] = None):
     """Run ``plan``.  params[uid] = stack params ({"layers": [...]}),
     inputs[uid] = xs (B, T, X).  Returns outputs {uid: (B, T, H)} — or
-    (outputs, states) with states[uid] = {"h": (L,B,H)[, "c": (L,B,H)]}
-    (exact t=T recurrent state) when ``collect_state``.
+    (outputs, states) when ``collect_state``: states[uid] is
+    {"h": (L,B,H)[, "c": (L,B,H)]} (exact t=T recurrent state), or
+    ``None`` for items that expose no single t=T (h[, c]) state — rglru
+    (diagonal recurrence, no gate state surfaced) and bidirectional stacks
+    (two opposing time ends).  Callers splicing state must check for None.
+
+    ``init_state`` optionally seeds the recurrent state of packed items:
+    init_state[uid] = {"h": (L,B,H)[, "c": (L,B,H)]} replaces the zero
+    initial state (the serving engine's decode ticks resume from it).
+    External-fallback items ignore it (their schedule surfaces start from
+    zeros) — the planner never routes a decode item external.
+
+    ``prepared`` optionally carries pre-stacked decode weights per uid
+    (see ``prepare_decode_stack``) so steady-state decode ticks don't
+    restack unchanged parameters every tick.
 
     ``collect_state`` reroutes unpacked (external) unidirectional items
     through the per-layer fused path — the only surface that returns exact
@@ -75,7 +97,7 @@ def execute(plan: DispatchPlan, params: Dict[int, dict],
         if it.family == "rglru":
             outputs[it.uid] = _run_rglru(ip, xs, interpret=interpret)
             if collect_state:
-                states[it.uid] = {}  # rglru recurrence exposes no (h, c)
+                states[it.uid] = None  # rglru exposes no (h, c) state
             continue
         if collect_state and not it.bidirectional:
             # state collection forces the per-layer fused path (the seq
@@ -98,7 +120,7 @@ def execute(plan: DispatchPlan, params: Dict[int, dict],
             outputs[it.uid] = sch.run_stack(params[it.uid], xs, "fused",
                                             interpret=interpret)
         if collect_state:
-            states[it.uid] = {}  # bidirectional: no single t=T state
+            states[it.uid] = None  # bidirectional: no single t=T state
 
     # ---- packed wavefront timeline --------------------------------------
     live: Dict[int, dict] = {}
@@ -107,51 +129,78 @@ def execute(plan: DispatchPlan, params: Dict[int, dict],
             continue
         it = ip.item
         dtype = inputs[it.uid].dtype
+        st0 = (init_state or {}).get(it.uid)
         live[it.uid] = {
             "plan": ip,
-            "h": [jnp.zeros((it.B, it.H), dtype) for _ in range(it.L)],
-            "c": [jnp.zeros((it.B, it.H), jnp.float32)
-                  for _ in range(it.L)] if it.family == "lstm" else None,
+            "h": ([st0["h"][l] for l in range(it.L)] if st0 else
+                  [jnp.zeros((it.B, it.H), dtype) for _ in range(it.L)]),
+            "c": (([st0["c"][l] for l in range(it.L)] if st0 else
+                   [jnp.zeros((it.B, it.H), jnp.float32)
+                    for _ in range(it.L)])
+                  if it.family == "lstm" else None),
             "outs": [[None] * ip.nk for _ in range(it.L)],
         }
 
     for slot in plan.slots:
+        if slot.chained:
+            _run_chained_slot(slot, params, inputs, live,
+                              interpret=interpret, prepared=prepared)
+            continue
         gates = GATES[slot.family]
         xws, us, hs, cs = [], [], [], []
-        for cell in slot.cells:
-            st = live[cell.uid]
-            ip: ItemPlan = st["plan"]
-            layer = params[cell.uid]["layers"][cell.layer]
-            t0 = cell.chunk * ip.block_t
-            if cell.layer == 0:
-                src = inputs[cell.uid][:, t0:t0 + slot.chunk_len]
-            else:
-                src = st["outs"][cell.layer - 1][cell.chunk]
-            xws.append(_hoist(layer, src, gates))
-            us.append(layer["U"].reshape(slot.H, gates, slot.H))
-            hs.append(st["h"][cell.layer])
+        for grp, b in zip(slot.groups, slot.group_b):
+            xw_rows, h_rows, c_rows = [], [], []
+            for cell in grp:
+                st = live[cell.uid]
+                ip: ItemPlan = st["plan"]
+                layer = params[cell.uid]["layers"][cell.layer]
+                t0 = cell.chunk * ip.block_t
+                if cell.layer == 0:
+                    src = inputs[cell.uid][:, t0:t0 + slot.chunk_len]
+                else:
+                    src = st["outs"][cell.layer - 1][cell.chunk]
+                xw_rows.append(_hoist(layer, src, gates))
+                h_rows.append(st["h"][cell.layer])
+                if slot.family == "lstm":
+                    c_rows.append(st["c"][cell.layer])
+            # cross-B row: parameter-sharing cells concatenate on B (same
+            # U by the share contract — take the lead cell's); rows
+            # narrower than the slot's width pad with zeros, masked
+            # in-kernel to exact no-ops
+            xw_g = _cat_pad(xw_rows, slot.B)
+            us.append(params[grp[0].uid]["layers"][grp[0].layer]
+                      ["U"].reshape(slot.H, gates, slot.H))
+            xws.append(xw_g)
+            hs.append(_cat_pad(h_rows, slot.B))
             if slot.family == "lstm":
-                cs.append(st["c"][cell.layer])
+                cs.append(_cat_pad(c_rows, slot.B))
 
         xw = jnp.stack(xws)          # (G, B, bt, gates, H)
         U = jnp.stack(us)            # (G, H, gates, H)
         h0 = jnp.stack(hs)           # (G, B, H)
+        b_valid = (jnp.asarray(slot.group_b, jnp.int32)
+                   if any(b < slot.B for b in slot.group_b) else None)
         if slot.family == "lstm":
             out, h_n, c_n = lstm_seq(U, xw, h0, jnp.stack(cs),
+                                     b_valid=b_valid,
                                      block_t=slot.chunk_len,
                                      interpret=interpret)
         else:
-            out, h_n = gru_seq(U, xw, h0, block_t=slot.chunk_len,
-                               interpret=interpret)
+            out, h_n = gru_seq(U, xw, h0, b_valid=b_valid,
+                               block_t=slot.chunk_len, interpret=interpret)
             c_n = None
 
-        for g, cell in enumerate(slot.cells):
-            st = live[cell.uid]
-            st["h"][cell.layer] = h_n[g].astype(h0.dtype)
-            if c_n is not None:
-                st["c"][cell.layer] = c_n[g]
-            st["outs"][cell.layer][cell.chunk] = \
-                out[g].astype(inputs[cell.uid].dtype)
+        for g, grp in enumerate(slot.groups):
+            off = 0
+            for cell in grp:
+                st = live[cell.uid]
+                nb = st["plan"].item.B
+                st["h"][cell.layer] = h_n[g, off:off + nb].astype(h0.dtype)
+                if c_n is not None:
+                    st["c"][cell.layer] = c_n[g, off:off + nb]
+                st["outs"][cell.layer][cell.chunk] = \
+                    out[g, off:off + nb].astype(inputs[cell.uid].dtype)
+                off += nb
 
     for uid, st in live.items():
         it = st["plan"].item
@@ -162,6 +211,92 @@ def execute(plan: DispatchPlan, params: Dict[int, dict],
                 states[uid]["c"] = jnp.stack(st["c"])
 
     return (outputs, states) if collect_state else outputs
+
+
+def _cat_pad(rows, B: int):
+    """Concatenate row arrays on the batch axis, zero-padding to width B
+    (the padded rows are masked to exact no-ops in-kernel)."""
+    cat = jnp.concatenate(rows) if len(rows) > 1 else rows[0]
+    if cat.shape[0] == B:
+        return cat
+    pad = [(0, B - cat.shape[0])] + [(0, 0)] * (cat.ndim - 1)
+    return jnp.pad(cat, pad)
+
+
+def prepare_decode_stack(stack_params: dict, family: str) -> dict:
+    """Stack a parameter stack into the decode kernels' (L, ...) weight
+    layout: {"Ws", "bs", "Us"}.  Steady-state callers (the serving engine)
+    compute this ONCE per stack and pass it to ``execute(prepared=...)`` —
+    the weights don't change between ticks, so restacking them per tick
+    would dwarf the launch-overhead saving the chained slot exists for.
+
+    Ws[0] is a zero placeholder when layer 0's input width differs from H;
+    the kernel never reads it (layer 0's input half arrives pre-hoisted).
+    """
+    gates = GATES[family]
+    stack = stack_params["layers"]
+    H = stack[0]["U"].shape[0]
+    L = len(stack)
+    W0 = (stack[0]["W"].reshape(H, gates, H)
+          if stack[0]["W"].shape[0] == H else
+          jnp.zeros((H, gates, H), stack[0]["W"].dtype))
+    return {
+        "Ws": jnp.stack([W0] + [stack[l]["W"].reshape(H, gates, H)
+                                for l in range(1, L)]),
+        "bs": jnp.stack([stack[l]["b"].reshape(gates, H)
+                         for l in range(L)]),
+        "Us": jnp.stack([stack[l]["U"].reshape(H, gates, H)
+                         for l in range(L)]),
+    }
+
+
+def _run_chained_slot(slot, params, inputs, live, *, interpret=None,
+                      prepared=None):
+    """Execute a chained decode slot: ONE launch for a whole T=1 tick.
+
+    The slot's groups are the L serially dependent layer cells, each the
+    B-concatenation of the tick's parameter-sharing items; the decode
+    kernel walks layers in grid order, chaining the inter-layer value
+    through VMEM scratch (see kernels.*.lstm_decode/gru_decode).  Layer
+    0's input GEMM is hoisted here, inside the slot (it exists before
+    launch); deeper layers' input GEMMs run in-kernel off the chain.
+    """
+    from repro.kernels.gru_cell.ops import gru_decode
+    from repro.kernels.lstm_cell.ops import lstm_decode
+
+    gates = GATES[slot.family]
+    row_cells = slot.groups[0]      # request row order, fixed across layers
+    lead_uid = row_cells[0].uid
+    stack = params[lead_uid]["layers"]
+    L = len(slot.groups)
+
+    xw0 = _cat_pad([_hoist(stack[0], inputs[c.uid], gates)[:, 0]
+                    for c in row_cells], slot.B)        # (B, gates, H)
+    prep = ((prepared or {}).get(lead_uid)
+            or prepare_decode_stack(params[lead_uid], slot.family))
+    Ws, bs, Us = prep["Ws"], prep["bs"], prep["Us"]
+    h0 = jnp.stack([_cat_pad([live[c.uid]["h"][l] for c in row_cells],
+                             slot.B) for l in range(L)])  # (L, B, H)
+    if slot.family == "lstm":
+        c0 = jnp.stack([_cat_pad([live[c.uid]["c"][l] for c in row_cells],
+                                 slot.B) for l in range(L)])
+        h_n, c_n = lstm_decode(xw0, Ws, bs, Us, h0, c0, interpret=interpret)
+    else:
+        h_n = gru_decode(xw0, Ws, bs, Us, h0, interpret=interpret)
+        c_n = None
+
+    off = 0
+    for cell in row_cells:
+        st = live[cell.uid]
+        nb = st["plan"].item.B
+        dtype = inputs[cell.uid].dtype
+        for l in range(L):
+            st["h"][l] = h_n[l, off:off + nb].astype(h0.dtype)
+            if c_n is not None:
+                st["c"][l] = c_n[l, off:off + nb]
+            # layer l's new h IS its T=1 output frame
+            st["outs"][l][0] = h_n[l, off:off + nb, None].astype(dtype)
+        off += nb
 
 
 def _run_gru_stack(ip: ItemPlan, stack, xs, *, interpret=None):

@@ -12,9 +12,18 @@ This is the software rendition of SHARP's intelligent tile-based dispatch
      (layer, time-chunk) cells, ``per_step`` fallback = one launch per
      cell) with ``core.perfmodel`` cycle estimates and picks the cheapest;
   3. *packs* it — cells of different items that share a launch signature
-     (family, H, B, chunk length, dtype) are co-scheduled into one global
+     (family, H, chunk length, dtype) are co-scheduled into one global
      slot timeline, each slot one G-batched sequence-kernel launch, so
      independent recurrences hide each other's serial dependencies.
+     Cross-B packing goes further: same-layer cells of parameter-sharing
+     items concatenate on B into one launch row, and ragged widths pad
+     into one slot (in-kernel masked) when the perfmodel scores the
+     widened launch cheaper than an extra one.
+
+``plan_decode`` plans a serving decode tick: T=1 items over one shared
+stack become a single *chained* slot — one launch walks the L dependent
+layer cells in grid order with the inter-layer value in VMEM scratch —
+instead of L per-layer launches.
 
 The emitted ``DispatchPlan`` is a plain ordered tuple of ``Slot``s — every
 launch the executor will make, with its tile/block configuration — so plans
@@ -26,11 +35,12 @@ from dataclasses import dataclass
 from typing import Dict, Iterable, List, Sequence, Tuple
 
 from repro.core.autotune import table
-from repro.core.perfmodel import (Design, LAUNCH_CYCLES,
-                                  per_step_plan_cycles, stack_plan_cycles)
+from repro.core.perfmodel import (Design, LAUNCH_CYCLES, decode_plan_cycles,
+                                  per_step_plan_cycles, slot_launch_cycles,
+                                  stack_plan_cycles)
 from repro.core.schedules import wavefront_active
 from repro.core.tiling import SEQ_VMEM_BUDGET, seq_block_footprint
-from repro.dispatch.workitem import WorkItem
+from repro.dispatch.workitem import GATES, WorkItem
 from repro.kernels.common import cdiv
 
 DEFAULT_MACS = 16384  # planner's reference tile-engine budget (paper 16K)
@@ -46,33 +56,52 @@ class Cell:
 
 @dataclass(frozen=True)
 class Slot:
-    """One batched kernel launch: G independent cells sharing a signature.
+    """One batched kernel launch: G independent rows sharing a signature.
+
+    Each entry of ``groups`` is one launch row (one g of the G-batched
+    sequence kernel): ordinarily a single cell, but under cross-B packing
+    several same-layer cells of parameter-sharing items (WorkItem.share)
+    concatenated on B.  ``group_b`` records each row's valid batch width;
+    rows narrower than ``B`` are padded and masked in-kernel (ragged-B),
+    so padded rows are exact no-ops.
 
     ``wave`` is the anti-diagonal index (all of a slot's cells have
     layer + chunk == wave for their item); slots execute in ``index``
-    order and every cell's dependencies ran in an earlier wave.
+    order and every cell's dependencies ran in an earlier wave.  The one
+    exception is ``chained`` slots (T=1 decode): their groups are the L
+    *serially dependent* layer cells of one tick, executed in group order
+    inside ONE launch (the layer chain runs through VMEM scratch), so the
+    whole tick is a single launch instead of L.
     """
     index: int
     wave: int
     family: str
     H: int
-    B: int
+    B: int                  # the launch's (padded) batch width per row
     chunk_len: int          # timesteps per cell in this launch
     dtype: str
     tile_k: int             # paper tile-engine K for this launch's MVMs
     mvm_block: Tuple[int, int]  # Pallas (bk, bh) block for the cell MVM
-    cells: Tuple[Cell, ...]
+    groups: Tuple[Tuple[Cell, ...], ...]
+    group_b: Tuple[int, ...]    # valid batch rows per group (<= B)
+    chained: bool = False
 
     @property
     def g(self) -> int:
-        return len(self.cells)
+        return len(self.groups)
+
+    @property
+    def cells(self) -> Tuple[Cell, ...]:
+        return tuple(c for grp in self.groups for c in grp)
 
     def describe(self) -> str:
-        cells = " ".join(f"({c.uid},l{c.layer},k{c.chunk})"
-                         for c in self.cells)
+        grps = " ".join(
+            "[" + " ".join(f"({c.uid},l{c.layer},k{c.chunk})" for c in grp)
+            + f"]b{b}" for grp, b in zip(self.groups, self.group_b))
+        tag = " chained" if self.chained else ""
         return (f"slot {self.index:3d} wave {self.wave:3d}  "
                 f"{self.family} H{self.H} B{self.B} bt{self.chunk_len} "
-                f"K{self.tile_k} blk{self.mvm_block}  G={self.g}  {cells}")
+                f"K{self.tile_k} blk{self.mvm_block}  G={self.g}{tag}  {grps}")
 
 
 @dataclass(frozen=True)
@@ -177,38 +206,105 @@ def _item_cells(ip: ItemPlan) -> Dict[int, List[Tuple[int, Cell]]]:
     return waves
 
 
-def _pack(item_plans: Sequence[ItemPlan], macs: int) -> Tuple[Slot, ...]:
+def _slot_config(family: str, H: int, macs: int) -> Tuple[int, Tuple[int, int]]:
+    """The slot's own launch shape: its in-kernel MVM is the recurrent
+    half (H x gates·H) per cell — X-independent, so cells of different-X
+    items share this config honestly."""
+    gates = GATES.get(family, 1)
+    tile_k = table().tile(gates * H, H, macs).k if macs else 0
+    mvm_block = table().block(H, H, vmem_budget=2 * 2**20)
+    return tile_k, mvm_block
+
+
+def _pack(item_plans: Sequence[ItemPlan], macs: int, *,
+          cross_b: bool = True) -> Tuple[Slot, ...]:
     """Merge items' wavefront cells into one slot timeline.
 
     Every slot is one G-batched launch; cells group by launch signature
-    (family, H, B, chunk_len, dtype).  Deterministic: slots ordered by
-    (wave, signature), cells within a slot by item order_key then layer.
+    (family, H, chunk_len, dtype — plus B when ``cross_b`` is off).  Under
+    ``cross_b``, two extra merges apply:
+
+      * same-layer cells of parameter-sharing items (equal non-None
+        ``WorkItem.share``) concatenate on B into ONE launch row — the
+        recurrent MVM is identical (one U), so the rows simply widen;
+      * rows of different widths may share a slot by padding to the widest
+        row with in-kernel ragged-B masking — adopted only when the
+        perfmodel says the padded walk beats the extra launch
+        (``slot_launch_cycles``: B-widened vs G-batched).
+
+    Deterministic: slots ordered by (wave, signature), rows by the lead
+    cell's item order_key then layer, cells within a row likewise.
     """
+    design = Design(macs=macs or DEFAULT_MACS, schedule="unfolded")
     by_item = [(ip, _item_cells(ip)) for ip in item_plans]
     n_waves = max((max(w) + 1 for _, w in by_item if w), default=0)
     slots: List[Slot] = []
     for s in range(n_waves):
-        groups: Dict[Tuple, List[Tuple[Tuple, Cell]]] = {}
+        sigs: Dict[Tuple, Dict[Tuple, List[Tuple[Tuple, Cell, int]]]] = {}
         for ip, waves in by_item:
             it = ip.item
             for chunk_len, cell in waves.get(s, []):
-                sig = (it.family, it.H, it.B, chunk_len, it.dtype)
-                groups.setdefault(sig, []).append(
-                    (it.order_key() + (cell.layer,), cell))
-        for sig in sorted(groups, key=str):
-            family, H, B, chunk_len, dtype = sig
-            cells = tuple(c for _, c in sorted(groups[sig],
-                                               key=lambda kc: kc[0]))
-            # the slot's own launch shape: its in-kernel MVM is the
-            # recurrent half (H x gates·H) per cell — X-independent, so
-            # cells of different-X items share this config honestly
-            gates = {"lstm": 4, "gru": 3}.get(family, 1)
-            tile_k = table().tile(gates * H, H, macs).k if macs else 0
-            mvm_block = table().block(H, H, vmem_budget=2 * 2**20)
-            slots.append(Slot(
-                index=len(slots), wave=s, family=family, H=H, B=B,
-                chunk_len=chunk_len, dtype=dtype, tile_k=tile_k,
-                mvm_block=mvm_block, cells=cells))
+                if cross_b:
+                    sig = (it.family, it.H, chunk_len, it.dtype)
+                    gkey = (("share", it.share, cell.layer)
+                            if it.share is not None else
+                            ("solo", it.uid, cell.layer, cell.chunk))
+                else:
+                    sig = (it.family, it.H, it.B, chunk_len, it.dtype)
+                    gkey = ("solo", it.uid, cell.layer, cell.chunk)
+                sigs.setdefault(sig, {}).setdefault(gkey, []).append(
+                    (it.order_key() + (cell.layer,), cell, it.B))
+        for sig in sorted(sigs, key=str):
+            if cross_b:
+                family, H, chunk_len, dtype = sig
+            else:
+                family, H, _, chunk_len, dtype = sig
+            gates = GATES.get(family, 1)
+
+            def fits(width: int) -> bool:
+                # every item validated its block_t at its OWN B; a concat
+                # row is wider, so re-check the sequence kernels' VMEM
+                # working-set bound before widening (a singleton row always
+                # fits by the per-item validation)
+                return seq_block_footprint(chunk_len, width, H,
+                                           gates=gates) <= SEQ_VMEM_BUDGET
+
+            rows = []  # (lead order key, cells, valid B)
+            for members in sigs[sig].values():
+                members.sort(key=lambda m: m[0])
+                run, width = [], 0
+                for m in members:
+                    if run and not fits(width + m[2]):
+                        rows.append((run[0][0],
+                                     tuple(c for _, c, _ in run), width))
+                        run, width = [], 0
+                    run.append(m)
+                    width += m[2]
+                rows.append((run[0][0], tuple(c for _, c, _ in run), width))
+            rows.sort(key=lambda r: r[0])
+            widths = [b for _, _, b in rows]
+            classes = sorted(set(widths))
+            if len(classes) > 1:
+                # B-widened (one padded launch) vs G-batched by width
+                # (exact rows, one launch per width class) — scored
+                merged = slot_launch_cycles(family, H, chunk_len, widths,
+                                            design)
+                split = sum(slot_launch_cycles(
+                    family, H, chunk_len, [w for w in widths if w == cls],
+                    design) for cls in classes)
+                buckets = ([rows] if merged <= split else
+                           [[r for r in rows if r[2] == cls]
+                            for cls in classes])
+            else:
+                buckets = [rows]
+            tile_k, mvm_block = _slot_config(family, H, macs)
+            for bucket in buckets:
+                slots.append(Slot(
+                    index=len(slots), wave=s, family=family, H=H,
+                    B=max(b for _, _, b in bucket), chunk_len=chunk_len,
+                    dtype=dtype, tile_k=tile_k, mvm_block=mvm_block,
+                    groups=tuple(cells for _, cells, _ in bucket),
+                    group_b=tuple(b for _, _, b in bucket)))
     return tuple(slots)
 
 
@@ -285,12 +381,19 @@ def _with_naive(ip: ItemPlan) -> ItemPlan:
 
 
 def plan(items: Iterable[WorkItem], *, macs: int = DEFAULT_MACS,
-         align_stripes: bool = True) -> DispatchPlan:
+         align_stripes: bool = True, cross_b: bool = True) -> DispatchPlan:
     """Plan a batch of WorkItems into an explicit DispatchPlan.
 
-    ``align_stripes``: items that could share launches (same family/H/B/
+    ``align_stripes``: items that could share launches (same family/H/
     dtype) re-align to a common T-stripe when the perfmodel says the
     re-striping cost is worth the packing (scored, not assumed).
+
+    ``cross_b``: allow cells that differ only in batch rows to share a
+    launch — parameter-sharing items' same-layer cells concatenate on B,
+    and ragged widths pad+mask into one slot when the perfmodel scores the
+    widened launch cheaper (see ``_pack``).  Off = the launch signature
+    includes B, every cell its own row (the pre-cross-B behaviour, kept as
+    the benchmark baseline).
     """
     items = sorted(items, key=WorkItem.order_key)
     if len({it.uid for it in items}) != len(items):
@@ -300,7 +403,7 @@ def plan(items: Iterable[WorkItem], *, macs: int = DEFAULT_MACS,
     plans = {it.uid: _schedule_item(it, macs, design) for it in items}
 
     if align_stripes:
-        _align_group_stripes(items, plans, design)
+        _align_group_stripes(items, plans, design, cross_b=cross_b)
 
     packable, external = [], []
     for it in items:
@@ -311,14 +414,84 @@ def plan(items: Iterable[WorkItem], *, macs: int = DEFAULT_MACS,
         else:
             external.append(ip.uid)
 
-    slots = _pack(packable, macs)
+    slots = _pack(packable, macs, cross_b=cross_b)
     return DispatchPlan(items=tuple(plans[it.uid] for it in items),
                         slots=slots, external=tuple(external), macs=macs)
 
 
+def plan_decode(items: Iterable[WorkItem], *,
+                macs: int = DEFAULT_MACS) -> DispatchPlan:
+    """Plan one serving decode tick: each item is a T=1 evaluation of the
+    SAME parameter stack (all items must carry one non-None ``share`` key)
+    for some batch rows — one active request each, in the serving engine.
+
+    A T=1 item has no wavefront (its L layer cells are serially
+    dependent), so the generic planner would emit L per-layer slots.  But
+    the dependence chain can run inside ONE launch — the kernel grid walks
+    layers in order and the inter-layer value chains through VMEM scratch
+    (ROADMAP: "a T=1 wavefront over layers is a single slot") — and the
+    items' rows concatenate on B (cross-B packing, trivially un-ragged:
+    every layer carries the same rows).  The choice is scored, not
+    assumed: ``decode_plan_cycles`` (1 launch) vs ``stack_plan_cycles``
+    at nk=1 (L launches); the chain wins whenever LAUNCH_CYCLES > 0.
+    """
+    items = sorted(items, key=WorkItem.order_key)
+    if not items:
+        raise ValueError("plan_decode needs at least one item")
+    if len({it.uid for it in items}) != len(items):
+        raise ValueError("duplicate WorkItem uids")
+    head = items[0]
+    if head.family not in ("lstm", "gru"):
+        raise ValueError(f"no decode kernel for family {head.family!r}")
+    for it in items:
+        if it.T != 1:
+            raise ValueError(f"item {it.uid}: decode items are T=1, got "
+                             f"T={it.T}")
+        if it.share is None:
+            raise ValueError(f"item {it.uid}: decode items must declare a "
+                             "shared parameter stack (share=...)")
+        if it.bidirectional:
+            raise ValueError("bidirectional stacks have no streaming decode")
+        key = (it.family, it.H, it.L, it.X, it.dtype, it.share)
+        if key != (head.family, head.H, head.L, head.X, head.dtype,
+                   head.share):
+            raise ValueError(f"item {it.uid}: decode tick items must share "
+                             f"(family, H, L, X, dtype, share); "
+                             f"{key} != first item's")
+
+    design = Design(macs=macs, schedule="unfolded")
+    tile_k, mvm_block = _slot_config(head.family, head.H, macs)
+    est_chain = decode_plan_cycles(head.family, head.H, head.X, head.L,
+                                   design)
+    est_layers = stack_plan_cycles(head.family, head.H, head.X, 1, head.L,
+                                   design, nk=1)
+    # scoring sanity, not a choice: the chain does the identical serial
+    # compute with ONE launch instead of L — the estimates can only differ
+    # by the (L-1)·LAUNCH_CYCLES term, so a flip means the perfmodel broke
+    # (fail here with context rather than confuse the serving engine with
+    # an unexpected plan shape)
+    assert est_chain <= est_layers, (est_chain, est_layers)
+
+    item_plans = tuple(
+        ItemPlan(item=it, schedule="decode", block_t=1, nk=1, tile_k=tile_k,
+                 mvm_block=mvm_block, naive_launches=it.L,
+                 est_cycles=est_chain / len(items))
+        for it in items)
+    B_total = sum(it.B for it in items)
+    slot = Slot(index=0, wave=0, family=head.family, H=head.H, B=B_total,
+                chunk_len=1, dtype=head.dtype, tile_k=tile_k,
+                mvm_block=mvm_block,
+                groups=tuple(tuple(Cell(uid=it.uid, layer=l, chunk=0)
+                                   for it in items)
+                             for l in range(head.L)),
+                group_b=(B_total,) * head.L, chained=True)
+    return DispatchPlan(items=item_plans, slots=(slot,), external=(),
+                        macs=macs)
+
+
 def _align_group_stripes(items: Sequence[WorkItem],
                          plans: Dict[int, ItemPlan],
-                         design: Design) -> None:
+                         design: Design, *, cross_b: bool = True) -> None:
     """Re-stripe packable same-signature items to one shared block_t.
 
     Candidate stripes are the members' chosen ones; each candidate is
@@ -334,12 +507,23 @@ def _align_group_stripes(items: Sequence[WorkItem],
         ip = plans[it.uid]
         if ip.schedule in ("wavefront", "fused") and it.family != "rglru" \
                 and it.T > 0 and not it.bidirectional:
-            groups.setdefault((it.family, it.H, it.B, it.dtype), []).append(it)
+            # under cross-B, different-B items can share launches too
+            sig = ((it.family, it.H, it.dtype) if cross_b
+                   else (it.family, it.H, it.B, it.dtype))
+            groups.setdefault(sig, []).append(it)
 
     def trial_plans(members, bt):
         out = []
         for m in members:
             mbt = min(bt, m.T) if bt else plans[m.uid].block_t
+            # a cross-B group mixes batch widths: the shared stripe must
+            # respect the VMEM working-set bound at each member's OWN B
+            # (its original block_t was only validated there) — members the
+            # stripe doesn't fit keep their own validated choice
+            if mbt > 1 and seq_block_footprint(mbt, m.B, m.H,
+                                               gates=m.gates) \
+                    > SEQ_VMEM_BUDGET:
+                mbt = plans[m.uid].block_t
             nk = cdiv(m.T, mbt)
             est = stack_plan_cycles(m.family, m.H, m.X, m.T, m.L, design,
                                     nk=nk)
@@ -349,8 +533,8 @@ def _align_group_stripes(items: Sequence[WorkItem],
         return out
 
     def group_cost(trial):
-        naive = sum(len(_pack([t], 0)) for t in trial)
-        packed = len(_pack(trial, 0))
+        naive = sum(len(_pack([t], 0, cross_b=cross_b)) for t in trial)
+        packed = len(_pack(trial, 0, cross_b=cross_b))
         return (sum(t.est_cycles for t in trial)
                 - LAUNCH_CYCLES * (naive - packed))
 

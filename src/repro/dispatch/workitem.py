@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field, replace
+from typing import Optional
 
 from repro.configs.base import ModelConfig
 
@@ -43,6 +44,13 @@ class WorkItem:
     priority: int = 0      # lower runs earlier within a slot/admission wave
     deadline_us: float = math.inf  # soft; tie-breaks equal priorities
     bidirectional: bool = False
+    share: Optional[int] = None  # items with one non-None share key promise
+    #                              to bind the SAME parameter stack at
+    #                              execution (e.g. requests of one served
+    #                              model), so their same-layer cells may
+    #                              concatenate on B into one launch row
+    #                              (cross-B packing) instead of occupying
+    #                              separate G rows
 
     def __post_init__(self):
         if self.family not in FAMILIES:
@@ -66,21 +74,23 @@ class WorkItem:
     def from_config(cls, cfg: ModelConfig, T: int, *, B: int = 1,
                     uid: int = 0, priority: int = 0,
                     deadline_us: float = math.inf,
-                    rnn_family: str = "lstm") -> "WorkItem":
+                    rnn_family: str = "lstm",
+                    share: Optional[int] = None) -> "WorkItem":
         """Extract the recurrent workload of ``cfg`` as a WorkItem."""
         if cfg.family == "rnn":
             return cls(uid=uid, family=rnn_family, B=B, T=T,
                        H=cfg.lstm_hidden, L=cfg.n_layers, X=cfg.lstm_input,
                        dtype=cfg.dtype, priority=priority,
                        deadline_us=deadline_us,
-                       bidirectional=cfg.bidirectional)
+                       bidirectional=cfg.bidirectional, share=share)
         if cfg.family in ("ssm", "hybrid"):
             kinds = cfg.layer_kinds()
             n_rec = sum(1 for k in kinds if k != "attn") or cfg.n_layers
             return cls(uid=uid, family="rglru", B=B, T=T,
                        H=cfg.rglru_width or cfg.d_model, L=n_rec,
                        X=cfg.rglru_width or cfg.d_model, dtype=cfg.dtype,
-                       priority=priority, deadline_us=deadline_us)
+                       priority=priority, deadline_us=deadline_us,
+                       share=share)
         raise ValueError(
             f"config {cfg.name!r} (family {cfg.family!r}) has no recurrent "
             "core to dispatch")

@@ -17,6 +17,17 @@ def round_up(a: int, b: int) -> int:
     return cdiv(a, b) * b
 
 
+def ragged_b_mask(G: int, B: int, b_valid):
+    """(G, B) int32 validity mask from per-cell valid row counts (ragged-B
+    packing): mask[g, b] = 1 iff b < b_valid[g].  Shared by the sequence
+    kernels' ``b_valid`` plumbing."""
+    import jax
+    import jax.numpy as jnp
+
+    return (jax.lax.broadcasted_iota(jnp.int32, (G, B), 1)
+            < jnp.asarray(b_valid, jnp.int32)[:, None]).astype(jnp.int32)
+
+
 # ---------------------------------------------------------------------------
 # structural launch accounting
 # ---------------------------------------------------------------------------

@@ -28,13 +28,21 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.common import cdiv
 
 
-def _seq_kernel(xw_ref, u_ref, h0_ref, hs_ref, hn_ref, h_scr, *,
-                block_t: int, T: int):
+def _seq_kernel(*refs, block_t: int, T: int, masked: bool):
     """One grid step = one T-block of one recurrence ``g``.
 
     Grid is (G, n_t) with t innermost; h persists in VMEM scratch across
     the t walk and is re-seeded from h0 at each cell's first block.
+
+    ``masked``: a per-row validity mask (ragged-B packing) rides along as
+    an extra input; padded rows freeze their state exactly like the T-edge
+    mask, so they are exact no-ops.
     """
+    if masked:
+        xw_ref, u_ref, h0_ref, m_ref, hs_ref, hn_ref, h_scr = refs
+    else:
+        xw_ref, u_ref, h0_ref, hs_ref, hn_ref, h_scr = refs
+        m_ref = None
     t = pl.program_id(1)
 
     @pl.when(t == 0)
@@ -64,6 +72,8 @@ def _seq_kernel(xw_ref, u_ref, h0_ref, hs_ref, hn_ref, h_scr, *,
         # T-edge mask: the last block's tail reads BlockSpec padding
         # (undefined, NaN under interpret) — freeze the state there
         valid = base + i < T
+        if m_ref is not None:
+            valid = jnp.logical_and(valid, m_ref[0] != 0)[:, None]  # (B, 1)
         h = jnp.where(valid, h_new, h)
         ys = jax.lax.dynamic_update_index_in_dim(ys, h, i, axis=1)
         return h, ys
@@ -75,27 +85,35 @@ def _seq_kernel(xw_ref, u_ref, h0_ref, hs_ref, hn_ref, h_scr, *,
     hn_ref[0] = h.astype(hn_ref.dtype)
 
 
-def gru_seq_pallas(U3, xw, h0, *, block_t: int, interpret: bool = True):
+def gru_seq_pallas(U3, xw, h0, *, block_t: int, interpret: bool = True,
+                   b_mask=None):
     """Sequence-fused GRU recurrence — ONE kernel launch for all T steps.
 
     U3 (G,H,3,H); xw (G,B,T,3,H) precomputed input half (+bias);
     h0 (G,B,H).  Returns (hs (G,B,T,H), h_T (G,B,H)).  ``G`` batches
     independent recurrences (e.g. the GRU cells of one wavefront slot);
-    pass G=1 for a single layer.
+    pass G=1 for a single layer.  ``b_mask`` (G,B) int32 marks valid batch
+    rows under ragged-B packing: zero rows are exact no-ops.
     """
     G, B, T, _, H = xw.shape
     bt = max(1, min(block_t, T))
     n_t = cdiv(T, bt)
 
-    kernel = functools.partial(_seq_kernel, block_t=bt, T=T)
+    masked = b_mask is not None
+    kernel = functools.partial(_seq_kernel, block_t=bt, T=T, masked=masked)
+    in_specs = [
+        pl.BlockSpec((1, B, bt, 3, H), lambda g, t: (g, 0, t, 0, 0)),  # xw
+        pl.BlockSpec((1, H, 3, H), lambda g, t: (g, 0, 0, 0)),         # U3
+        pl.BlockSpec((1, B, H), lambda g, t: (g, 0, 0)),               # h0
+    ]
+    args = (xw, U3, h0)
+    if masked:
+        in_specs.append(pl.BlockSpec((1, B), lambda g, t: (g, 0)))     # mask
+        args += (b_mask,)
     hs, h_n = pl.pallas_call(
         kernel,
         grid=(G, n_t),
-        in_specs=[
-            pl.BlockSpec((1, B, bt, 3, H), lambda g, t: (g, 0, t, 0, 0)),  # xw
-            pl.BlockSpec((1, H, 3, H), lambda g, t: (g, 0, 0, 0)),         # U3
-            pl.BlockSpec((1, B, H), lambda g, t: (g, 0, 0)),               # h0
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, B, bt, H), lambda g, t: (g, 0, t, 0)),        # hs
             pl.BlockSpec((1, B, H), lambda g, t: (g, 0, 0)),               # h_T
@@ -108,5 +126,87 @@ def gru_seq_pallas(U3, xw, h0, *, block_t: int, interpret: bool = True):
             pltpu.VMEM((B, H), jnp.float32),   # h — resident across t
         ],
         interpret=interpret,
-    )(xw, U3, h0)
+    )(*args)
     return hs, h_n
+
+
+# ===========================================================================
+# chained decode kernel: a whole T=1 stack tick inside ONE pallas_call
+# ===========================================================================
+
+
+def _decode_kernel(xw0_ref, w_ref, b_ref, u_ref, h0_ref, hn_ref, y_scr,
+                   xw_scr, *, out_dtype, xw_dtype):
+    """One grid step = one layer of a T=1 GRU decode tick (see the LSTM
+    twin in kernels.lstm_cell.kernel for the full story): the layer chain
+    serializes through ``y_scr``, layer 0 uses the pre-hoisted ``xw0``
+    (its in-kernel input GEMM pl.when-guarded away), deeper layers compute
+    their input GEMM in-kernel — one launch per tick instead of L."""
+    l = pl.program_id(0)
+    H = u_ref.shape[-1]
+    B = xw0_ref.shape[0]
+
+    @pl.when(l == 0)
+    def _first():
+        xw_scr[...] = xw0_ref[...].astype(jnp.float32)
+
+    @pl.when(l > 0)
+    def _deeper():
+        # round GEMM + bias through the per-layer hoist's result dtype
+        # (``xw_dtype``) — see the LSTM twin for why this keeps
+        # low-precision weight stacks bit-identical too
+        xw = jax.lax.dot_general(
+            y_scr[...], w_ref[0].reshape(H, 3 * H).astype(jnp.float32),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ).astype(xw_dtype).reshape(B, 3, H)
+        xw_scr[...] = (xw + b_ref[0].astype(xw_dtype)).astype(jnp.float32)
+
+    xw = xw_scr[...]
+    hu = jax.lax.dot_general(
+        h0_ref[0].astype(jnp.float32), u_ref[0].reshape(H, 3 * H),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).reshape(B, 3, H)
+    z = jax.nn.sigmoid(xw[:, 0] + hu[:, 0])
+    r = jax.nn.sigmoid(xw[:, 1] + hu[:, 1])
+    n = jnp.tanh(xw[:, 2] + r * hu[:, 2])
+    h = (1 - z) * n + z * h0_ref[0].astype(jnp.float32)
+    y_scr[...] = h.astype(out_dtype).astype(jnp.float32)
+    hn_ref[0] = h.astype(hn_ref.dtype)
+
+
+def gru_decode_pallas(xw0, Ws, bs, Us, h0, *, interpret: bool = True):
+    """One T=1 decode tick through an L-layer GRU stack — ONE launch.
+
+    xw0 (B,3,H) hoisted layer-0 input half (+bias); Ws (L,H,3,H) (entry 0
+    unused); bs (L,3,H); Us (L,H,3,H); h0 (L,B,H).  Returns h_n (L,B,H);
+    the top-layer feedback frame is ``h_n[-1]``.
+    """
+    L, B, H = h0.shape
+    kernel = functools.partial(
+        _decode_kernel, out_dtype=h0.dtype,
+        xw_dtype=jnp.promote_types(h0.dtype, Ws.dtype))
+    (h_n,) = pl.pallas_call(
+        kernel,
+        grid=(L,),
+        in_specs=[
+            pl.BlockSpec((B, 3, H), lambda l: (0, 0, 0)),        # xw0
+            pl.BlockSpec((1, H, 3, H), lambda l: (l, 0, 0, 0)),  # Ws
+            pl.BlockSpec((1, 3, H), lambda l: (l, 0, 0)),        # bs
+            pl.BlockSpec((1, H, 3, H), lambda l: (l, 0, 0, 0)),  # Us
+            pl.BlockSpec((1, B, H), lambda l: (l, 0, 0)),        # h0
+        ],
+        out_specs=[
+            pl.BlockSpec((1, B, H), lambda l: (l, 0, 0)),        # h_n
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((L, B, H), h0.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((B, H), jnp.float32),     # y — the layer chain's wire
+            pltpu.VMEM((B, 3, H), jnp.float32),  # xw — this layer's input half
+        ],
+        interpret=interpret,
+    )(xw0, Ws, bs, Us, h0)
+    return h_n

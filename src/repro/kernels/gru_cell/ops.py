@@ -7,13 +7,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.autotune import table
-from repro.kernels.common import default_interpret
-from repro.kernels.gru_cell.kernel import gru_seq_pallas
+from repro.kernels.common import default_interpret, ragged_b_mask
+from repro.kernels.gru_cell.kernel import gru_decode_pallas, gru_seq_pallas
 from repro.kernels.gru_cell.ref import gru_seq_ref, gru_step_ref
 
 
 @functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
-def gru_seq(U3, xw, h0=None, *, block_t: int = 0,
+def gru_seq(U3, xw, h0=None, *, b_valid=None, block_t: int = 0,
             interpret: bool | None = None):
     """Sequence-fused GRU recurrence: ONE pallas_call for the whole T walk.
 
@@ -21,9 +21,14 @@ def gru_seq(U3, xw, h0=None, *, block_t: int = 0,
     (B,T,3,H) / (G,B,T,3,H) precomputed input half; h0 optional (…B,H)
     initial state (zeros when omitted).  Returns (hs, h_T); ``hs`` is
     (…B,T,H).  ``block_t`` (the streamed T-stripe) defaults to the autotune
-    table's VMEM-budget choice (gates=3)."""
+    table's VMEM-budget choice (gates=3).
+
+    ``b_valid`` (stacked form only): (G,) int array of valid batch rows per
+    cell under ragged-B packing — rows >= b_valid[g] are exact no-ops."""
     stacked = xw.ndim == 5
     if not stacked:
+        if b_valid is not None:
+            raise ValueError("b_valid requires the stacked (G, ...) form")
         U3, xw = U3[None], xw[None]
         if h0 is not None:
             h0 = h0[None]
@@ -37,10 +42,28 @@ def gru_seq(U3, xw, h0=None, *, block_t: int = 0,
         block_t = table().seq_block(T, B, H, gates=3)
     if interpret is None:
         interpret = default_interpret()
-    hs, h_n = gru_seq_pallas(U3, xw, h0, block_t=block_t, interpret=interpret)
+    b_mask = None if b_valid is None else ragged_b_mask(G, B, b_valid)
+    hs, h_n = gru_seq_pallas(U3, xw, h0, block_t=block_t, interpret=interpret,
+                             b_mask=b_mask)
     if not stacked:
         hs, h_n = hs[0], h_n[0]
     return hs, h_n
 
 
-__all__ = ["gru_seq", "gru_seq_ref", "gru_step_ref"]
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gru_decode(xw0, Ws, bs, Us, h0, *, interpret: bool | None = None):
+    """One T=1 decode tick through a whole L-layer GRU stack in ONE launch
+    (the lstm_decode pattern on the 3-gate cell — see kernels.lstm_cell).
+
+    xw0 (B,3,H) hoisted layer-0 input half; Ws (L,H,3,H) (entry 0 unused);
+    bs (L,3,H); Us (L,H,3,H); h0 (L,B,H).  Returns h_n (L,B,H); the
+    top-layer feedback frame is ``h_n[-1]``.  Bit-identical to L per-layer
+    ``gru_seq(..., T=1)`` launches whenever the hoisted input GEMM
+    promotes to f32 (see kernels.lstm_cell.lstm_decode for the fully-bf16
+    caveat)."""
+    if interpret is None:
+        interpret = default_interpret()
+    return gru_decode_pallas(xw0, Ws, bs, Us, h0, interpret=interpret)
+
+
+__all__ = ["gru_seq", "gru_seq_ref", "gru_step_ref", "gru_decode"]

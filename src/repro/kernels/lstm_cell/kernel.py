@@ -110,13 +110,24 @@ def lstm_cell_pallas(U4, xw_t, h_prev, c_prev, *, block_h: int, block_k: int,
 # ===========================================================================
 
 
-def _seq_kernel(xw_ref, u_ref, h0_ref, c0_ref, hs_ref, hn_ref, cn_ref,
-                h_scr, c_scr, *, block_t: int, T: int):
+def _seq_kernel(*refs, block_t: int, T: int, masked: bool):
     """One grid step = one T-block of one recurrence ``g``.
 
     Grid is (G, n_t) with t innermost; (h, c) persist in VMEM scratch across
     the t walk and are re-seeded from (h0, c0) at each cell's first block.
+
+    ``masked``: a per-row validity mask (ragged-B packing — cells of
+    different batch widths padded to a common B) rides along as an extra
+    input; padded rows freeze their state exactly like the T-edge mask, so
+    they are exact no-ops and h_T/c_T of valid rows are bit-exact.
     """
+    if masked:
+        (xw_ref, u_ref, h0_ref, c0_ref, m_ref,
+         hs_ref, hn_ref, cn_ref, h_scr, c_scr) = refs
+    else:
+        (xw_ref, u_ref, h0_ref, c0_ref,
+         hs_ref, hn_ref, cn_ref, h_scr, c_scr) = refs
+        m_ref = None
     t = pl.program_id(1)
 
     @pl.when(t == 0)
@@ -148,6 +159,8 @@ def _seq_kernel(xw_ref, u_ref, h0_ref, c0_ref, hs_ref, hn_ref, cn_ref,
         # T-edge mask: the last block's tail reads BlockSpec padding
         # (undefined, NaN under interpret) — freeze the state there
         valid = base + i < T
+        if m_ref is not None:
+            valid = jnp.logical_and(valid, m_ref[0] != 0)[:, None]  # (B, 1)
         h = jnp.where(valid, h_new, h)
         c = jnp.where(valid, c_new, c)
         ys = jax.lax.dynamic_update_index_in_dim(ys, h, i, axis=1)
@@ -163,28 +176,37 @@ def _seq_kernel(xw_ref, u_ref, h0_ref, c0_ref, hs_ref, hn_ref, cn_ref,
     cn_ref[0] = c
 
 
-def lstm_seq_pallas(U4, xw, h0, c0, *, block_t: int, interpret: bool = True):
+def lstm_seq_pallas(U4, xw, h0, c0, *, block_t: int, interpret: bool = True,
+                    b_mask=None):
     """Sequence-fused LSTM recurrence — ONE kernel launch for all T steps.
 
     U4 (G,H,4,H); xw (G,B,T,4,H) precomputed input half (+bias);
     h0 (G,B,H); c0 (G,B,H).  Returns (hs (G,B,T,H), h_T (G,B,H),
     c_T (G,B,H)).  ``G`` batches independent recurrences (e.g. the cells of
-    one wavefront slot); pass G=1 for a single layer.
+    one wavefront slot); pass G=1 for a single layer.  ``b_mask`` (G,B)
+    int32 marks valid batch rows when cells of different B were padded to a
+    common width (ragged-B packing): zero rows are exact no-ops.
     """
     G, B, T, _, H = xw.shape
     bt = max(1, min(block_t, T))
     n_t = cdiv(T, bt)
 
-    kernel = functools.partial(_seq_kernel, block_t=bt, T=T)
+    masked = b_mask is not None
+    kernel = functools.partial(_seq_kernel, block_t=bt, T=T, masked=masked)
+    in_specs = [
+        pl.BlockSpec((1, B, bt, 4, H), lambda g, t: (g, 0, t, 0, 0)),  # xw
+        pl.BlockSpec((1, H, 4, H), lambda g, t: (g, 0, 0, 0)),         # U4
+        pl.BlockSpec((1, B, H), lambda g, t: (g, 0, 0)),               # h0
+        pl.BlockSpec((1, B, H), lambda g, t: (g, 0, 0)),               # c0
+    ]
+    args = (xw, U4, h0, c0)
+    if masked:
+        in_specs.append(pl.BlockSpec((1, B), lambda g, t: (g, 0)))     # mask
+        args += (b_mask,)
     hs, h_n, c_n = pl.pallas_call(
         kernel,
         grid=(G, n_t),
-        in_specs=[
-            pl.BlockSpec((1, B, bt, 4, H), lambda g, t: (g, 0, t, 0, 0)),  # xw
-            pl.BlockSpec((1, H, 4, H), lambda g, t: (g, 0, 0, 0)),         # U4
-            pl.BlockSpec((1, B, H), lambda g, t: (g, 0, 0)),               # h0
-            pl.BlockSpec((1, B, H), lambda g, t: (g, 0, 0)),               # c0
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, B, bt, H), lambda g, t: (g, 0, t, 0)),        # hs
             pl.BlockSpec((1, B, H), lambda g, t: (g, 0, 0)),               # h_T
@@ -200,5 +222,110 @@ def lstm_seq_pallas(U4, xw, h0, c0, *, block_t: int, interpret: bool = True):
             pltpu.VMEM((B, H), jnp.float32),   # c — resident across t
         ],
         interpret=interpret,
-    )(xw, U4, h0, c0)
+    )(*args)
     return hs, h_n, c_n
+
+
+# ===========================================================================
+# chained decode kernel: a whole T=1 stack tick inside ONE pallas_call
+# ===========================================================================
+
+
+def _decode_kernel(xw0_ref, w_ref, b_ref, u_ref, h0_ref, c0_ref,
+                   hn_ref, cn_ref, y_scr, xw_scr, *, out_dtype, xw_dtype):
+    """One grid step = one layer of a T=1 decode tick.
+
+    Grid is (L,).  The layer cells of a decode tick are serially dependent
+    (layer l eats layer l-1's output *at the same timestep*), so no
+    wavefront exists — but the TPU grid walks its steps in order, which is
+    exactly a dependence-respecting schedule: the inter-layer value flows
+    through ``y_scr`` (VMEM scratch), the same persistence trick the
+    sequence kernels use for (h, c) across t-blocks.  Layer 0 uses the
+    hoisted input half ``xw0`` (its input exists before launch; the in-
+    kernel input GEMM is pl.when-guarded so layer 0 pays no dead MXU
+    work); deeper layers compute their input GEMM *in-kernel* from
+    y_scr — one launch per tick instead of L.
+
+    The inter-layer value is rounded through ``out_dtype`` and the input
+    GEMM through ``xw_dtype`` (the hoist's promotion dtype) before use, so
+    a chained tick reproduces the per-layer launches' rounding points —
+    bit-identical whenever the hoist promotes to f32 (see lstm_decode).
+    """
+    l = pl.program_id(0)
+    H = u_ref.shape[-1]
+    B = xw0_ref.shape[0]
+
+    @pl.when(l == 0)
+    def _first():
+        xw_scr[...] = xw0_ref[...].astype(jnp.float32)
+
+    @pl.when(l > 0)
+    def _deeper():
+        # round GEMM + bias through the per-layer hoist's result dtype
+        # (``xw_dtype``: einsum promotes activations x weights, then the
+        # seq kernel casts to f32) — this keeps a chained tick
+        # bit-identical for low-precision weight stacks too, not just f32
+        # params
+        xw = jax.lax.dot_general(
+            y_scr[...], w_ref[0].reshape(H, 4 * H).astype(jnp.float32),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ).astype(xw_dtype).reshape(B, 4, H)
+        xw_scr[...] = (xw + b_ref[0].astype(xw_dtype)).astype(jnp.float32)
+
+    gates = xw_scr[...] + jax.lax.dot_general(
+        h0_ref[0].astype(jnp.float32), u_ref[0].reshape(H, 4 * H),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).reshape(B, 4, H)
+    i = jax.nn.sigmoid(gates[:, 0])
+    f = jax.nn.sigmoid(gates[:, 1])
+    g = jnp.tanh(gates[:, 2])
+    o = jax.nn.sigmoid(gates[:, 3])
+    c = f * c0_ref[0].astype(jnp.float32) + i * g
+    h = o * jnp.tanh(c)
+    y_scr[...] = h.astype(out_dtype).astype(jnp.float32)
+    hn_ref[0] = h.astype(hn_ref.dtype)
+    cn_ref[0] = c
+
+
+def lstm_decode_pallas(xw0, Ws, bs, Us, h0, c0, *, interpret: bool = True):
+    """One T=1 decode tick through an L-layer LSTM stack — ONE launch.
+
+    xw0 (B,4,H) hoisted layer-0 input half (+bias); Ws (L,H,4,H) input
+    weights per layer, gate axis unpacked (entry 0 is unused — layer 0 is
+    pre-hoisted, so X may differ from H); bs (L,4,H); Us (L,H,4,H);
+    h0/c0 (L,B,H) the per-layer recurrent state.  Returns (h_n (L,B,H),
+    c_n (L,B,H) fp32): layer l's new hidden state IS its T=1 output, so the
+    top-layer feedback frame is ``h_n[-1]``.
+    """
+    L, B, H = h0.shape
+    kernel = functools.partial(
+        _decode_kernel, out_dtype=h0.dtype,
+        xw_dtype=jnp.promote_types(h0.dtype, Ws.dtype))
+    h_n, c_n = pl.pallas_call(
+        kernel,
+        grid=(L,),
+        in_specs=[
+            pl.BlockSpec((B, 4, H), lambda l: (0, 0, 0)),      # xw0
+            pl.BlockSpec((1, H, 4, H), lambda l: (l, 0, 0, 0)),  # Ws
+            pl.BlockSpec((1, 4, H), lambda l: (l, 0, 0)),      # bs
+            pl.BlockSpec((1, H, 4, H), lambda l: (l, 0, 0, 0)),  # Us
+            pl.BlockSpec((1, B, H), lambda l: (l, 0, 0)),      # h0
+            pl.BlockSpec((1, B, H), lambda l: (l, 0, 0)),      # c0
+        ],
+        out_specs=[
+            pl.BlockSpec((1, B, H), lambda l: (l, 0, 0)),      # h_n
+            pl.BlockSpec((1, B, H), lambda l: (l, 0, 0)),      # c_n
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((L, B, H), h0.dtype),
+            jax.ShapeDtypeStruct((L, B, H), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((B, H), jnp.float32),     # y — the layer chain's wire
+            pltpu.VMEM((B, 4, H), jnp.float32),  # xw — this layer's input half
+        ],
+        interpret=interpret,
+    )(xw0, Ws, bs, Us, h0, c0)
+    return h_n, c_n

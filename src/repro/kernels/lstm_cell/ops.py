@@ -7,8 +7,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.autotune import table
-from repro.kernels.common import default_interpret, round_up
-from repro.kernels.lstm_cell.kernel import lstm_cell_pallas, lstm_seq_pallas
+from repro.kernels.common import default_interpret, ragged_b_mask, round_up
+from repro.kernels.lstm_cell.kernel import (lstm_cell_pallas,
+                                            lstm_decode_pallas,
+                                            lstm_seq_pallas)
 from repro.kernels.lstm_cell.ref import lstm_cell_ref, lstm_seq_ref
 
 
@@ -43,23 +45,33 @@ def as_cell_kernel(interpret: bool | None = None):
 
 
 @functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
-def lstm_seq(U4, xw, h0=None, c0=None, *, block_t: int = 0,
+def lstm_seq(U4, xw, h0=None, c0=None, *, b_valid=None, block_t: int = 0,
              interpret: bool | None = None):
     """Sequence-fused recurrence: ONE pallas_call for the whole T walk.
 
     U4 (H,4,H) or, for a batch of G independent cells, (G,H,4,H); xw
     (B,T,4,H) / (G,B,T,4,H) precomputed input half; h0/c0 optional (…B,H)
-    initial state (zeros when omitted).  Returns (hs, h_T, c_T); ``hs`` is
-    (…B,T,H).  ``block_t`` (the streamed T-stripe) defaults to the autotune
-    table's VMEM-budget choice."""
+    initial state (each defaults to zeros when omitted, independently).
+    Returns (hs, h_T, c_T); ``hs`` is (…B,T,H).  ``block_t`` (the streamed
+    T-stripe) defaults to the autotune table's VMEM-budget choice.
+
+    ``b_valid`` (stacked form only): (G,) int array of valid batch rows per
+    cell when ragged-B cells were padded to a common B — rows >= b_valid[g]
+    are exact no-ops (state passes through), so valid rows' t=T state is
+    bit-exact regardless of padding."""
     stacked = xw.ndim == 5
     if not stacked:
+        if b_valid is not None:
+            raise ValueError("b_valid requires the stacked (G, ...) form")
         U4, xw = U4[None], xw[None]
         if h0 is not None:
-            h0, c0 = h0[None], c0[None]
+            h0 = h0[None]
+        if c0 is not None:
+            c0 = c0[None]
     G, B, T, _, H = xw.shape
     if h0 is None:
         h0 = jnp.zeros((G, B, H), xw.dtype)
+    if c0 is None:
         c0 = jnp.zeros((G, B, H), jnp.float32)
     if T == 0:  # degenerate empty sequence: state passes through
         hs = jnp.zeros((G, B, 0, H), h0.dtype)
@@ -69,11 +81,35 @@ def lstm_seq(U4, xw, h0=None, c0=None, *, block_t: int = 0,
         block_t = table().seq_block(T, B, H)
     if interpret is None:
         interpret = default_interpret()
+    b_mask = None if b_valid is None else ragged_b_mask(G, B, b_valid)
     hs, h_n, c_n = lstm_seq_pallas(U4, xw, h0, c0, block_t=block_t,
-                                   interpret=interpret)
+                                   interpret=interpret, b_mask=b_mask)
     if not stacked:
         hs, h_n, c_n = hs[0], h_n[0], c_n[0]
     return hs, h_n, c_n
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lstm_decode(xw0, Ws, bs, Us, h0, c0, *, interpret: bool | None = None):
+    """One T=1 decode tick through a whole L-layer stack in ONE launch.
+
+    The L layer cells of a decode tick are serially dependent, so they
+    cannot wavefront — but they CAN share a single kernel launch: the grid
+    walks layers in order and the inter-layer value chains through VMEM
+    scratch (ROADMAP: "a T=1 wavefront over layers is a single slot").
+
+    xw0 (B,4,H) hoisted layer-0 input half; Ws (L,H,4,H) (entry 0 unused,
+    so layer 0's input width may differ from H); bs (L,4,H); Us (L,H,4,H);
+    h0/c0 (L,B,H).  Returns (h_n (L,B,H), c_n (L,B,H) fp32); the top-layer
+    feedback frame is ``h_n[-1]`` and each layer's new h IS its T=1 output.
+    Bit-identical to L per-layer ``lstm_seq(..., T=1)`` launches whenever
+    the hoisted input GEMM promotes to f32 (f32 weights with any
+    activation dtype, or f32 activations with any weight dtype); fully-
+    bf16 stacks agree to one bf16 ulp per deeper layer under interpret
+    mode, which emulates in-kernel bf16 dots in f32."""
+    if interpret is None:
+        interpret = default_interpret()
+    return lstm_decode_pallas(xw0, Ws, bs, Us, h0, c0, interpret=interpret)
 
 
 def as_seq_kernel(interpret: bool | None = None, block_t: int = 0):
@@ -92,4 +128,4 @@ def as_seq_kernel(interpret: bool | None = None, block_t: int = 0):
 
 
 __all__ = ["lstm_cell", "lstm_cell_ref", "as_cell_kernel",
-           "lstm_seq", "lstm_seq_ref", "as_seq_kernel"]
+           "lstm_seq", "lstm_seq_ref", "as_seq_kernel", "lstm_decode"]

@@ -13,12 +13,17 @@ request's exact t=T per-layer (h, c), which splices into the engine's
 batched decode state exactly like the transformer engine splices KV-cache
 rows.
 
-Decode then proceeds engine-style: one tick = one batched step across all
-active slots (L sequence-kernel launches at T=1), each new top-layer output
-frame fed back as the next step's input (requires X == H, which the paper's
-stacks satisfy).  Requests are *frame* streams, not token streams — the
-serving analogue of an RNN acoustic/regression service (cf. the MASR-style
-per-shape serving story, PAPERS.md).
+Decode is planned, not hand-rolled: one tick = one ``plan_decode``
+DispatchPlan over the *active* slots only — their T=1 layer chains
+B-concatenate (cross-B packing; every request binds the same stack) into a
+single chained slot, ONE kernel launch per tick instead of L, with each new
+top-layer output frame fed back as the next step's input (requires X == H,
+which the paper's stacks satisfy).  Ticks in steady state (unchanged
+active-slot signature) reuse a cached plan instead of replanning — the Zhao
+et al. steady-state serving story (PAPERS.md).  Requests are *frame*
+streams, not token streams — the serving analogue of an RNN
+acoustic/regression service (cf. the MASR-style per-shape serving story,
+PAPERS.md).
 """
 from __future__ import annotations
 
@@ -30,7 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.dispatch import WorkItem, execute, plan
+from repro.dispatch import DispatchPlan, WorkItem, execute, plan, plan_decode
 
 
 @dataclasses.dataclass
@@ -53,11 +58,14 @@ class RecurrentServingEngine:
     """Continuous batching over a fixed slot pool, recurrent edition."""
 
     def __init__(self, cfg: ModelConfig, stack_params, max_batch: int = 4,
-                 macs: int = 16384, interpret: Optional[bool] = None):
+                 macs: int = 16384, interpret: Optional[bool] = None,
+                 rnn_family: str = "lstm"):
         assert cfg.family == "rnn", "recurrent engine serves rnn stacks"
         assert not cfg.bidirectional, \
             "bidirectional stacks have no streaming decode"
+        assert rnn_family in ("lstm", "gru"), rnn_family
         self.cfg = cfg
+        self.family = rnn_family
         self.params = stack_params
         self.max_batch = max_batch
         self.macs = macs
@@ -68,7 +76,8 @@ class RecurrentServingEngine:
         # batched recurrent state: one column per slot (the recurrent
         # analogue of the transformer engine's batch cache)
         self.h = jnp.zeros((L, max_batch, H), jnp.float32)
-        self.c = jnp.zeros((L, max_batch, H), jnp.float32)
+        self.c = (jnp.zeros((L, max_batch, H), jnp.float32)
+                  if rnn_family == "lstm" else None)
         self.last_y = jnp.zeros((max_batch, 1, H), jnp.float32)
 
         self.queue: List[RecurrentRequest] = []
@@ -84,6 +93,16 @@ class RecurrentServingEngine:
         self.packed_launches = 0
         self.naive_launches = 0
         self.last_plan = None
+        # decode accounting: per-tick plans are cached per active-slot
+        # signature (the active count — plans are shape-only), so a
+        # steady-state tick reuses its plan (plans_built stays flat while
+        # ticks grow)
+        self.decode_ticks = 0
+        self.decode_launches = 0
+        self.decode_plans_built = 0
+        self.last_decode_plan: Optional[DispatchPlan] = None
+        self._decode_plans: Dict[int, DispatchPlan] = {}
+        self._decode_prepared: Optional[dict] = None  # stacked (Ws, bs, Us)
 
     # ------------------------------------------------------------------
     def submit(self, req: RecurrentRequest):
@@ -115,7 +134,9 @@ class RecurrentServingEngine:
             self._admit_seq += 1
         items = [WorkItem.from_config(
             self.cfg, T=len(req.frames), B=1, uid=wids[slot],
-            priority=req.priority) for slot, req in pairs]
+            priority=req.priority, rnn_family=self.family,
+            share=0) for slot, req in pairs]  # share: one stack serves all
+        #   requests, so the planner may cross-B pack their cells
         p = plan(items, macs=self.macs)
         params = {wids[slot]: self.params for slot, _ in pairs}
         inputs = {wids[slot]: jnp.asarray(req.frames, jnp.float32)[None]
@@ -129,8 +150,18 @@ class RecurrentServingEngine:
 
         for slot, req in pairs:
             st = states[wids[slot]]
+            if st is None or "h" not in st:
+                # the executor returns None for items with no single t=T
+                # state (rglru / bidirectional) — nothing to splice, and
+                # silently proceeding would serve garbage decode frames
+                raise RuntimeError(
+                    f"request {req.uid}: prefill returned no spliceable "
+                    f"recurrent state (family {self.family!r}); the engine "
+                    "can only serve stacks whose executor surfaces exact "
+                    "t=T (h[, c]) state")
             self.h = self.h.at[:, slot].set(st["h"][:, 0].astype(jnp.float32))
-            self.c = self.c.at[:, slot].set(st["c"][:, 0])
+            if self.c is not None:
+                self.c = self.c.at[:, slot].set(st["c"][:, 0])
             out = np.asarray(outs[wids[slot]][0])       # (T, H)
             self.prefill_out[slot] = out
             self.last_y = self.last_y.at[slot, 0].set(
@@ -140,31 +171,68 @@ class RecurrentServingEngine:
         self._retire()  # zero-new-frame requests complete right here
 
     # ------------------------------------------------------------------
-    def _decode_tick(self):
-        """One batched decode step across all slots: the last output frame
-        of every active request feeds back through the stack (L sequence-
-        kernel launches at T=1, batched over the slot axis)."""
-        from repro.kernels.lstm_cell.ops import lstm_seq
+    def _decode_plan(self, active: List[int]) -> DispatchPlan:
+        """The tick's DispatchPlan, cached by active-slot signature: a
+        steady-state tick reuses its plan.  Plans are shape-only (uids are
+        positions in the active list, inputs/state bound at execute), so
+        the signature is just the active count — WHICH slots are active
+        changes the gather, not the plan."""
+        key = len(active)
+        p = self._decode_plans.get(key)
+        if p is None:
+            items = [WorkItem(uid=i, family=self.family, B=1, T=1, H=self.H,
+                              L=self.L, X=self.H, share=0)
+                     for i in range(len(active))]
+            p = plan_decode(items, macs=self.macs)
+            self._decode_plans[key] = p
+            self.decode_plans_built += 1
+        return p
 
-        y = self.last_y                                  # (S, 1, H)
-        h_new, c_new = [], []
-        for l, layer in enumerate(self.params["layers"]):
-            H = self.H
-            xw = (jnp.einsum("btx,xg->btg", y, layer["W"])
-                  + layer["b"]).reshape(self.max_batch, 1, 4, H)
-            hs, h_n, c_n = lstm_seq(layer["U"].reshape(H, 4, H), xw,
-                                    self.h[l], self.c[l], block_t=1,
-                                    interpret=self.interpret)
-            h_new.append(h_n.astype(jnp.float32))
-            c_new.append(c_n)
-            y = hs.astype(jnp.float32)
-        self.h = jnp.stack(h_new)
-        self.c = jnp.stack(c_new)
-        self.last_y = y
-        for slot, req in enumerate(self.slots):
-            if req is None:
-                continue
-            self.generated[slot].append(np.asarray(y[slot, 0]))
+    def _decode_tick(self):
+        """One planned decode step across the *active* slots only: their
+        T=1 layer chains B-concatenate into a single chained slot — ONE
+        kernel launch per tick instead of L — with each request's last
+        top-layer frame fed back as its next input (the layer-0 input GEMM
+        is hoisted inside the slot; deeper layers' run in-kernel)."""
+        active = [s for s in range(self.max_batch)
+                  if self.slots[s] is not None]
+        p = self._decode_plan(active)
+        # the dispatch claim, asserted every tick: k active slots plan
+        # exactly k-row cells — empty slots are never computed
+        assert all(s.B == len(active) and all(b == len(active)
+                                              for b in s.group_b)
+                   for s in p.slots), p.describe()
+
+        if self._decode_prepared is None:
+            from repro.dispatch.executor import prepare_decode_stack
+
+            self._decode_prepared = prepare_decode_stack(self.params,
+                                                         self.family)
+        inputs = {i: self.last_y[slot][None]            # (1, 1, H)
+                  for i, slot in enumerate(active)}
+        init_state = {}
+        for i, slot in enumerate(active):
+            st = {"h": self.h[:, slot:slot + 1]}
+            if self.c is not None:
+                st["c"] = self.c[:, slot:slot + 1]
+            init_state[i] = st
+        outs, states = execute(
+            p, {i: self.params for i in inputs}, inputs,
+            interpret=self.interpret, collect_state=True,
+            init_state=init_state,
+            prepared={i: self._decode_prepared for i in inputs})
+        self.decode_ticks += 1
+        self.decode_launches += p.launches
+        self.last_decode_plan = p
+
+        for i, slot in enumerate(active):
+            self.h = self.h.at[:, slot].set(
+                states[i]["h"][:, 0].astype(jnp.float32))
+            if self.c is not None:
+                self.c = self.c.at[:, slot].set(states[i]["c"][:, 0])
+            y = jnp.asarray(outs[i][0, 0], jnp.float32)  # top-layer frame
+            self.last_y = self.last_y.at[slot, 0].set(y)
+            self.generated[slot].append(np.asarray(y))
 
     def _retire(self):
         for slot, req in enumerate(self.slots):
@@ -182,7 +250,7 @@ class RecurrentServingEngine:
 
     # ------------------------------------------------------------------
     def step(self):
-        """One engine tick: admit (packed prefill) -> batched decode ->
+        """One engine tick: admit (packed prefill) -> planned decode ->
         retire."""
         self._admit()
         if not any(s is not None for s in self.slots):

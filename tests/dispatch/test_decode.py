@@ -1,0 +1,179 @@
+"""Decode through the dispatcher: parity, launch proofs, cross-B packing.
+
+The ISSUE-3 contracts: (1) dispatcher-planned decode ticks are bit-identical
+to the pre-existing L-launch per-layer loop across families, dtypes, and
+ragged active-slot patterns; (2) a planned tick is ONE launch (<= L); (3)
+cross-B packed prefill plans launch strictly fewer kernels than the
+equal-signature unpacked (per-B-signature) plan, exactly.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gru
+from repro.dispatch import WorkItem, execute, plan, plan_decode
+from repro.kernels.common import pallas_launch_count
+from repro.kernels.gru_cell.ops import gru_seq
+from repro.kernels.lstm_cell.ops import lstm_seq
+from repro.models.layers.lstm import init_lstm_stack
+from repro.configs.sharp_lstm import lstm_config
+
+L, H = 3, 32
+
+
+def _params(family, dtype=jnp.float32, seed=0):
+    if family == "lstm":
+        return init_lstm_stack(jax.random.PRNGKey(seed),
+                               lstm_config(H, layers=L), dtype)
+    return gru.init_gru_stack(jax.random.PRNGKey(seed), H, H, L, dtype)
+
+
+def _hand_tick(family, params, y, h, c):
+    """The pre-existing decode loop: L per-layer T=1 sequence launches."""
+    gates = 4 if family == "lstm" else 3
+    h_new, c_new = [], []
+    for l, layer in enumerate(params["layers"]):
+        xw = (jnp.einsum("btx,xg->btg", y, layer["W"])
+              + layer["b"]).reshape(y.shape[0], 1, gates, H)
+        if family == "lstm":
+            hs, h_n, c_n = lstm_seq(layer["U"].reshape(H, 4, H), xw, h[l],
+                                    c[l], block_t=1, interpret=True)
+            c_new.append(c_n)
+        else:
+            hs, h_n = gru_seq(layer["U"].reshape(H, 3, H), xw, h[l],
+                              block_t=1, interpret=True)
+        h_new.append(h_n)
+        y = hs.astype(y.dtype)
+    return y, jnp.stack(h_new), (jnp.stack(c_new) if c_new else None)
+
+
+@pytest.mark.parametrize("family", ["lstm", "gru"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("ks", [(1,), (2,), (3, 1), (1, 4, 2)])
+def test_planned_ticks_bit_identical_to_L_launch_loop(family, dtype, ks):
+    """Each tick of a ragged schedule (k active requests varying per tick)
+    is planned and must match the hand loop bit-for-bit, state included."""
+    params = _params(family, dtype=jnp.float32, seed=3)
+    dstr = "float32" if dtype == jnp.float32 else "bfloat16"
+    rng = np.random.default_rng(7)
+    for tick, k in enumerate(ks):
+        y = jnp.asarray(rng.standard_normal((k, 1, H)) * 0.5, dtype)
+        h = jnp.asarray(rng.standard_normal((L, k, H)) * 0.3, dtype)
+        c = jnp.asarray(rng.standard_normal((L, k, H)) * 0.3, jnp.float32)
+
+        items = [WorkItem(uid=i, family=family, B=1, T=1, H=H, L=L,
+                          dtype=dstr, share=0) for i in range(k)]
+        p = plan_decode(items)
+        assert len(p.slots) == 1 and p.slots[0].chained
+        assert p.launches == 1 <= L
+        inputs = {i: y[i:i + 1] for i in range(k)}
+        init = {i: ({"h": h[:, i:i + 1], "c": c[:, i:i + 1]}
+                    if family == "lstm" else {"h": h[:, i:i + 1]})
+                for i in range(k)}
+        outs, states = execute(p, {i: params for i in range(k)}, inputs,
+                               interpret=True, collect_state=True,
+                               init_state=init)
+
+        y_ref, h_ref, c_ref = _hand_tick(
+            family, params, y, h, c if family == "lstm" else None)
+        for i in range(k):
+            np.testing.assert_array_equal(
+                np.asarray(outs[i].astype(jnp.float32)),
+                np.asarray(y_ref[i:i + 1].astype(jnp.float32)))
+            np.testing.assert_array_equal(
+                np.asarray(states[i]["h"].astype(jnp.float32)),
+                np.asarray(h_ref[:, i:i + 1].astype(jnp.float32)))
+            if family == "lstm":
+                np.testing.assert_array_equal(
+                    np.asarray(states[i]["c"]),
+                    np.asarray(c_ref[:, i:i + 1]))
+
+
+def test_planned_tick_is_one_launch():
+    """Structural proof: a planned tick executes as ONE pallas launch
+    where the pre-existing loop issues L."""
+    params = _params("lstm")
+    k = 3
+    items = [WorkItem(uid=i, family="lstm", B=1, T=1, H=H, L=L, share=0)
+             for i in range(k)]
+    p = plan_decode(items)
+    inputs = {i: jnp.zeros((1, 1, H)) for i in range(k)}
+
+    n = pallas_launch_count(
+        lambda xs: execute(p, {i: params for i in range(k)}, xs,
+                           interpret=True), inputs)
+    assert n == p.launches == 1
+
+    y = jnp.zeros((k, 1, H))
+    h = jnp.zeros((L, k, H))
+    c = jnp.zeros((L, k, H))
+    assert pallas_launch_count(
+        lambda *a: _hand_tick("lstm", params, *a), y, h, c) == L
+
+
+def test_cross_b_prefill_packs_fewer_launches():
+    """Mixed-B same-signature traffic: cross-B packing (pad + in-kernel
+    mask) must plan strictly fewer launches than the per-B-signature plan,
+    at exactly equal outputs."""
+    cfg = lstm_config(H, layers=L)
+    T = 12
+    items = [WorkItem.from_config(cfg, T=T, B=b, uid=i)
+             for i, b in enumerate((2, 1, 1))]
+    packed = plan(items)
+    unpacked = plan(items, cross_b=False)
+    assert packed.launches < unpacked.launches
+
+    params = {i: init_lstm_stack(jax.random.PRNGKey(9), cfg, jnp.float32)
+              for i in range(3)}
+    inputs = {i: jax.random.normal(jax.random.PRNGKey(20 + i),
+                                   (it.B, T, H)) * 0.5
+              for i, it in enumerate(items)}
+    outs_p = execute(packed, params, inputs, interpret=True)
+    outs_u = execute(unpacked, params, inputs, interpret=True)
+    for i in inputs:
+        np.testing.assert_array_equal(np.asarray(outs_p[i]),
+                                      np.asarray(outs_u[i]))
+
+
+def test_share_concats_rows_instead_of_g_batching():
+    """Parameter-sharing items' same-layer cells concatenate on B: the
+    packed plan's slots carry ONE multi-cell row where the unshared plan
+    carries G single-cell rows — and outputs stay exact."""
+    cfg = lstm_config(H, layers=L)
+    T = 8
+    shared = [WorkItem.from_config(cfg, T=T, uid=i, share=0)
+              for i in range(2)]
+    solo = [WorkItem.from_config(cfg, T=T, uid=i) for i in range(2)]
+    ps, pu = plan(shared), plan(solo)
+    assert any(len(grp) > 1 for s in ps.slots for grp in s.groups)
+    assert all(len(grp) == 1 for s in pu.slots for grp in s.groups)
+    assert all(s.B == 2 for s in ps.slots)
+
+    params = init_lstm_stack(jax.random.PRNGKey(0), cfg, jnp.float32)
+    inputs = {i: jax.random.normal(jax.random.PRNGKey(30 + i),
+                                   (1, T, H)) * 0.5 for i in range(2)}
+    outs_s = execute(ps, {i: params for i in range(2)}, inputs,
+                     interpret=True)
+    outs_u = execute(pu, {i: params for i in range(2)}, inputs,
+                     interpret=True)
+    for i in inputs:
+        np.testing.assert_array_equal(np.asarray(outs_s[i]),
+                                      np.asarray(outs_u[i]))
+
+
+def test_plan_decode_validates_items():
+    ok = WorkItem(uid=0, family="lstm", B=1, T=1, H=H, L=L, share=0)
+    with pytest.raises(ValueError, match="at least one"):
+        plan_decode([])
+    with pytest.raises(ValueError, match="T=1"):
+        plan_decode([WorkItem(uid=0, family="lstm", B=1, T=2, H=H, L=L,
+                              share=0)])
+    with pytest.raises(ValueError, match="share"):
+        plan_decode([WorkItem(uid=0, family="lstm", B=1, T=1, H=H, L=L)])
+    with pytest.raises(ValueError, match="must share"):
+        plan_decode([ok, WorkItem(uid=1, family="lstm", B=1, T=1, H=2 * H,
+                                  L=L, share=0)])
+    with pytest.raises(ValueError, match="family"):
+        plan_decode([WorkItem(uid=0, family="rglru", B=1, T=1, H=H, L=1,
+                              share=0)])

@@ -135,6 +135,58 @@ def test_external_fallbacks_still_collect_state():
                                np.asarray(oracle[:, -1]), atol=1e-5)
 
 
+def test_stateless_families_collect_none_not_empty_dict():
+    """ISSUE-3 satellite: rglru and bidirectional items return an explicit
+    ``states[uid] = None`` (documented), not a silent {} that KeyErrors at
+    first use."""
+    rg = WorkItem(uid=0, family="rglru", B=1, T=8, H=32, L=1)
+    la = -jnp.abs(jax.random.normal(jax.random.PRNGKey(0), (1, 8, 32))) * 0.3
+    gx = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 32))
+    _, states = execute(plan([rg]), {0: None}, {0: (la, gx)},
+                        interpret=True, collect_state=True)
+    assert states[0] is None
+
+    import dataclasses
+
+    bi = WorkItem(uid=0, family="lstm", B=1, T=6, H=24, L=2,
+                  bidirectional=True)
+    cfg = dataclasses.replace(lstm_config(24, layers=2), bidirectional=True)
+    params = {0: init_lstm_stack(jax.random.PRNGKey(2), cfg, jnp.float32)}
+    xs = {0: jax.random.normal(jax.random.PRNGKey(3), (1, 6, 24)) * 0.5}
+    _, states = execute(plan([bi]), params, xs, interpret=True,
+                        collect_state=True)
+    assert states[0] is None
+
+
+def test_mixed_width_slot_is_exact_and_padded():
+    """Ragged-B packing end to end: B=2 and B=1 same-signature items share
+    padded slots (group_b records the true widths) and results — outputs
+    AND t=T state — are exact vs solo execution."""
+    cfg = lstm_config(40, layers=2)
+    items = [WorkItem.from_config(cfg, T=10, B=b, uid=i)
+             for i, b in enumerate((2, 1))]
+    p = plan(items)
+    ragged = [s for s in p.slots if len(set(s.group_b + (s.B,))) > 1]
+    assert ragged, "expected at least one padded (ragged-B) slot"
+    params = {i: init_lstm_stack(jax.random.PRNGKey(i), cfg, jnp.float32)
+              for i in range(2)}
+    inputs = {i: jax.random.normal(jax.random.PRNGKey(40 + i),
+                                   (it.B, 10, 40)) * 0.5
+              for i, it in enumerate(items)}
+    outs, states = execute(p, params, inputs, interpret=True,
+                           collect_state=True)
+    for i in inputs:
+        solo_out, solo_st = execute(plan([items[i]]), {i: params[i]},
+                                    {i: inputs[i]}, interpret=True,
+                                    collect_state=True)
+        np.testing.assert_array_equal(np.asarray(outs[i]),
+                                      np.asarray(solo_out[i]))
+        np.testing.assert_array_equal(np.asarray(states[i]["h"]),
+                                      np.asarray(solo_st[i]["h"]))
+        np.testing.assert_array_equal(np.asarray(states[i]["c"]),
+                                      np.asarray(solo_st[i]["c"]))
+
+
 def test_bidirectional_gru_fallback_executes():
     it = WorkItem(uid=0, family="gru", B=1, T=6, H=24, L=2,
                   bidirectional=True)

@@ -109,6 +109,89 @@ def test_plan_only_items_are_flagged():
     assert plan([one]).item(1).executable
 
 
+def test_cross_b_merge_is_scored_and_deterministic():
+    """Mixed-width same-signature cells merge into padded slots only by
+    perfmodel decision; the plan stays deterministic and every row's valid
+    width is recorded for the in-kernel mask."""
+    items = [WorkItem.from_config(lstm_config(64, layers=2), T=12, B=b,
+                                  uid=i) for i, b in enumerate((2, 1))]
+    p1, p2 = plan(items), plan(items)
+    assert p1.describe() == p2.describe() and p1.slots == p2.slots
+    for s in p1.slots:
+        assert len(s.group_b) == s.g
+        assert all(b <= s.B for b in s.group_b)
+        assert max(s.group_b) == s.B  # padding never exceeds the widest row
+    # B-widened here (small widths within one MXU row-tile): one slot per
+    # wave, strictly fewer launches than the per-B-signature plan
+    assert p1.launches < plan(items, cross_b=False).launches
+
+
+def test_share_groups_require_matching_layers_only():
+    """share-keyed items of different T still only concat where wave/layer
+    align; all cells remain covered exactly once."""
+    cfg = lstm_config(48, layers=3)
+    items = [WorkItem.from_config(cfg, T=t, uid=i, share=0)
+             for i, t in enumerate((12, 8))]
+    p = plan(items)
+    for ip in p.items:
+        cells = [c for s in p.slots for c in s.cells if c.uid == ip.uid]
+        assert len(cells) == len(set(cells)) == ip.item.L * ip.nk
+    for s in p.slots:
+        for grp in s.groups:
+            assert len({c.layer for c in grp}) == 1  # one U per row
+        for c in s.cells:
+            assert c.layer + c.chunk == s.wave
+
+
+def test_cross_b_concat_respects_vmem_budget():
+    """Concat rows are wider than any width the per-item block_t was
+    validated at — the packer must split a share group rather than emit a
+    row whose working set blows the sequence kernels' VMEM bound."""
+    from repro.core.tiling import SEQ_VMEM_BUDGET, seq_block_footprint
+
+    items = [WorkItem(uid=i, family="lstm", B=4, T=256, H=512, share=0,
+                      L=1) for i in range(6)]
+    p = plan(items)
+    for s in p.slots:
+        for b in s.group_b:
+            assert seq_block_footprint(s.chunk_len, b, s.H,
+                                       gates=4) <= SEQ_VMEM_BUDGET
+    # ...while small shapes still concat into single rows
+    small = plan([WorkItem(uid=i, family="lstm", B=1, T=8, H=32, L=2,
+                           share=0) for i in range(3)])
+    assert any(len(grp) == 3 for s in small.slots for grp in s.groups)
+
+
+def test_stripe_alignment_respects_each_members_vmem_budget():
+    """Regression: cross-B stripe alignment must not hand a large-B item a
+    stripe that was only budget-valid at a small-B partner's width — every
+    plan's (block_t, B) working set stays within the kernels' bound."""
+    from repro.core.tiling import SEQ_VMEM_BUDGET, seq_block_footprint
+
+    items = [WorkItem(uid=0, family="lstm", B=1, T=512, H=512, L=2),
+             WorkItem(uid=1, family="lstm", B=32, T=512, H=512, L=2)]
+    p = plan(items)
+    for ip in p.items:
+        if ip.block_t > 1:
+            assert seq_block_footprint(ip.block_t, ip.item.B, ip.item.H,
+                                       gates=ip.item.gates) \
+                <= SEQ_VMEM_BUDGET, ip.describe()
+
+
+def test_decode_plan_is_one_chained_slot():
+    items = [WorkItem(uid=i, family="gru", B=1, T=1, H=48, L=4, share=0)
+             for i in range(3)]
+    from repro.dispatch import plan_decode
+    p = plan_decode(items)
+    assert len(p.slots) == 1 and p.slots[0].chained
+    assert p.launches == 1 and p.naive_launches == 3 * 4
+    s = p.slots[0]
+    assert s.g == 4  # one group per layer, in chain order
+    assert [grp[0].layer for grp in s.groups] == [0, 1, 2, 3]
+    assert s.B == 3 and set(s.group_b) == {3}
+    assert "chained" in s.describe()
+
+
 def test_gru_items_plan_with_three_gates():
     it = WorkItem(uid=0, family="gru", B=1, T=16, H=48, L=2)
     assert it.gates == 3

@@ -144,6 +144,85 @@ def test_per_step_launch_accounting_is_honest():
                                atol=1e-4)
 
 
+def test_decode_plans_k_row_cells_for_k_active_slots():
+    """ISSUE-3 satellite: a tick with k active slots plans exactly k-row
+    cells — empty slot columns are never computed (the old loop ran the
+    full max_batch width every tick)."""
+    prompts = _prompts((6, 9))
+    _, eng = _engine(max_batch=4)
+    for uid, p in enumerate(prompts):
+        eng.submit(RecurrentRequest(uid=uid, frames=p, max_new_frames=2))
+    eng.step()
+    p = eng.last_decode_plan
+    assert p is not None
+    assert all(s.B == 2 and set(s.group_b) == {2} for s in p.slots)
+    # ... and a planned tick is ONE chained launch, not L
+    assert p.launches == 1 < eng.L
+    done = eng.run_to_completion()
+    assert sorted(c.uid for c in done) == [0, 1]
+
+
+def test_decode_plan_cache_reuses_steady_state_plans():
+    """Ticks with an unchanged active-slot signature reuse the cached plan;
+    a changed signature (a request retiring) replans once."""
+    prompts = _prompts((6, 6))
+    _, eng = _engine(max_batch=2)
+    eng.submit(RecurrentRequest(uid=0, frames=prompts[0], max_new_frames=5))
+    eng.submit(RecurrentRequest(uid=1, frames=prompts[1], max_new_frames=2))
+    eng.run_to_completion()
+    # 5 ticks total: {0,1} active for 2, then {0} alone for 3 — two
+    # distinct signatures, each planned exactly once
+    assert eng.decode_ticks == 5
+    assert eng.decode_plans_built == 2
+    assert eng.decode_launches == 5  # one launch per tick
+    # per-tick launches strictly below the old L-per-tick loop
+    assert eng.decode_launches / eng.decode_ticks < eng.L
+
+
+def test_admit_raises_clearly_when_state_unspliceable(monkeypatch):
+    """If the executor hands back no spliceable state (None — the rglru /
+    bidirectional contract), admission must fail with a clear error, not a
+    bare KeyError deep in the splice."""
+    import repro.serving.recurrent as rec
+
+    _, eng = _engine(max_batch=1)
+
+    def no_state_execute(p, params, inputs, **kw):
+        outs = {uid: jnp.zeros((1, xs.shape[1], 48), jnp.float32)
+                for uid, xs in inputs.items()}
+        return outs, {uid: None for uid in inputs}
+
+    monkeypatch.setattr(rec, "execute", no_state_execute)
+    eng.submit(RecurrentRequest(uid=0, frames=_prompts((4,))[0]))
+    with pytest.raises(RuntimeError, match="no spliceable"):
+        eng.step()
+
+
+def test_gru_family_serves_end_to_end():
+    """The engine's planned prefill + decode generalize to GRU stacks
+    (rnn_family="gru"): outputs match the pure-jnp unfolded oracle and
+    decode feeds back through the chained kernel."""
+    from repro.core import gru
+
+    params = gru.init_gru_stack(jax.random.PRNGKey(0), 48, 48, 3,
+                                jnp.float32)
+    eng = RecurrentServingEngine(CFG, params, max_batch=2, interpret=True,
+                                 rnn_family="gru")
+    prompts = _prompts((7, 5), seed=9)
+    for uid, p in enumerate(prompts):
+        eng.submit(RecurrentRequest(uid=uid, frames=p, max_new_frames=2))
+    done = {c.uid: c for c in eng.run_to_completion()}
+    assert sorted(done) == [0, 1]
+    for uid, p in enumerate(prompts):
+        y = jnp.asarray(p)[None]
+        for layer in params["layers"]:
+            y = gru.run_layer(layer, y, "unfolded")
+        np.testing.assert_allclose(done[uid].outputs, np.asarray(y[0]),
+                                   atol=1e-4)
+        assert done[uid].generated.shape == (2, 48)
+    assert eng.decode_launches == eng.decode_ticks  # one launch per tick
+
+
 def test_slots_are_reused_across_waves():
     prompts = _prompts((8, 8, 8, 8, 8), seed=3)
     _, eng = _engine(max_batch=2)

@@ -1,0 +1,173 @@
+"""Chained decode kernels: one launch walks a whole L-layer T=1 tick.
+
+The contract the planned serving decode relies on: ``lstm_decode`` /
+``gru_decode`` are bit-identical to L per-layer sequence-kernel launches
+(the pre-existing decode loop), the inter-layer value chaining through VMEM
+scratch across sequential grid steps — and they are structurally ONE
+pallas_call where the loop is L.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.common import pallas_launch_count
+from repro.kernels.gru_cell.ops import gru_decode, gru_seq
+from repro.kernels.lstm_cell.ops import lstm_decode, lstm_seq
+
+
+def _stack(L, H, X, gates, seed=0):
+    key = jax.random.PRNGKey(seed)
+    layers = []
+    for l in range(L):
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        x_dim = X if l == 0 else H
+        layers.append({
+            "W": jax.random.normal(k1, (x_dim, gates * H)) * 0.2,
+            "U": jax.random.normal(k2, (H, gates * H)) * 0.2,
+            "b": jax.random.normal(k3, (gates * H,)) * 0.1,
+        })
+    return layers
+
+
+def _decode_args(layers, x, gates, H):
+    """Pack a stack + input frame into the decode kernels' argument shapes
+    (layer 0's input half hoisted; its W slot zero-filled when X != H)."""
+    L = len(layers)
+    xw0 = (jnp.einsum("btx,xg->btg", x, layers[0]["W"])
+           + layers[0]["b"]).reshape(x.shape[0], 1, gates, H)[:, 0]
+    W0 = (layers[0]["W"].reshape(H, gates, H)
+          if layers[0]["W"].shape[0] == H
+          else jnp.zeros((H, gates, H), jnp.float32))
+    Ws = jnp.stack([W0] + [layers[l]["W"].reshape(H, gates, H)
+                           for l in range(1, L)])
+    bs = jnp.stack([l_["b"].reshape(gates, H) for l_ in layers])
+    Us = jnp.stack([l_["U"].reshape(H, gates, H) for l_ in layers])
+    return xw0, Ws, bs, Us
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("X", [32, 48])  # X != H exercises the hoisted-W0 path
+def test_lstm_decode_bit_identical_to_per_layer_loop(dtype, X):
+    L, B, H = 3, 2, 32
+    layers = _stack(L, H, X, 4, seed=1)
+    x = (jax.random.normal(jax.random.PRNGKey(2), (B, 1, X)) * 0.5
+         ).astype(dtype)
+    h = (jax.random.normal(jax.random.PRNGKey(3), (L, B, H)) * 0.3
+         ).astype(dtype)
+    c = jax.random.normal(jax.random.PRNGKey(4), (L, B, H)) * 0.3
+
+    # the pre-existing decode loop: L per-layer T=1 launches
+    y, h_ref, c_ref = x, [], []
+    for l, lay in enumerate(layers):
+        xw = (jnp.einsum("btx,xg->btg", y, lay["W"])
+              + lay["b"]).reshape(B, 1, 4, H)
+        hs, h_n, c_n = lstm_seq(lay["U"].reshape(H, 4, H), xw, h[l], c[l],
+                                block_t=1, interpret=True)
+        h_ref.append(h_n)
+        c_ref.append(c_n)
+        y = hs.astype(x.dtype)
+
+    xw0, Ws, bs, Us = _decode_args(layers, x, 4, H)
+    h_n, c_n = lstm_decode(xw0, Ws, bs, Us, h, c, interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(h_n.astype(jnp.float32)),
+        np.asarray(jnp.stack(h_ref).astype(jnp.float32)))
+    np.testing.assert_array_equal(np.asarray(c_n),
+                                  np.asarray(jnp.stack(c_ref)))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gru_decode_bit_identical_to_per_layer_loop(dtype):
+    L, B, H = 4, 3, 24
+    layers = _stack(L, H, H, 3, seed=5)
+    x = (jax.random.normal(jax.random.PRNGKey(6), (B, 1, H)) * 0.5
+         ).astype(dtype)
+    h = (jax.random.normal(jax.random.PRNGKey(7), (L, B, H)) * 0.3
+         ).astype(dtype)
+
+    y, h_ref = x, []
+    for l, lay in enumerate(layers):
+        xw = (jnp.einsum("btx,xg->btg", y, lay["W"])
+              + lay["b"]).reshape(B, 1, 3, H)
+        hs, h_n = gru_seq(lay["U"].reshape(H, 3, H), xw, h[l], block_t=1,
+                          interpret=True)
+        h_ref.append(h_n)
+        y = hs.astype(x.dtype)
+
+    xw0, Ws, bs, Us = _decode_args(layers, x, 3, H)
+    h_n = gru_decode(xw0, Ws, bs, Us, h, interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(h_n.astype(jnp.float32)),
+        np.asarray(jnp.stack(h_ref).astype(jnp.float32)))
+
+
+def test_bf16_weight_stack_matches_per_layer_loop():
+    """Low-precision WEIGHTS (not just activations): with f32 activations
+    the hoist promotes to f32 and the chained tick stays bit-identical;
+    fully-bf16 stacks agree to one bf16 ulp per deeper layer (interpret
+    mode emulates in-kernel bf16 dots in f32 — see lstm_decode)."""
+    L, B, H = 3, 2, 16
+    key = jax.random.PRNGKey(11)
+    layers = []
+    for _ in range(L):
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        layers.append({
+            "W": (jax.random.normal(k1, (H, 4 * H)) * 0.2
+                  ).astype(jnp.bfloat16),
+            "U": (jax.random.normal(k2, (H, 4 * H)) * 0.2
+                  ).astype(jnp.bfloat16),
+            "b": (jax.random.normal(k3, (4 * H,)) * 0.1
+                  ).astype(jnp.bfloat16),
+        })
+    for ad, exact in ((jnp.float32, True), (jnp.bfloat16, False)):
+        x = (jax.random.normal(jax.random.PRNGKey(12), (B, 1, H)) * 0.5
+             ).astype(ad)
+        h = (jax.random.normal(jax.random.PRNGKey(13), (L, B, H)) * 0.3
+             ).astype(ad)
+        c = jax.random.normal(jax.random.PRNGKey(14), (L, B, H)) * 0.3
+        y, h_ref, c_ref = x, [], []
+        for l, lay in enumerate(layers):
+            xw = (jnp.einsum("btx,xg->btg", y, lay["W"])
+                  + lay["b"]).reshape(B, 1, 4, H)
+            hs, h_n, c_n = lstm_seq(lay["U"].reshape(H, 4, H), xw, h[l],
+                                    c[l], block_t=1, interpret=True)
+            h_ref.append(h_n)
+            c_ref.append(c_n)
+            y = hs.astype(x.dtype)
+        xw0, Ws, bs, Us = _decode_args(layers, x, 4, H)
+        h_n, c_n = lstm_decode(xw0, Ws, bs, Us, h, c, interpret=True)
+        got = np.asarray(h_n.astype(jnp.float32))
+        want = np.asarray(jnp.stack(h_ref).astype(jnp.float32))
+        if exact:
+            np.testing.assert_array_equal(got, want)
+            np.testing.assert_array_equal(np.asarray(c_n),
+                                          np.asarray(jnp.stack(c_ref)))
+        else:
+            np.testing.assert_allclose(got, want, atol=2e-2)
+
+
+def test_decode_is_one_launch_where_the_loop_is_L():
+    L, B, H = 5, 2, 16
+    layers = _stack(L, H, H, 4, seed=8)
+    x = jax.random.normal(jax.random.PRNGKey(9), (B, 1, H)) * 0.5
+    h = jnp.zeros((L, B, H))
+    c = jnp.zeros((L, B, H))
+    xw0, Ws, bs, Us = _decode_args(layers, x, 4, H)
+
+    chained = pallas_launch_count(
+        lambda *a: lstm_decode(*a, interpret=True), xw0, Ws, bs, Us, h, c)
+
+    def loop(x, h, c):
+        y, outs = x, []
+        for l, lay in enumerate(layers):
+            xw = (jnp.einsum("btx,xg->btg", y, lay["W"])
+                  + lay["b"]).reshape(B, 1, 4, H)
+            hs, h_n, c_n = lstm_seq(lay["U"].reshape(H, 4, H), xw, h[l],
+                                    c[l], block_t=1, interpret=True)
+            y = hs.astype(x.dtype)
+            outs.append(h_n)
+        return outs
+
+    assert chained == 1
+    assert pallas_launch_count(loop, x, h, c) == L

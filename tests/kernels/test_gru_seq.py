@@ -41,6 +41,22 @@ def test_time_block_edges(T, bt):
     np.testing.assert_allclose(np.asarray(h_n), np.asarray(hnr), atol=1e-4)
 
 
+def test_ragged_b_mask_rows_are_exact_noops():
+    """b_valid padding rows pass their state through untouched and valid
+    rows are bit-exact vs the unmasked launch — the cross-B packing
+    contract (GRU edition)."""
+    G, B, T, H = 2, 3, 9, 40
+    U3, xw, h0 = _mk(B, T, H, seed=11, G=G)
+    hs, h_n = gru_seq(U3, xw, h0, b_valid=jnp.array([3, 2]), block_t=4,
+                      interpret=True)
+    full, hn_f = gru_seq(U3, xw, h0, block_t=4, interpret=True)
+    np.testing.assert_array_equal(np.asarray(hs[0]), np.asarray(full[0]))
+    np.testing.assert_array_equal(np.asarray(h_n[1, :2]),
+                                  np.asarray(hn_f[1, :2]))
+    np.testing.assert_array_equal(np.asarray(h_n[1, 2:]),
+                                  np.asarray(h0[1, 2:]))
+
+
 def test_stacked_cells_one_launch():
     """G independent GRU recurrences in one batched launch — the wavefront
     slot shape the dispatcher packs."""

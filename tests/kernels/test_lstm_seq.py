@@ -96,6 +96,49 @@ def test_one_launch_vs_T_launches(T):
     assert per_step == T
 
 
+@pytest.mark.parametrize("stacked", [False, True])
+def test_c0_omitted_defaults_to_zeros(stacked):
+    """Regression: lstm_seq(U4, xw, h0) with c0 omitted used to crash on
+    c0[None] (and pass None through in the stacked branch); a missing c0
+    must default to fp32 zeros independently of h0 in BOTH branches."""
+    B, T, H = 2, 5, 32
+    U4, xw, h0, _ = _mk(B, T, H, seed=3, G=2 if stacked else 0)
+    hs, h_n, c_n = lstm_seq(U4, xw, h0, interpret=True)
+    zeros = jnp.zeros(h0.shape, jnp.float32)
+    hs2, hn2, cn2 = lstm_seq(U4, xw, h0, zeros, interpret=True)
+    np.testing.assert_array_equal(np.asarray(hs), np.asarray(hs2))
+    np.testing.assert_array_equal(np.asarray(h_n), np.asarray(hn2))
+    np.testing.assert_array_equal(np.asarray(c_n), np.asarray(cn2))
+
+
+def test_ragged_b_mask_rows_are_exact_noops():
+    """b_valid padding rows pass their state through untouched and valid
+    rows are bit-exact vs the unmasked launch — the cross-B packing
+    contract."""
+    G, B, T, H = 2, 3, 9, 40
+    U4, xw, h0, c0 = _mk(B, T, H, seed=11, G=G)
+    b_valid = jnp.array([3, 1])
+    hs, h_n, c_n = lstm_seq(U4, xw, h0, c0, b_valid=b_valid, block_t=4,
+                            interpret=True)
+    full, hn_f, cn_f = lstm_seq(U4, xw, h0, c0, block_t=4, interpret=True)
+    np.testing.assert_array_equal(np.asarray(hs[0]), np.asarray(full[0]))
+    np.testing.assert_array_equal(np.asarray(h_n[1, :1]),
+                                  np.asarray(hn_f[1, :1]))
+    np.testing.assert_array_equal(np.asarray(c_n[1, :1]),
+                                  np.asarray(cn_f[1, :1]))
+    # padded rows: state passes through bit-exactly
+    np.testing.assert_array_equal(np.asarray(h_n[1, 1:]),
+                                  np.asarray(h0[1, 1:]))
+    np.testing.assert_array_equal(np.asarray(c_n[1, 1:]),
+                                  np.asarray(c0[1, 1:]))
+
+
+def test_b_valid_rejected_for_unstacked():
+    U4, xw, h0, c0 = _mk(2, 4, 16, seed=5)
+    with pytest.raises(ValueError, match="stacked"):
+        lstm_seq(U4, xw, h0, c0, b_valid=jnp.array([1]), interpret=True)
+
+
 @settings(max_examples=10, deadline=None)
 @given(B=st.integers(1, 3), T=st.integers(1, 20), H=st.sampled_from([8, 40, 96]),
        bt=st.sampled_from([1, 3, 8, 16]))

@@ -56,3 +56,17 @@ def test_dispatch_suite_writes_json(tmp_path):
     n_naive = int(re.search(r"launches=(\d+)", naive["derived"]).group(1))
     assert n_packed < n_naive, (n_packed, n_naive)
     assert "max_err" in packed["derived"]
+
+    def launches(row, key="launches"):
+        return int(re.search(rf"{key}=(\d+)", rows[row]["derived"]).group(1))
+
+    # the decode claim, measured: a planned steady-state tick launches
+    # strictly fewer kernels than the old L-per-tick loop (bit-equal gated
+    # inside the bench before emission)
+    tick = launches("dispatch/decode_planned_tick", "launches_per_tick")
+    loop = launches("dispatch/decode_loop_tick", "launches_per_tick")
+    assert tick < loop, (tick, loop)
+    # the cross-B claim, measured: packed mixed-B prefill launches fewer
+    # kernels than the equal-signature unpacked plan
+    assert (launches("dispatch/cross_b_packed_prefill")
+            < launches("dispatch/cross_b_unpacked_prefill"))
