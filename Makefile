@@ -2,15 +2,29 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test ci bench-kernels bench-dispatch bench
+.PHONY: test ci deprecations api-demo bench-kernels bench-dispatch bench
 
 test:
 	$(PY) -m pytest -x -q
 
-# What CI runs (.github/workflows/ci.yml): the tier-1 suite, which already
-# includes the benchmark smoke tests (tests/test_bench_smoke.py runs the
-# kernels + dispatch suites end-to-end and checks their claims).
-ci: test
+# Deprecation gate: the FULL tier-1 suite, erroring on any
+# DeprecationWarning ATTRIBUTED TO a repro.* module — i.e. repro-internal
+# code still calling the deprecated run_layer/run_stack shims (tests may
+# call them — the warning is attributed to the caller; internal code must
+# go through repro.rnn).  The module field is a pytest regex.  A strict
+# superset of `make test`, so CI runs the suite exactly once, under it.
+deprecations:
+	$(PY) -m pytest -x -q -W "error::DeprecationWarning:repro\."
+
+# The unified front-end tour (compile/forward/prefill/decode + plans).
+api-demo:
+	$(PY) examples/rnn_api_demo.py
+
+# What CI runs (.github/workflows/ci.yml): the tier-1 suite (which already
+# includes the benchmark smoke tests — tests/test_bench_smoke.py runs the
+# kernels + dispatch suites end-to-end and checks their claims) under the
+# deprecations gate — one run covers both.
+ci: deprecations
 
 # Kernel microbench suite; writes BENCH_kernels.json (committed — the
 # cross-PR perf trajectory).

@@ -2,18 +2,21 @@
 
 A mixed batch of three LSTM configs (different H/L/T, all from
 repro.configs.sharp_lstm) goes through the tile dispatcher as one
-DispatchPlan; the baseline runs each request alone through the per-request
-wavefront schedule (``run_stack(..., "wavefront")``).  Rows record the
-structural launch counts (pallas_launch_count — the dispatch claim) and the
-CPU-oracle wall time; outputs are verified equal against the pure-jnp
-unfolded oracle before anything is emitted.
+DispatchPlan; the baseline runs each request alone through its own
+per-request wavefront plan (the shape the retired ``run_stack_wavefront``
+used).  Rows record the structural launch counts (pallas_launch_count —
+the dispatch claim) and the CPU-oracle wall time; outputs are verified
+equal against the pure-jnp unfolded oracle before anything is emitted.
 
 The decode sub-suite records the serving steady state: a planned tick (ONE
 chained launch over the k active slots' layer chains, cross-B packed) vs
 the pre-existing hand loop (L per-layer launches over the full slot pool) —
 verified bit-equal before emission.  The cross-B sub-suite records a
 mixed-B prefill mix packed (pad + in-kernel mask) vs the per-B-signature
-plan of the same items.
+plan of the same items.  The facade sub-suite (ISSUE-4) proves
+``repro.rnn.compile().forward()`` adds ZERO launches over direct
+dispatch.plan/execute on the same WorkItem — the front-end is the same
+pipeline, not a wrapper with overhead.
 """
 from __future__ import annotations
 
@@ -24,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import rnn
 from repro.configs.sharp_lstm import lstm_config
 from repro.core import schedules as sch
 from repro.dispatch import (WorkItem, execute, plan, plan_decode,
@@ -59,20 +63,22 @@ def dispatch(emit) -> None:
               for i, (cfg, T) in enumerate(MIX)}
 
     p = plan(items)
+    solo = {i: plan([items[i]], schedule="wavefront",
+                    block_t=min(items[i].T, 16)) for i in inputs}
 
     def packed(pr, xs):
         return execute(p, pr, xs, interpret=True)
 
     def per_request(pr, xs):
-        return {i: sch.run_stack(pr[i], xs[i], "wavefront", interpret=True)
-                for i in xs}
+        return {i: execute(solo[i], {i: pr[i]}, {i: xs[i]},
+                           interpret=True)[i] for i in xs}
 
     # -- correctness gate: packed == per-request == pure-jnp oracle -------
     outs = packed(params, inputs)
     naive = per_request(params, inputs)
     max_err = 0.0
     for i in inputs:
-        oracle = sch.run_stack(params[i], inputs[i], "unfolded")
+        oracle = sch.reference_stack(params[i], inputs[i])
         for got in (outs[i], naive[i]):
             err = float(jnp.max(jnp.abs(got - oracle)))
             max_err = max(max_err, err)
@@ -90,7 +96,7 @@ def dispatch(emit) -> None:
          _time(per_request, params, inputs),
          f"{shapes} launches={n_naive}")
     emit("dispatch/oracle_unfolded",
-         _time(lambda pr, xs: {i: sch.run_stack(pr[i], xs[i], "unfolded")
+         _time(lambda pr, xs: {i: sch.reference_stack(pr[i], xs[i])
                                for i in xs}, params, inputs), shapes)
     emit("dispatch/plan", 0.0,
          f"items={len(items)} launches={p.launches} "
@@ -98,6 +104,7 @@ def dispatch(emit) -> None:
 
     _decode_rows(emit)
     _cross_b_rows(emit)
+    _facade_rows(emit)
 
 
 def _decode_rows(emit) -> None:
@@ -203,3 +210,39 @@ def _cross_b_rows(emit) -> None:
     emit("dispatch/cross_b_unpacked_prefill",
          _time(run_unpacked, params, inputs),
          f"{shapes} launches={n_u} slots={len(unpacked.slots)}")
+
+
+def _facade_rows(emit) -> None:
+    """ISSUE-4 parity guard: the rnn facade is the SAME plan/execute
+    pipeline — ``compile().forward()`` launches exactly the kernels of a
+    direct dispatch.plan/execute of the same WorkItem (zero facade
+    overhead), with plan caching amortizing the planner across calls."""
+    cfg, T = lstm_config(64, layers=3), 24
+    stack = init_lstm_stack(jax.random.PRNGKey(0), cfg, jnp.float32)
+    xs = jax.random.normal(jax.random.PRNGKey(100), (1, T, 64)) * 0.5
+
+    direct_plan = plan([WorkItem.from_config(cfg, T=T, uid=0)])
+
+    def direct(pr, x):
+        return execute(direct_plan, {0: pr}, {0: x}, interpret=True)[0]
+
+    pol = rnn.ExecutionPolicy(interpret=True)
+    cs = rnn.compile(stack, pol)
+
+    def facade(pr, x):
+        return cs.forward(x)
+
+    # -- parity gate: identical outputs, identical launch count ----------
+    np.testing.assert_array_equal(np.asarray(facade(stack, xs)),
+                                  np.asarray(direct(stack, xs)))
+    n_direct = pallas_launch_count(direct, stack, xs)
+    n_facade = pallas_launch_count(
+        lambda pr, x: rnn.CompiledStack(pr, pol).forward(x), stack, xs)
+    assert n_facade == n_direct == direct_plan.launches, \
+        (n_facade, n_direct, direct_plan.launches)
+
+    shapes = f"H{cfg.lstm_hidden}L{cfg.n_layers}T{T}"
+    emit("dispatch/facade_forward", _time(facade, stack, xs),
+         f"{shapes} launches={n_facade} (== direct; plan cached)")
+    emit("dispatch/facade_direct_plan_execute", _time(direct, stack, xs),
+         f"{shapes} launches={n_direct}")

@@ -64,7 +64,7 @@ def fig11_schedules(emit) -> None:
     xs = jax.random.normal(jax.random.PRNGKey(1), (B, T, H))
     base_us = None
     for s in sch.SCHEDULES:
-        fn = jax.jit(lambda p, x, s=s: sch.run_layer(p, x, s))
+        fn = jax.jit(lambda p, x, s=s: sch.LAYER_FNS[s](p, x))
         us = _time(fn, params, xs)
         if s == "sequential":
             base_us = us

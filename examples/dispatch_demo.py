@@ -50,13 +50,13 @@ def main():
 
     print()
     for i, (cfg, T) in enumerate(MIX):
-        oracle = sch.run_stack(params[i], inputs[i], "unfolded")
+        oracle = sch.reference_stack(params[i], inputs[i])
         err = float(jnp.max(jnp.abs(outs[i] - oracle)))
         print(f"item {i}: {outs[i].shape}  max|err| vs oracle = {err:.2e}")
         assert err < 1e-4
     y = inputs[3]
     for layer in params[3]["layers"]:
-        y = gru.run_layer(layer, y, "unfolded")
+        y = gru.run_layer_unfolded(layer, y)
     err = float(jnp.max(jnp.abs(outs[3] - y)))
     print(f"item 3: {outs[3].shape}  max|err| vs oracle = {err:.2e} (gru)")
     assert err < 1e-4

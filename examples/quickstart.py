@@ -28,7 +28,7 @@ def main():
     ref = None
     print(f"{'schedule':<12} {'cpu_ms':>8} {'model_speedup@64K':>18}")
     for s in sch.SCHEDULES:
-        fn = jax.jit(lambda p, x, s=s: sch.run_layer(p, x, s))
+        fn = jax.jit(lambda p, x, s=s: sch.LAYER_FNS[s](p, x))
         out = jax.block_until_ready(fn(params, xs))
         if ref is None:
             ref = out
@@ -43,10 +43,19 @@ def main():
         print(f"{s:<12} {ms:8.2f} {pred_s}")
 
     # the fused Pallas cell drops into the unfolded scan
-    out = sch.run_layer(params, xs, "unfolded",
-                        cell_kernel=as_cell_kernel(interpret=True))
+    out = sch.run_layer_unfolded(params, xs,
+                                 cell_kernel=as_cell_kernel(interpret=True))
     assert jnp.allclose(out, ref, atol=1e-4)
     print("\nunfolded + Pallas lstm_cell kernel (interpret): matches reference ✓")
+
+    # the unified front-end: the same layer through the planned path
+    from repro import rnn
+
+    cs = rnn.compile({"layers": [params]}, rnn.ExecutionPolicy())
+    assert jnp.allclose(cs.forward(xs), ref, atol=1e-4)
+    print(f"repro.rnn.compile(...).forward: matches reference ✓ "
+          f"({cs.plan.launches} planned launches — "
+          "see examples/rnn_api_demo.py)")
 
     d = pm.Design(macs=65536)
     cfg = lstm_config(H)

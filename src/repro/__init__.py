@@ -1,0 +1,29 @@
+"""repro: a growing jax_pallas reproduction of SHARP (arXiv:1911.01258).
+
+The one obvious import for users is the unified recurrent front-end:
+
+    from repro import rnn
+    compiled = rnn.compile(stack_or_config, rnn.ExecutionPolicy(...))
+
+Submodules load lazily (``repro.kernels``, ``repro.dispatch``, ...) so
+``import repro`` stays cheap — nothing below pulls jax until touched.
+"""
+from importlib import import_module
+
+_SUBMODULES = ("checkpoint", "configs", "core", "data", "dispatch",
+               "kernels", "launch", "models", "optim", "rnn", "runtime",
+               "serving", "sharding")
+
+__all__ = list(_SUBMODULES)
+
+
+def __getattr__(name):
+    if name in _SUBMODULES:
+        mod = import_module(f"repro.{name}")
+        globals()[name] = mod  # cache: next access skips __getattr__
+        return mod
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(list(globals()) + list(_SUBMODULES)))

@@ -147,12 +147,36 @@ def run_layer_fused(params, xs, block_t: int = 0, interpret=None,
     return (hs, h_n.astype(xs.dtype)) if return_state else hs
 
 
-_FNS = {"sequential": run_layer_sequential, "intergate": run_layer_intergate,
-        "unfolded": run_layer_unfolded, "fused": run_layer_fused}
+LAYER_FNS = {"sequential": run_layer_sequential,
+             "intergate": run_layer_intergate,
+             "unfolded": run_layer_unfolded, "fused": run_layer_fused}
 
 
 def run_layer(params, xs, schedule: str = "unfolded", **kw):
-    return _FNS[schedule](params, xs, **kw)
+    """DEPRECATED shim over the unified front-end (repro.rnn) — a GRU
+    layer's parameter dict is a one-layer stack, and ``compile`` infers the
+    family from its 3H gate axis.  An unknown schedule now fails with a
+    ValueError naming the options (this used to be a bare KeyError)."""
+    import warnings
+
+    warnings.warn(
+        "repro.core.gru.run_layer is deprecated; use "
+        "repro.rnn.compile({'layers': [params]}, "
+        "ExecutionPolicy(schedule=...)).forward(xs) "
+        "(see src/repro/rnn/README.md for the migration table)",
+        DeprecationWarning, stacklevel=2)
+    if any(k in kw for k in ("return_state",)):
+        if schedule not in LAYER_FNS:
+            raise ValueError(
+                f"unknown schedule {schedule!r}; gru options {SCHEDULES}")
+        return LAYER_FNS[schedule](params, xs, **kw)
+    from repro.rnn import ExecutionPolicy, compile as _compile
+
+    pol = ExecutionPolicy(schedule=schedule, block_t=kw.pop("block_t", 0),
+                          interpret=kw.pop("interpret", None))
+    if kw:
+        raise TypeError(f"gru.run_layer: unexpected kwargs {sorted(kw)}")
+    return _compile({"layers": [params]}, pol).forward(xs)
 
 
 # --- perf-model hook (3 gates instead of 4; tail has no cell state) --------

@@ -25,7 +25,7 @@ structure*, which is what the paper is about:
               and the state HBM round-trip both disappear.  One pallas_call
               per layer invocation instead of T.
 
-Stack-level scheduling (``run_stack``) additionally accepts
+Stack-level scheduling additionally accepts
 
   wavefront   layer l at time t depends only on layer l-1 at time t, so an
               L-layer stack over T steps (chunked into nk T-blocks) runs as
@@ -45,10 +45,27 @@ Stack-level scheduling (``run_stack``) additionally accepts
 batch/unfolded paths, mirroring the reconfigurable tile-engine;
 ``core.tiling.select_time_block`` (via the autotune table) picks the fused
 paths' T-stripe under the VMEM budget.
+
+NOTE — front-end status: the per-schedule implementations here remain the
+reference library (they ARE the paper's contribution and stay property-
+tested), but the dispatch wrappers ``run_layer``/``run_stack`` are
+DEPRECATED shims over the one planned execution path, ``repro.rnn``:
+
+    from repro import rnn
+    rnn.compile(stack_params, rnn.ExecutionPolicy(schedule="wavefront",
+                                                  block_t=4)).forward(xs)
+
+Every call — batch, serving, single layer — lowers to dispatch.WorkItems
+and runs through dispatch.planner/executor, so wavefront packing, cross-B
+merging, and plan caching apply uniformly (the stack-level ``wavefront``
+schedule is now literally the dispatcher's packed slot timeline; the old
+LSTM-only ``run_stack_wavefront`` is retired).  ``reference_stack`` below
+is the non-deprecated pure-jnp oracle tests and benchmarks compare against.
 """
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Optional
 
 import jax
@@ -199,7 +216,7 @@ def run_layer_fused(params, xs, block_t: int = 0, interpret=None,
     return (hs, state) if return_state else hs
 
 
-_LAYER_FNS = {
+LAYER_FNS = {
     "sequential": run_layer_sequential,
     "batch": run_layer_batch,
     "intergate": run_layer_intergate,
@@ -207,11 +224,40 @@ _LAYER_FNS = {
     "fused": run_layer_fused,
 }
 
+# implementation-specific escape hatches the ExecutionPolicy surface does
+# not (and should not) carry — a shim call using one of these goes straight
+# to the reference implementation instead of through repro.rnn.compile
+_IMPL_ONLY_KW = ("tile_cols", "cell_kernel", "seq_kernel", "return_state")
+
+
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"repro.core.schedules.{old} is deprecated; use {new} "
+        "(see src/repro/rnn/README.md for the migration table)",
+        DeprecationWarning, stacklevel=3)
+
 
 def run_layer(params, xs, schedule: str = "unfolded", **kw):
-    if schedule not in _LAYER_FNS:
-        raise ValueError(f"unknown schedule {schedule!r}; options {SCHEDULES}")
-    return _LAYER_FNS[schedule](params, xs, **kw)
+    """DEPRECATED shim over the unified front-end (kept so pre-facade
+    callers keep working): routes through ``repro.rnn.compile`` unless an
+    implementation-specific kwarg (tile_cols/cell_kernel/...) pins it to
+    the reference implementation directly."""
+    _deprecated(
+        "run_layer(params, xs, schedule)",
+        "repro.rnn.compile({'layers': [params]}, "
+        "ExecutionPolicy(schedule=...)).forward(xs)")
+    if any(k in kw for k in _IMPL_ONLY_KW):
+        if schedule not in LAYER_FNS:
+            raise ValueError(
+                f"unknown schedule {schedule!r}; options {SCHEDULES}")
+        return LAYER_FNS[schedule](params, xs, **kw)
+    from repro.rnn import ExecutionPolicy, compile as _compile
+
+    pol = ExecutionPolicy(schedule=schedule, block_t=kw.pop("block_t", 0),
+                          interpret=kw.pop("interpret", None))
+    if kw:
+        raise TypeError(f"run_layer: unexpected kwargs {sorted(kw)}")
+    return _compile({"layers": [params]}, pol).forward(xs)
 
 
 # ---------------------------------------------------------------------------
@@ -220,26 +266,110 @@ def run_layer(params, xs, schedule: str = "unfolded", **kw):
 
 
 def run_stack(stack_params, xs, schedule: str = "unfolded", **kw):
-    """stack_params from models.layers.lstm.init_lstm_stack.  xs (B,T,X)."""
-    if schedule == "wavefront":
-        return run_stack_wavefront(stack_params, xs, **kw)
-    if schedule not in _LAYER_FNS:
-        raise ValueError(
-            f"unknown schedule {schedule!r}; options {STACK_SCHEDULES}")
-    y = xs
-    for layer in stack_params["layers"]:
-        if "fwd" in layer:  # bidirectional
-            f = run_layer(layer["fwd"], y, schedule, **kw)
-            bwd_in = jnp.flip(y, axis=1)
-            b = run_layer(layer["bwd"], bwd_in, schedule, **kw)
-            y = jnp.concatenate([f, jnp.flip(b, axis=1)], axis=-1)
-        else:
-            y = run_layer(layer, y, schedule, **kw)
-    return y
+    """DEPRECATED shim over the unified front-end.  stack_params from
+    models.layers.lstm.init_lstm_stack (or core.gru.init_gru_stack, or a
+    mixed list).  xs (B,T,X).
+
+    All schedules — including ``wavefront``, whose LSTM-only hand-rolled
+    loop this shim retired — now lower to dispatch.WorkItems and execute
+    through the planner/executor, exactly like ``repro.rnn.compile``."""
+    _deprecated(
+        "run_stack(stack_params, xs, schedule)",
+        "repro.rnn.compile(stack_params, "
+        "ExecutionPolicy(schedule=...)).forward(xs)")
+    if any(k in kw for k in _IMPL_ONLY_KW):
+        # escape-hatch kwargs pin each layer to its family's reference
+        # implementation directly — only per-layer schedules qualify here
+        def one(fam, layer, y):
+            fns = _family_fns(fam)
+            if schedule not in fns:
+                raise ValueError(
+                    f"schedule {schedule!r} has no per-layer {fam} "
+                    f"reference implementation (the "
+                    f"{sorted(_IMPL_ONLY_KW)} kwargs pin to one); "
+                    f"{fam} options {tuple(fns)}")
+            return fns[schedule](layer, y, **kw)
+
+        return walk_stack(stack_params, xs, one)
+    from repro.rnn import ExecutionPolicy, compile as _compile
+
+    pol = ExecutionPolicy(schedule=schedule, block_t=kw.pop("block_t", 0),
+                          interpret=kw.pop("interpret", None))
+    if kw:
+        raise TypeError(f"run_stack: unexpected kwargs {sorted(kw)}")
+    return _compile(stack_params, pol).forward(xs)
 
 
 # ---------------------------------------------------------------------------
-# wavefront: anti-diagonal (layer, time-chunk) scheduling over the stack
+# stack introspection + the pure-jnp oracle (non-deprecated)
+# ---------------------------------------------------------------------------
+
+
+def stack_families(stack_params):
+    """Per-layer recurrence family of a parameter stack, inferred from the
+    gate-axis width: U (H, 4H) -> lstm, U (H, 3H) -> gru.  Bidirectional
+    layers are classified by their fwd half."""
+    fams = []
+    for i, layer in enumerate(stack_params["layers"]):
+        half = layer.get("fwd", layer)
+        H, G = half["U"].shape
+        if G == 4 * H:
+            fams.append("lstm")
+        elif G == 3 * H:
+            fams.append("gru")
+        else:
+            raise ValueError(
+                f"layer {i}: unrecognized gate width {G} for H={H} "
+                "(expected 4H lstm / 3H gru)")
+    return tuple(fams)
+
+
+def walk_stack(stack_params, xs, one):
+    """THE per-layer stack walk (family- and bidirectional-aware), shared
+    by the oracle, the shims' escape-hatch path, and the executor's
+    external path: ``one(family, layer_params, y) -> y`` is applied layer
+    by layer, with bidirectional layers running fwd on y and bwd on the
+    time-flipped y, concatenated on the feature axis."""
+    fams = stack_families(stack_params)
+    y = xs
+    for fam, layer in zip(fams, stack_params["layers"]):
+        if "fwd" in layer:  # bidirectional
+            f = one(fam, layer["fwd"], y)
+            b = one(fam, layer["bwd"], jnp.flip(y, axis=1))
+            y = jnp.concatenate([f, jnp.flip(b, axis=1)], axis=-1)
+        else:
+            y = one(fam, layer, y)
+    return y
+
+
+def _family_fns(fam):
+    if fam == "lstm":
+        return LAYER_FNS
+    from repro.core import gru as gru_mod
+
+    return gru_mod.LAYER_FNS
+
+
+def reference_stack(stack_params, xs, schedule: str = "unfolded"):
+    """Run a stack through the per-layer reference implementations — the
+    pure-jnp oracle tests and benchmarks compare every planned execution
+    against.  Family-aware per layer (mixed lstm/gru stacks run each layer
+    through its own library) and bidirectional-aware.  NOT deprecated and
+    NOT routed through the dispatcher — this is the ground truth the
+    dispatcher must reproduce."""
+    def one(fam, layer, y):
+        fns = _family_fns(fam)
+        if schedule not in fns:
+            raise ValueError(f"unknown schedule {schedule!r}; "
+                             f"{fam} options {tuple(fns)}")
+        return fns[schedule](layer, y)
+
+    return walk_stack(stack_params, xs, one)
+
+
+# ---------------------------------------------------------------------------
+# wavefront geometry (shared with repro.dispatch, whose planner packs
+# several items' cells into one global slot timeline)
 # ---------------------------------------------------------------------------
 
 
@@ -250,57 +380,7 @@ def wavefront_slots(n_layers: int, T: int, block_t: int) -> int:
 
 def wavefront_active(s: int, n_layers: int, nk: int):
     """Layer range [lo, hi] whose cells (l, k=s-l) are live in slot ``s``
-    of an (n_layers x nk) wavefront; empty range when s is out of bounds.
-    Shared with repro.dispatch, whose planner packs several items' cells
-    into one global slot timeline."""
+    of an (n_layers x nk) wavefront; empty range when s is out of bounds."""
     lo = max(0, s - nk + 1)
     hi = min(n_layers - 1, s)
     return lo, hi
-
-
-def run_stack_wavefront(stack_params, xs, block_t: int = 0, interpret=None):
-    """Wavefront schedule: cell (l, k) = layer l over time-chunk k runs in
-    slot s = l + k; every slot's cells (a contiguous run of layers) execute
-    as ONE G-batched sequence-fused kernel launch.
-
-    The sequence is zero-padded to a whole number of chunks — dependencies
-    are time-aligned, so pad-region garbage never flows into real outputs
-    and is sliced off at the end.
-    """
-    from repro.kernels.lstm_cell.ops import lstm_seq
-
-    layers = stack_params["layers"]
-    if any("fwd" in l for l in layers):  # bidirectional: no time alignment
-        return run_stack(stack_params, xs, "fused",
-                         block_t=block_t, interpret=interpret)
-    L = len(layers)
-    B, T, X = xs.shape
-    H = layers[0]["U"].shape[0]
-    bt = block_t or min(T, 16)
-    nk = cdiv(T, bt)
-    xs_pad = jnp.pad(xs, ((0, 0), (0, nk * bt - T), (0, 0)))
-
-    U_all = jnp.stack([l["U"].reshape(H, 4, H) for l in layers])  # (L,H,4,H)
-    h = jnp.zeros((L, B, H), xs.dtype)
-    c = jnp.zeros((L, B, H), jnp.float32)
-    outs = [[None] * nk for _ in range(L)]  # (B, bt, H) chunks
-
-    for s in range(L + nk - 1):
-        lo, hi = wavefront_active(s, L, nk)
-        # input halves for this slot's cells: layer l consumes the chunk the
-        # previous layer produced in slot s-1 (layer 0 reads the input)
-        xw = []
-        for l in range(lo, hi + 1):
-            k = s - l
-            src = xs_pad[:, k * bt:(k + 1) * bt] if l == 0 else outs[l - 1][k]
-            xw.append((jnp.einsum("btx,xg->btg", src, layers[l]["W"])
-                       + layers[l]["b"]).reshape(B, bt, 4, H))
-        hs, h_n, c_n = lstm_seq(
-            U_all[lo:hi + 1], jnp.stack(xw), h[lo:hi + 1], c[lo:hi + 1],
-            block_t=bt, interpret=interpret)
-        h = h.at[lo:hi + 1].set(h_n.astype(h.dtype))
-        c = c.at[lo:hi + 1].set(c_n)
-        for i, l in enumerate(range(lo, hi + 1)):
-            outs[l][s - l] = hs[i].astype(xs.dtype)
-
-    return jnp.concatenate(outs[L - 1], axis=1)[:, :T]

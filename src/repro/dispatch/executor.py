@@ -71,7 +71,6 @@ def execute(plan: DispatchPlan, params: Dict[int, dict],
     state — so for those items the plan's per_step/per_layer launch
     accounting describes the stateless execution, not this one.
     """
-    from repro.core import schedules as sch
     from repro.kernels.gru_cell.ops import gru_seq
     from repro.kernels.lstm_cell.ops import lstm_seq
 
@@ -84,6 +83,14 @@ def execute(plan: DispatchPlan, params: Dict[int, dict],
             f"plan contains plan-only items (uids {plan_only}): multi-layer "
             "rglru executes through its model, not the dispatcher — filter "
             "by ItemPlan.executable before execute()")
+    # state resume is a packed-timeline feature only; silently dropping a
+    # caller's init_state for an external item would compute from zeros
+    dropped = sorted(set(init_state or {}) & set(plan.external))
+    if dropped:
+        raise ValueError(
+            f"init_state given for external-fallback items {dropped}: their "
+            "schedule surfaces start from zero state — plan them onto the "
+            "packed timeline (e.g. schedule='wavefront') to resume")
 
     outputs: Dict[int, jnp.ndarray] = {}
     states: Dict[int, dict] = {}
@@ -105,20 +112,14 @@ def execute(plan: DispatchPlan, params: Dict[int, dict],
             outputs[it.uid], states[it.uid] = _run_stack_collect(
                 it, params[it.uid], xs, interpret=interpret)
             continue
-        if it.family == "gru":
-            outputs[it.uid] = _run_gru_stack(ip, params[it.uid], xs,
-                                             interpret=interpret)
-        elif ip.schedule == "per_step":
-            # honest accounting: per_step really is one cell-kernel launch
-            # per (layer, step) — L·T launches, matching naive_launches
-            from repro.kernels.lstm_cell.ops import as_cell_kernel
-
-            outputs[it.uid] = sch.run_stack(
-                params[it.uid], xs, "unfolded",
-                cell_kernel=as_cell_kernel(interpret=interpret))
-        else:
-            outputs[it.uid] = sch.run_stack(params[it.uid], xs, "fused",
-                                            interpret=interpret)
+        # per_layer (the bidirectional / forced-"fused" fallback) is the
+        # per-layer fused path; everything else external runs its own
+        # named schedule through the reference library
+        sched = "fused" if ip.schedule in ("per_layer", "fused") \
+            else ip.schedule
+        outputs[it.uid] = _run_reference(
+            params[it.uid], xs, sched,
+            interpret=interpret, block_t=ip.block_t)
         if collect_state:
             states[it.uid] = None  # bidirectional: no single t=T state
 
@@ -130,14 +131,22 @@ def execute(plan: DispatchPlan, params: Dict[int, dict],
         it = ip.item
         dtype = inputs[it.uid].dtype
         st0 = (init_state or {}).get(it.uid)
+
+        def _c0(l):
+            # cell state exists per LSTM layer only; a mixed stack's gru
+            # layers carry None (their slots never read/write c)
+            if it.families[l] != "lstm":
+                return None
+            if st0 is not None and "c" in st0:
+                return st0["c"][l]
+            return jnp.zeros((it.B, it.H), jnp.float32)
+
         live[it.uid] = {
             "plan": ip,
             "h": ([st0["h"][l] for l in range(it.L)] if st0 else
                   [jnp.zeros((it.B, it.H), dtype) for _ in range(it.L)]),
-            "c": (([st0["c"][l] for l in range(it.L)] if st0 else
-                   [jnp.zeros((it.B, it.H), jnp.float32)
-                    for _ in range(it.L)])
-                  if it.family == "lstm" else None),
+            "c": ([_c0(l) for l in range(it.L)]
+                  if "lstm" in it.families else None),
             "outs": [[None] * ip.nk for _ in range(it.L)],
         }
 
@@ -208,7 +217,12 @@ def execute(plan: DispatchPlan, params: Dict[int, dict],
         if collect_state:
             states[uid] = {"h": jnp.stack(st["h"])}
             if st["c"] is not None:
-                states[uid]["c"] = jnp.stack(st["c"])
+                # mixed stacks: gru layers have no cell state — their rows
+                # are zeros so "c" keeps the documented (L, B, H) shape
+                states[uid]["c"] = jnp.stack(
+                    [c if c is not None
+                     else jnp.zeros((it.B, it.H), jnp.float32)
+                     for c in st["c"]])
 
     return (outputs, states) if collect_state else outputs
 
@@ -299,38 +313,56 @@ def _run_chained_slot(slot, params, inputs, live, *, interpret=None,
         off += nb
 
 
-def _run_gru_stack(ip: ItemPlan, stack, xs, *, interpret=None):
-    """GRU stack fallback (mirrors core.schedules.run_stack for GRU layers,
-    including the bidirectional fwd/bwd split)."""
-    from repro.core import gru as gru_mod
+def _run_reference(stack, xs, schedule, *, interpret=None,
+                   block_t: int = 0):
+    """External (unpacked) execution of a stack through the reference
+    schedule library — per-layer family aware (families inferred from the
+    bound parameters by ``core.schedules.walk_stack``), with the
+    bidirectional fwd/bwd split.
 
-    schedule = "unfolded" if ip.schedule == "per_step" else "fused"
-    kw = {} if schedule == "unfolded" else \
-        {"interpret": interpret, "block_t": ip.block_t}
-    y = xs
-    for layer in stack["layers"]:
-        if "fwd" in layer:
-            f = gru_mod.run_layer(layer["fwd"], y, schedule, **kw)
-            b = gru_mod.run_layer(layer["bwd"], jnp.flip(y, axis=1),
-                                  schedule, **kw)
-            y = jnp.concatenate([f, jnp.flip(b, axis=1)], axis=-1)
-        else:
-            y = gru_mod.run_layer(layer, y, schedule, **kw)
-    return y
+    ``fused`` is one internally-striped sequence-kernel launch per layer
+    (and per direction); ``per_step`` is the honest per-(layer, step)
+    cell-kernel accounting for lstm layers (gru has no per-step pallas
+    kernel — pure-jnp unfolded scan, zero launches); the research
+    schedules (sequential/batch/intergate/unfolded) run the pure-jnp
+    implementations in core.schedules / core.gru.
+    """
+    from repro.core import gru as gru_mod
+    from repro.core import schedules as sch
+
+    if schedule not in ("fused", "per_step"):
+        # research schedules ARE the oracle: delegate, one dispatch table
+        return sch.reference_stack(stack, xs, schedule)
+
+    def one(family, layer, y):
+        if schedule == "fused":
+            fn = (sch.run_layer_fused if family == "lstm"
+                  else gru_mod.run_layer_fused)
+            return fn(layer, y, block_t=block_t, interpret=interpret)
+        if family == "lstm":  # per_step: one cell-kernel launch per step
+            from repro.kernels.lstm_cell.ops import as_cell_kernel
+
+            return sch.run_layer_unfolded(
+                layer, y, cell_kernel=as_cell_kernel(interpret=interpret))
+        return gru_mod.run_layer_unfolded(layer, y)
+
+    return sch.walk_stack(stack, xs, one)
 
 
 def _run_stack_collect(item, stack, xs, *, interpret=None):
-    """Unidirectional lstm/gru stack, layer by layer through the fused
-    schedule APIs (return_state=True), returning (outputs, exact t=T
-    states) — the fallback path when a caller needs state (serving
-    prefill) for an unpacked item."""
+    """Unidirectional stack, layer by layer through the fused schedule APIs
+    (return_state=True), returning (outputs, exact t=T states) — the
+    fallback path when a caller needs state (serving prefill) for an
+    unpacked item.  Mixed stacks: gru layers contribute zero rows to "c"
+    (present whenever any layer is an LSTM)."""
     from repro.core import gru as gru_mod
     from repro.core import schedules as sch
 
     y = xs
+    any_lstm = "lstm" in item.families
     hs_f, cs_f = [], []
-    for layer in stack["layers"]:
-        if item.family == "lstm":
+    for fam, layer in zip(item.families, stack["layers"]):
+        if fam == "lstm":
             y, (h_n, c_n) = sch.run_layer_fused(layer, y,
                                                 interpret=interpret,
                                                 return_state=True)
@@ -338,6 +370,8 @@ def _run_stack_collect(item, stack, xs, *, interpret=None):
         else:
             y, h_n = gru_mod.run_layer_fused(layer, y, interpret=interpret,
                                              return_state=True)
+            if any_lstm:
+                cs_f.append(jnp.zeros((xs.shape[0], item.H), jnp.float32))
         hs_f.append(h_n.astype(xs.dtype))
     state = {"h": jnp.stack(hs_f)}
     if cs_f:

@@ -31,8 +31,9 @@ can be printed, diffed, and unit-tested for determinism and launch counts.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, Iterable, List, Sequence, Tuple
+from collections import Counter
+from dataclasses import dataclass, replace
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 from repro.core.autotune import table
 from repro.core.perfmodel import (Design, LAUNCH_CYCLES, decode_plan_cycles,
@@ -108,7 +109,10 @@ class Slot:
 class ItemPlan:
     """Per-item planning outcome (shape, chosen schedule, tiling)."""
     item: WorkItem
-    schedule: str           # wavefront | fused | per_step | per_layer
+    schedule: str           # wavefront | fused | per_step | per_layer |
+    #                         decode | a forced reference schedule
+    #                         (sequential/batch/intergate/unfolded — these
+    #                         route external through core.schedules/core.gru)
     block_t: int            # chosen T-stripe (0 for non-striped fallbacks)
     nk: int                 # number of time chunks
     tile_k: int
@@ -244,13 +248,17 @@ def _pack(item_plans: Sequence[ItemPlan], macs: int, *,
         for ip, waves in by_item:
             it = ip.item
             for chunk_len, cell in waves.get(s, []):
+                # the launch signature carries the CELL's layer family, not
+                # the item's head family — a mixed lstm/gru stack's cells
+                # land in per-family slots of the same wave timeline
+                fam = it.families[cell.layer]
                 if cross_b:
-                    sig = (it.family, it.H, chunk_len, it.dtype)
+                    sig = (fam, it.H, chunk_len, it.dtype)
                     gkey = (("share", it.share, cell.layer)
                             if it.share is not None else
                             ("solo", it.uid, cell.layer, cell.chunk))
                 else:
-                    sig = (it.family, it.H, it.B, chunk_len, it.dtype)
+                    sig = (fam, it.H, it.B, chunk_len, it.dtype)
                     gkey = ("solo", it.uid, cell.layer, cell.chunk)
                 sigs.setdefault(sig, {}).setdefault(gkey, []).append(
                     (it.order_key() + (cell.layer,), cell, it.B))
@@ -308,12 +316,100 @@ def _pack(item_plans: Sequence[ItemPlan], macs: int, *,
     return tuple(slots)
 
 
-def _schedule_item(it: WorkItem, macs: int, design: Design) -> ItemPlan:
+REFERENCE_SCHEDULES = ("sequential", "batch", "intergate", "unfolded")
+FORCED_SCHEDULES = REFERENCE_SCHEDULES + ("wavefront", "fused", "per_step")
+
+
+def _fit_stripe(bt: int, B: int, H: int, gates: int) -> int:
+    """Halve a requested T-stripe until its sequence-kernel working set
+    fits the VMEM budget (shared by the forced and auto paths)."""
+    while bt > 1 and seq_block_footprint(bt, B, H,
+                                         gates=gates) > SEQ_VMEM_BUDGET:
+        bt //= 2
+    return bt
+
+
+def _stack_est(it: WorkItem, design: Design, *, nk: int) -> float:
+    """Perfmodel stack estimate, per-layer-family aware: a mixed stack's
+    cost is approximated as the sum of each family's sub-stack (the slot
+    timeline splits by family anyway); exact for homogeneous items."""
+    return sum(stack_plan_cycles(f, it.H, it.X, it.T, n, design, nk=nk)
+               for f, n in sorted(Counter(it.families).items()))
+
+
+def _per_step_plan(it: WorkItem, design: Design, tile_k, mvm_block,
+                   dirs: int = 1) -> ItemPlan:
+    """lstm per_step runs one cell-kernel launch per (layer, step); gru has
+    no per-step pallas kernel (pure-jnp scan -> zero launches)."""
+    est = dirs * sum(per_step_plan_cycles(f, it.H, it.X, it.T, n, design)
+                     for f, n in sorted(Counter(it.families).items()))
+    n_lstm = sum(1 for f in it.families if f == "lstm")
+    return ItemPlan(item=it, schedule="per_step", block_t=0, nk=it.T,
+                    tile_k=tile_k, mvm_block=mvm_block,
+                    naive_launches=dirs * n_lstm * it.T, est_cycles=est)
+
+
+def _forced_plan(it: WorkItem, design: Design, force: str, force_bt: int,
+                 tile_k, mvm_block) -> ItemPlan:
+    """Plan one item under an explicitly requested schedule (the repro.rnn
+    ``ExecutionPolicy.schedule`` preference) instead of the scorer's pick.
+
+    Reference schedules (sequential/batch/intergate/unfolded) route
+    external: the executor runs them through the pure research
+    implementations in core.schedules / core.gru (zero kernel launches).
+    ``fused`` is the legacy per-layer fused path (one internally-striped
+    sequence-kernel launch per layer -> schedule tag "per_layer");
+    ``wavefront`` enters the packed slot timeline at the forced (or
+    autotuned) T-stripe.
+    """
+    dirs = 2 if it.bidirectional else 1
+    if force in REFERENCE_SCHEDULES:
+        if force == "batch" and set(it.families) != {"lstm"}:
+            raise ValueError(
+                f"item {it.uid}: schedule 'batch' has no gru reference "
+                f"implementation (gru schedules: sequential, intergate, "
+                f"unfolded, fused)")
+        d = replace(design, schedule=force)
+        est = dirs * sum(
+            per_step_plan_cycles(f, it.H, it.X, it.T, n, d, launch_cycles=0)
+            for f, n in sorted(Counter(it.families).items()))
+        return ItemPlan(item=it, schedule=force, block_t=0, nk=1,
+                        tile_k=tile_k, mvm_block=mvm_block,
+                        naive_launches=0, est_cycles=est)
+    if force == "per_step":
+        return _per_step_plan(it, design, tile_k, mvm_block, dirs=dirs)
+    if force == "fused" or it.bidirectional:
+        # per-layer fused launches (the sequence kernel stripes internally,
+        # so any T fits in one launch per layer/direction)
+        est = dirs * _stack_est(it, design, nk=1)
+        return ItemPlan(item=it, schedule="per_layer", block_t=force_bt,
+                        nk=1, tile_k=tile_k, mvm_block=mvm_block,
+                        naive_launches=dirs * it.L, est_cycles=est)
+    # wavefront: forced stripe if given (VMEM-checked), else the autotuned
+    # one — nk may collapse to 1, which IS the packable fused shape
+    bt = _fit_stripe(min(it.T, force_bt) if force_bt else
+                     table().seq_block(it.T, it.B, it.H, gates=it.gates),
+                     it.B, it.H, it.gates)
+    nk = cdiv(it.T, bt)
+    est = _stack_est(it, design, nk=nk)
+    ip = ItemPlan(item=it, schedule="wavefront" if nk > 1 else "fused",
+                  block_t=bt, nk=nk, tile_k=tile_k, mvm_block=mvm_block,
+                  naive_launches=0, est_cycles=est)
+    return _with_naive(ip)
+
+
+def _schedule_item(it: WorkItem, macs: int, design: Design,
+                   force: Optional[str] = None,
+                   force_bt: int = 0) -> ItemPlan:
     """Tile + score one item: pick fused/wavefront striping or fallback."""
     tile_k = table().tile(it.gates * it.H, max(it.H, it.X), macs).k
     mvm_block = table().block(it.H, it.H, vmem_budget=2 * 2**20)
 
     if it.family == "rglru":
+        if force is not None:
+            raise ValueError(
+                f"item {it.uid}: rglru items have no schedule override "
+                "(diagonal recurrence plans per-layer fused only)")
         # diagonal recurrence: one fused scan launch per recurrent layer,
         # no cross-layer wavefront (layers are separated by block mixing
         # that lives outside the dispatcher)
@@ -322,46 +418,48 @@ def _schedule_item(it: WorkItem, macs: int, design: Design) -> ItemPlan:
                         tile_k=tile_k, mvm_block=mvm_block,
                         naive_launches=it.L, est_cycles=est)
 
-    if it.bidirectional:
-        # fwd/bwd break the wavefront time alignment (core.schedules):
-        # per-layer fused fallback, 2 launches per layer
-        est = 2 * stack_plan_cycles(it.family, it.H, it.X, it.T, it.L,
-                                    design, nk=1)
-        return ItemPlan(item=it, schedule="per_layer", block_t=0, nk=1,
-                        tile_k=tile_k, mvm_block=mvm_block,
-                        naive_launches=2 * it.L, est_cycles=est)
-
     if it.T == 0:
         return ItemPlan(item=it, schedule="fused", block_t=1, nk=0,
                         tile_k=tile_k, mvm_block=mvm_block,
                         naive_launches=0, est_cycles=0.0)
 
-    bt0 = table().seq_block(it.T, it.B, it.H, gates=it.gates)
-    cands = sorted({min(it.T, bt0), min(it.T, max(1, bt0 // 2)),
-                    min(it.T, bt0 * 2), it.T})
-    # wider-than-bt0 candidates must still respect the sequence kernels'
-    # VMEM working-set bound the autotune table enforces
-    cands = [bt for bt in cands
-             if bt <= 1 or seq_block_footprint(bt, it.B, it.H,
-                                               gates=it.gates)
-             <= SEQ_VMEM_BUDGET] or [min(it.T, bt0)]
+    if force is not None:
+        return _forced_plan(it, design, force, force_bt, tile_k, mvm_block)
+
+    if it.bidirectional:
+        # fwd/bwd break the wavefront time alignment (core.schedules):
+        # per-layer fused fallback, 2 launches per layer
+        est = 2 * _stack_est(it, design, nk=1)
+        return ItemPlan(item=it, schedule="per_layer", block_t=0, nk=1,
+                        tile_k=tile_k, mvm_block=mvm_block,
+                        naive_launches=2 * it.L, est_cycles=est)
+
+    if force_bt:
+        # an explicit stripe override (ExecutionPolicy.block_t) pins the
+        # wavefront candidate even under "auto" — the scorer still weighs
+        # it against per_step, but never re-stripes it
+        cands = [_fit_stripe(min(it.T, force_bt), it.B, it.H, it.gates)]
+    else:
+        bt0 = table().seq_block(it.T, it.B, it.H, gates=it.gates)
+        cands = sorted({min(it.T, bt0), min(it.T, max(1, bt0 // 2)),
+                        min(it.T, bt0 * 2), it.T})
+        # wider-than-bt0 candidates must still respect the sequence
+        # kernels' VMEM working-set bound the autotune table enforces
+        cands = [bt for bt in cands
+                 if bt <= 1 or seq_block_footprint(bt, it.B, it.H,
+                                                   gates=it.gates)
+                 <= SEQ_VMEM_BUDGET] or [min(it.T, bt0)]
     scored = []
     for bt in cands:
         nk = cdiv(it.T, bt)
-        est = stack_plan_cycles(it.family, it.H, it.X, it.T, it.L,
-                                design, nk=nk)
+        est = _stack_est(it, design, nk=nk)
         scored.append((est, -bt, bt, nk, "wavefront" if nk > 1 else "fused"))
-    est_ps = per_step_plan_cycles(it.family, it.H, it.X, it.T, it.L, design)
-    scored.append((est_ps, 0, 0, it.T, "per_step"))
+    ps = _per_step_plan(it, design, tile_k, mvm_block)
+    scored.append((ps.est_cycles, 0, 0, it.T, "per_step"))
     est, _, bt, nk, sched = min(scored)
 
     if sched == "per_step":
-        # lstm per_step runs one cell-kernel launch per (layer, step); gru
-        # has no per-step pallas kernel (pure-jnp scan -> zero launches)
-        n = it.L * it.T if it.family == "lstm" else 0
-        return ItemPlan(item=it, schedule="per_step", block_t=0, nk=it.T,
-                        tile_k=tile_k, mvm_block=mvm_block,
-                        naive_launches=n, est_cycles=est)
+        return ps
     ip = ItemPlan(item=it, schedule=sched, block_t=bt, nk=nk, tile_k=tile_k,
                   mvm_block=mvm_block, naive_launches=0, est_cycles=est)
     return _with_naive(ip)
@@ -369,8 +467,6 @@ def _schedule_item(it: WorkItem, macs: int, design: Design) -> ItemPlan:
 
 def _with_naive(ip: ItemPlan) -> ItemPlan:
     """naive_launches = this item's own slot count when packed alone."""
-    from dataclasses import replace
-
     alone = _pack([replace(ip, naive_launches=0)], macs=0)
     return replace(ip, naive_launches=len(alone))
 
@@ -381,7 +477,8 @@ def _with_naive(ip: ItemPlan) -> ItemPlan:
 
 
 def plan(items: Iterable[WorkItem], *, macs: int = DEFAULT_MACS,
-         align_stripes: bool = True, cross_b: bool = True) -> DispatchPlan:
+         align_stripes: bool = True, cross_b: bool = True,
+         schedule: Optional[str] = None, block_t: int = 0) -> DispatchPlan:
     """Plan a batch of WorkItems into an explicit DispatchPlan.
 
     ``align_stripes``: items that could share launches (same family/H/
@@ -394,15 +491,26 @@ def plan(items: Iterable[WorkItem], *, macs: int = DEFAULT_MACS,
     widened launch cheaper (see ``_pack``).  Off = the launch signature
     includes B, every cell its own row (the pre-cross-B behaviour, kept as
     the benchmark baseline).
+
+    ``schedule``: force every item onto one schedule instead of the
+    scorer's pick (the repro.rnn ``ExecutionPolicy.schedule`` preference);
+    ``block_t`` pins the wavefront T-stripe (honored under ``schedule=None``
+    too — the scorer then only weighs the pinned stripe against per_step).
+    None/0 = score freely.
     """
+    if schedule is not None and schedule not in FORCED_SCHEDULES:
+        raise ValueError(f"unknown schedule {schedule!r}; "
+                         f"options {FORCED_SCHEDULES}")
     items = sorted(items, key=WorkItem.order_key)
     if len({it.uid for it in items}) != len(items):
         raise ValueError("duplicate WorkItem uids")
     design = Design(macs=macs, schedule="unfolded")
 
-    plans = {it.uid: _schedule_item(it, macs, design) for it in items}
+    plans = {it.uid: _schedule_item(it, macs, design, force=schedule,
+                                    force_bt=block_t) for it in items}
 
-    if align_stripes:
+    # a pinned block_t is a contract — alignment must not re-stripe it
+    if align_stripes and schedule is None and not block_t:
         _align_group_stripes(items, plans, design, cross_b=cross_b)
 
     packable, external = [], []
@@ -447,6 +555,10 @@ def plan_decode(items: Iterable[WorkItem], *,
         if it.T != 1:
             raise ValueError(f"item {it.uid}: decode items are T=1, got "
                              f"T={it.T}")
+        if it.heterogeneous:
+            raise ValueError(
+                f"item {it.uid}: mixed-family stacks have no chained decode "
+                "kernel; repro.rnn falls back to a per-layer T=1 plan")
         if it.share is None:
             raise ValueError(f"item {it.uid}: decode items must declare a "
                              "shared parameter stack (share=...)")
@@ -500,14 +612,15 @@ def _align_group_stripes(items: Sequence[WorkItem],
     (computed by actually packing the trial plans) — so the planner only
     re-stripes when the dependency structure genuinely lets items hide
     each other's launches."""
-    from dataclasses import replace
-
     groups: Dict[Tuple, List[WorkItem]] = {}
     for it in items:
         ip = plans[it.uid]
         if ip.schedule in ("wavefront", "fused") and it.family != "rglru" \
-                and it.T > 0 and not it.bidirectional:
+                and it.T > 0 and not it.bidirectional \
+                and not it.heterogeneous:
             # under cross-B, different-B items can share launches too
+            # (heterogeneous items keep their own validated stripe — their
+            # perfmodel trial costs are per-family sums, not comparable)
             sig = ((it.family, it.H, it.dtype) if cross_b
                    else (it.family, it.H, it.B, it.dtype))
             groups.setdefault(sig, []).append(it)

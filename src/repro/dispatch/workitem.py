@@ -34,7 +34,7 @@ GATES = {"lstm": 4, "gru": 3, "rglru": 1}
 @dataclass(frozen=True)
 class WorkItem:
     uid: int
-    family: str            # lstm | gru | rglru
+    family: str            # lstm | gru | rglru (layer-0 family)
     B: int                 # batch rows of this item (1 per serving request)
     T: int                 # time steps
     H: int                 # hidden / recurrence width
@@ -51,6 +51,15 @@ class WorkItem:
     #                              concatenate on B into one launch row
     #                              (cross-B packing) instead of occupying
     #                              separate G rows
+    families: Optional[tuple] = None  # per-layer family, length L; None ->
+    #                              homogeneous (family,) * L.  A mixed
+    #                              lstm/gru stack wavefronts through the
+    #                              same slot timeline — cells group into
+    #                              launches by their OWN layer's family —
+    #                              which is how the repro.rnn facade runs
+    #                              heterogeneous stacks (rglru layers have
+    #                              no (h, c)-state sequence kernel and
+    #                              cannot appear in a mixed stack)
 
     def __post_init__(self):
         if self.family not in FAMILIES:
@@ -59,10 +68,42 @@ class WorkItem:
             object.__setattr__(self, "X", self.H)
         if min(self.B, self.H, self.L) < 1 or self.T < 0:
             raise ValueError(f"degenerate item {self}")
+        if self.families is None:
+            object.__setattr__(self, "families", (self.family,) * self.L)
+        else:
+            fams = tuple(self.families)
+            object.__setattr__(self, "families", fams)
+            if len(fams) != self.L:
+                raise ValueError(
+                    f"item {self.uid}: families has {len(fams)} entries for "
+                    f"L={self.L} layers")
+            bad = [f for f in fams if f not in FAMILIES]
+            if bad:
+                raise ValueError(
+                    f"item {self.uid}: unknown families {bad}; {FAMILIES}")
+            if fams[0] != self.family:
+                raise ValueError(
+                    f"item {self.uid}: family={self.family!r} must equal "
+                    f"families[0]={fams[0]!r}")
+            if len(set(fams)) > 1:
+                if not set(fams) <= {"lstm", "gru"}:
+                    raise ValueError(
+                        f"item {self.uid}: mixed-family stacks support "
+                        f"lstm/gru layers only, got {sorted(set(fams))}")
+                if self.bidirectional:
+                    raise ValueError(
+                        f"item {self.uid}: mixed-family stacks cannot be "
+                        "bidirectional")
 
     @property
     def gates(self) -> int:
-        return GATES[self.family]
+        """Widest gate axis across the item's layers — what tiling / VMEM
+        sizing must budget for (exact for homogeneous items)."""
+        return max(GATES[f] for f in self.families)
+
+    @property
+    def heterogeneous(self) -> bool:
+        return len(set(self.families)) > 1
 
     def order_key(self):
         """Admission / intra-slot ordering: priority, then deadline, then

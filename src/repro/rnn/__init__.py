@@ -1,0 +1,22 @@
+"""repro.rnn — the unified recurrent-stack front-end.
+
+One planned execution path from ``compile()`` to serving: every call
+lowers to ``repro.dispatch`` WorkItems and executes through the tile
+dispatcher (SHARP §5–6 — one dispatch mechanism that reconfigures to any
+model shape, instead of per-shape code paths).  See README.md in this
+directory for the API tour and the migration table from the deprecated
+``core.schedules.run_layer/run_stack`` surface.
+
+    from repro import rnn
+
+    cs = rnn.compile(stack_params, rnn.ExecutionPolicy(schedule="auto"))
+    ys = cs.forward(xs)                  # (B, T, H)
+    ys, state = cs.prefill(xs)           # + exact t=T (h[, c])
+    y_t, state = cs.decode(x_t, state)   # one chained launch per tick
+    print(cs.plan.describe(), cs.stats)
+"""
+from repro.rnn.compiled import CompiledStack, StackStats, compile  # noqa: F401
+from repro.rnn.policy import DTYPES, SCHEDULES, ExecutionPolicy  # noqa: F401
+
+__all__ = ["compile", "CompiledStack", "StackStats", "ExecutionPolicy",
+           "SCHEDULES", "DTYPES"]

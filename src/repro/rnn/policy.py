@@ -1,0 +1,82 @@
+"""ExecutionPolicy: the validated, frozen replacement for the stringly-typed
+``schedule="unfolded"`` / ``**kw`` surface of the pre-facade dispatch
+wrappers.
+
+A policy is *how* to run, never *what* to run — it carries no shapes and no
+parameters, so one policy object serves every stack and every call, and a
+``CompiledStack`` can hash plan-cache keys without inspecting it twice.
+Every field is validated at construction with an error that names the
+offending field and the allowed values (the old surface let an unknown
+schedule string travel all the way into ``core.gru.run_layer``'s function
+table and die as a bare KeyError).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.dispatch.planner import DEFAULT_MACS
+
+#: "auto" lets the planner score wavefront/fused/per_step per shape;
+#: the rest force one execution shape (the research schedules
+#: sequential/batch/intergate/unfolded run the pure reference
+#: implementations through the planner's external path).
+SCHEDULES = ("auto", "wavefront", "fused", "per_step",
+             "sequential", "batch", "intergate", "unfolded")
+
+DTYPES = ("float32", "bfloat16", "float16")
+
+
+def _bad(field: str, value, allowed) -> ValueError:
+    return ValueError(
+        f"ExecutionPolicy.{field}={value!r} is invalid; allowed: "
+        f"{', '.join(str(a) for a in allowed)}")
+
+
+@dataclass(frozen=True)
+class ExecutionPolicy:
+    """How a CompiledStack executes.
+
+    schedule:  "auto" (planner-scored) or a forced schedule — one of
+               ``SCHEDULES``.
+    block_t:   wavefront T-stripe override, honored under "auto" too (the
+               scorer then only weighs the pinned stripe against
+               per_step); 0 = autotuned (VMEM-budgeted).
+    interpret: force Pallas interpret mode (None = auto: interpret
+               everywhere but real TPUs).
+    dtype:     cast inputs before execution; None = keep the caller's.
+    packing:   cross-B packing + stripe alignment on/off (off = every cell
+               its own launch row; the benchmark baseline).
+    macs:      planner tile-engine budget (the paper's K-width exploration
+               space; DEFAULT_MACS = 16K, the paper's reference design).
+    """
+
+    schedule: str = "auto"
+    block_t: int = 0
+    interpret: Optional[bool] = None
+    dtype: Optional[str] = None
+    packing: bool = True
+    macs: int = DEFAULT_MACS
+
+    def __post_init__(self):
+        if self.schedule not in SCHEDULES:
+            raise _bad("schedule", self.schedule, SCHEDULES)
+        if (not isinstance(self.block_t, int) or isinstance(self.block_t, bool)
+                or self.block_t < 0):
+            raise _bad("block_t", self.block_t,
+                       ("a non-negative int (0 = autotuned)",))
+        if not (self.interpret is None or isinstance(self.interpret, bool)):
+            raise _bad("interpret", self.interpret, (None, True, False))
+        if self.dtype is not None and self.dtype not in DTYPES:
+            raise _bad("dtype", self.dtype, (None,) + DTYPES)
+        if not isinstance(self.packing, bool):
+            raise _bad("packing", self.packing, (True, False))
+        if (not isinstance(self.macs, int) or isinstance(self.macs, bool)
+                or self.macs < 1):
+            raise _bad("macs", self.macs, ("a positive int (MAC budget)",))
+
+    def describe(self) -> str:
+        return (f"ExecutionPolicy(schedule={self.schedule}, "
+                f"block_t={self.block_t or 'auto'}, "
+                f"interpret={self.interpret}, dtype={self.dtype or 'keep'}, "
+                f"packing={self.packing}, macs={self.macs})")

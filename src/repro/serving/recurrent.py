@@ -1,41 +1,42 @@
-"""Recurrent-stack serving: dispatcher-backed continuous batching for the
-paper's own LSTM family.
+"""Recurrent-stack serving: session management over the unified front-end.
 
 The transformer engine (serving.engine) admits requests one prefill at a
 time; recurrent stacks can do strictly better, because *prefill itself is a
 recurrence* — an (L layers x T steps) dependency grid.  This engine admits
-every free slot's request in one wave, describes each prompt as a
-``dispatch.WorkItem``, and runs ONE packed ``DispatchPlan``: the requests'
-(layer, time-chunk) cells share wavefront slots, so G-batched sequence-
-kernel launches hide the per-request serial dependencies behind each other
-(ROADMAP item "Wavefront in serving").  The executor leaves behind each
-request's exact t=T per-layer (h, c), which splices into the engine's
-batched decode state exactly like the transformer engine splices KV-cache
-rows.
+every free slot's request in one wave and hands the batch to ONE
+``repro.rnn.CompiledStack.prefill`` call: the requests' (layer, time-chunk)
+cells share wavefront slots, so G-batched sequence-kernel launches hide the
+per-request serial dependencies behind each other (ROADMAP item "Wavefront
+in serving").  The compiled stack leaves behind each request's exact t=T
+per-layer (h, c), which splices into the engine's batched decode state
+exactly like the transformer engine splices KV-cache rows.
 
-Decode is planned, not hand-rolled: one tick = one ``plan_decode``
-DispatchPlan over the *active* slots only — their T=1 layer chains
-B-concatenate (cross-B packing; every request binds the same stack) into a
-single chained slot, ONE kernel launch per tick instead of L, with each new
-top-layer output frame fed back as the next step's input (requires X == H,
-which the paper's stacks satisfy).  Ticks in steady state (unchanged
-active-slot signature) reuse a cached plan instead of replanning — the Zhao
-et al. steady-state serving story (PAPERS.md).  Requests are *frame*
-streams, not token streams — the serving analogue of an RNN
-acoustic/regression service (cf. the MASR-style per-shape serving story,
-PAPERS.md).
+Decode is planned, not hand-rolled: one tick = one ``CompiledStack.decode``
+call over the *active* slots only — their T=1 layer chains B-concatenate
+into a single chained slot, ONE kernel launch per tick instead of L, with
+each new top-layer output frame fed back as the next step's input (requires
+X == H, which the paper's stacks satisfy).  Ticks in steady state reuse the
+compiled stack's cached plan instead of replanning — the Zhao et al.
+steady-state serving story (PAPERS.md).  Requests are *frame* streams, not
+token streams — the serving analogue of an RNN acoustic/regression service
+(cf. the MASR-style per-shape serving story, PAPERS.md).
+
+Post-ISSUE-4 the engine is ONLY the session layer — admission, slot pool,
+state splicing, retirement.  It holds no planner/executor calls of its own:
+serving, batch, and single-call users all exercise the identical
+plan→pack→execute pipeline and plan caching through ``CompiledStack``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import List, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.dispatch import DispatchPlan, WorkItem, execute, plan, plan_decode
+from repro.dispatch.planner import DispatchPlan
+from repro.rnn import CompiledStack, ExecutionPolicy, compile as rnn_compile
 
 
 @dataclasses.dataclass
@@ -66,12 +67,16 @@ class RecurrentServingEngine:
         assert rnn_family in ("lstm", "gru"), rnn_family
         self.cfg = cfg
         self.family = rnn_family
-        self.params = stack_params
         self.max_batch = max_batch
-        self.macs = macs
-        self.interpret = interpret
         L, H = cfg.n_layers, cfg.lstm_hidden
         self.L, self.H = L, H
+
+        # the planned execution path: every prefill wave and decode tick
+        # goes through this one CompiledStack (shared plan cache included)
+        self.compiled: CompiledStack = rnn_compile(
+            stack_params, ExecutionPolicy(interpret=interpret, macs=macs))
+        assert self.compiled.families == (rnn_family,) * L, \
+            (self.compiled.families, rnn_family)
 
         # batched recurrent state: one column per slot (the recurrent
         # analogue of the transformer engine's batch cache)
@@ -86,23 +91,21 @@ class RecurrentServingEngine:
         self.generated: List[List[np.ndarray]] = [[] for _ in range(max_batch)]
         self.done: List[RecurrentCompletion] = []
         self.steps = 0
-        self._admit_seq = 0  # WorkItem ids: engine-internal, so duplicate
-        #                      request uids never collide inside a plan
-        # dispatch accounting (inspected by tests/benchmarks)
+        # dispatch accounting (inspected by tests/benchmarks); plan-cache
+        # counters live on compiled.stats — see the properties below
         self.prefill_waves = 0
         self.packed_launches = 0
         self.naive_launches = 0
-        self.last_plan = None
-        # decode accounting: per-tick plans are cached per active-slot
-        # signature (the active count — plans are shape-only), so a
-        # steady-state tick reuses its plan (plans_built stays flat while
-        # ticks grow)
+        self.last_plan: Optional[DispatchPlan] = None
         self.decode_ticks = 0
         self.decode_launches = 0
-        self.decode_plans_built = 0
         self.last_decode_plan: Optional[DispatchPlan] = None
-        self._decode_plans: Dict[int, DispatchPlan] = {}
-        self._decode_prepared: Optional[dict] = None  # stacked (Ws, bs, Us)
+
+    @property
+    def decode_plans_built(self) -> int:
+        """Decode plans constructed (cache misses in the compiled stack):
+        stays flat across steady-state ticks while decode_ticks grows."""
+        return self.compiled.stats.decode_plans_built
 
     # ------------------------------------------------------------------
     def submit(self, req: RecurrentRequest):
@@ -119,8 +122,9 @@ class RecurrentServingEngine:
 
     # ------------------------------------------------------------------
     def _admit(self):
-        """One admission wave -> one packed DispatchPlan for ALL newly
-        admitted prompts (replacing one-slot-at-a-time prefill)."""
+        """One admission wave -> one packed CompiledStack.prefill over ALL
+        newly admitted prompts (the requests' cells share one
+        DispatchPlan's wavefront slots and cross-B rows)."""
         pairs = []
         for slot in range(self.max_batch):
             if self.slots[slot] is None and self.queue:
@@ -128,28 +132,17 @@ class RecurrentServingEngine:
         if not pairs:  # queue drained mid-tick: nothing to dispatch
             return
 
-        wids = {}
-        for slot, req in pairs:
-            wids[slot] = self._admit_seq
-            self._admit_seq += 1
-        items = [WorkItem.from_config(
-            self.cfg, T=len(req.frames), B=1, uid=wids[slot],
-            priority=req.priority, rnn_family=self.family,
-            share=0) for slot, req in pairs]  # share: one stack serves all
-        #   requests, so the planner may cross-B pack their cells
-        p = plan(items, macs=self.macs)
-        params = {wids[slot]: self.params for slot, _ in pairs}
-        inputs = {wids[slot]: jnp.asarray(req.frames, jnp.float32)[None]
-                  for slot, req in pairs}
-        outs, states = execute(p, params, inputs, interpret=self.interpret,
-                               collect_state=True)
+        seqs = [jnp.asarray(req.frames, jnp.float32)[None]
+                for _, req in pairs]
+        results = self.compiled.prefill(
+            seqs, priorities=[req.priority for _, req in pairs])
+        p = self.compiled.plan
         self.prefill_waves += 1
         self.packed_launches += p.launches
         self.naive_launches += p.naive_launches
         self.last_plan = p
 
-        for slot, req in pairs:
-            st = states[wids[slot]]
+        for (slot, req), (out_b, st) in zip(pairs, results):
             if st is None or "h" not in st:
                 # the executor returns None for items with no single t=T
                 # state (rglru / bidirectional) — nothing to splice, and
@@ -162,7 +155,7 @@ class RecurrentServingEngine:
             self.h = self.h.at[:, slot].set(st["h"][:, 0].astype(jnp.float32))
             if self.c is not None:
                 self.c = self.c.at[:, slot].set(st["c"][:, 0])
-            out = np.asarray(outs[wids[slot]][0])       # (T, H)
+            out = np.asarray(out_b[0])                  # (T, H)
             self.prefill_out[slot] = out
             self.last_y = self.last_y.at[slot, 0].set(
                 jnp.asarray(out[-1], jnp.float32))
@@ -171,68 +164,38 @@ class RecurrentServingEngine:
         self._retire()  # zero-new-frame requests complete right here
 
     # ------------------------------------------------------------------
-    def _decode_plan(self, active: List[int]) -> DispatchPlan:
-        """The tick's DispatchPlan, cached by active-slot signature: a
-        steady-state tick reuses its plan.  Plans are shape-only (uids are
-        positions in the active list, inputs/state bound at execute), so
-        the signature is just the active count — WHICH slots are active
-        changes the gather, not the plan."""
-        key = len(active)
-        p = self._decode_plans.get(key)
-        if p is None:
-            items = [WorkItem(uid=i, family=self.family, B=1, T=1, H=self.H,
-                              L=self.L, X=self.H, share=0)
-                     for i in range(len(active))]
-            p = plan_decode(items, macs=self.macs)
-            self._decode_plans[key] = p
-            self.decode_plans_built += 1
-        return p
-
     def _decode_tick(self):
         """One planned decode step across the *active* slots only: their
         T=1 layer chains B-concatenate into a single chained slot — ONE
         kernel launch per tick instead of L — with each request's last
-        top-layer frame fed back as its next input (the layer-0 input GEMM
-        is hoisted inside the slot; deeper layers' run in-kernel)."""
+        top-layer frame fed back as its next input.  Plans are cached per
+        active-slot signature inside the CompiledStack (plans are
+        shape-only: WHICH slots are active changes the gather, not the
+        plan)."""
         active = [s for s in range(self.max_batch)
                   if self.slots[s] is not None]
-        p = self._decode_plan(active)
+        idx = jnp.asarray(active)
+        state = {"h": self.h[:, idx]}
+        if self.c is not None:
+            state["c"] = self.c[:, idx]
+        y, st = self.compiled.decode(self.last_y[idx], state)
+        p = self.compiled.last_decode_plan
         # the dispatch claim, asserted every tick: k active slots plan
         # exactly k-row cells — empty slots are never computed
         assert all(s.B == len(active) and all(b == len(active)
                                               for b in s.group_b)
                    for s in p.slots), p.describe()
-
-        if self._decode_prepared is None:
-            from repro.dispatch.executor import prepare_decode_stack
-
-            self._decode_prepared = prepare_decode_stack(self.params,
-                                                         self.family)
-        inputs = {i: self.last_y[slot][None]            # (1, 1, H)
-                  for i, slot in enumerate(active)}
-        init_state = {}
-        for i, slot in enumerate(active):
-            st = {"h": self.h[:, slot:slot + 1]}
-            if self.c is not None:
-                st["c"] = self.c[:, slot:slot + 1]
-            init_state[i] = st
-        outs, states = execute(
-            p, {i: self.params for i in inputs}, inputs,
-            interpret=self.interpret, collect_state=True,
-            init_state=init_state,
-            prepared={i: self._decode_prepared for i in inputs})
         self.decode_ticks += 1
         self.decode_launches += p.launches
         self.last_decode_plan = p
 
+        self.h = self.h.at[:, idx].set(st["h"].astype(jnp.float32))
+        if self.c is not None:
+            self.c = self.c.at[:, idx].set(st["c"])
+        frames = y[:, 0].astype(jnp.float32)            # (k, H)
+        self.last_y = self.last_y.at[idx, 0].set(frames)
         for i, slot in enumerate(active):
-            self.h = self.h.at[:, slot].set(
-                states[i]["h"][:, 0].astype(jnp.float32))
-            if self.c is not None:
-                self.c = self.c.at[:, slot].set(states[i]["c"][:, 0])
-            y = jnp.asarray(outs[i][0, 0], jnp.float32)  # top-layer frame
-            self.last_y = self.last_y.at[slot, 0].set(y)
-            self.generated[slot].append(np.asarray(y))
+            self.generated[slot].append(np.asarray(frames[i]))
 
     def _retire(self):
         for slot, req in enumerate(self.slots):

@@ -8,6 +8,10 @@ from tests._hyp import given, settings, st
 from repro.core import gru
 from repro.core.perfmodel import Design
 
+# intentionally exercises the DEPRECATED gru.run_layer shim (kept passing
+# through repro.rnn.compile); tests/rnn/test_shims.py asserts the warning
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
 
 def _mk(B, T, H, seed=0):
     params = gru.init_gru_layer(jax.random.PRNGKey(seed), H, H, jnp.float32)

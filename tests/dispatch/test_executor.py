@@ -31,7 +31,7 @@ def test_packed_matches_oracle_and_single_item_execution():
     p = plan(items)
     outs = execute(p, params, inputs, interpret=True)
     for i, (cfg, t) in enumerate(MIX):
-        oracle = sch.run_stack(params[i], inputs[i], "unfolded")
+        oracle = sch.reference_stack(params[i], inputs[i])
         np.testing.assert_allclose(np.asarray(outs[i]), np.asarray(oracle),
                                    atol=1e-4)
         solo = execute(plan([items[i]]), {i: params[i]}, {i: inputs[i]},
@@ -47,9 +47,15 @@ def test_packed_launches_below_per_request_wavefront():
     p = plan(items)
     n_packed = pallas_launch_count(
         lambda pr, xs: execute(p, pr, xs, interpret=True), params, inputs)
-    n_per_req = sum(pallas_launch_count(
-        lambda pr, xs: sch.run_stack(pr, xs, "wavefront", interpret=True),
-        params[i], inputs[i]) for i in inputs)
+    # per-request baseline: each item planned and executed alone (forced
+    # onto the wavefront stripe the retired run_stack_wavefront used)
+    n_per_req = 0
+    for i in inputs:
+        solo = plan([items[i]], schedule="wavefront",
+                    block_t=min(items[i].T, 16))
+        n_per_req += pallas_launch_count(
+            lambda pr, xs, sp=solo: execute(sp, pr, xs, interpret=True),
+            {i: params[i]}, {i: inputs[i]})
     assert n_packed == p.launches
     assert n_packed < n_per_req
 
@@ -83,7 +89,7 @@ def test_ragged_lengths_stay_exact(Ts):
     items, params, inputs = _setup([(c, t) for (c, _), t in zip(MIX, Ts)])
     outs = execute(plan(items), params, inputs, interpret=True)
     for i in inputs:
-        oracle = sch.run_stack(params[i], inputs[i], "unfolded")
+        oracle = sch.reference_stack(params[i], inputs[i])
         assert outs[i].shape == oracle.shape
         np.testing.assert_allclose(np.asarray(outs[i]), np.asarray(oracle),
                                    atol=1e-4)
@@ -103,7 +109,7 @@ def test_gru_items_execute_and_pack():
     for i in inputs:
         y = inputs[i]
         for layer in params[i]["layers"]:
-            y = gru.run_layer(layer, y, "unfolded")
+            y = gru.run_layer_unfolded(layer, y)
         np.testing.assert_allclose(np.asarray(outs[i]), np.asarray(y),
                                    atol=1e-4)
 
@@ -126,7 +132,7 @@ def test_external_fallbacks_still_collect_state():
                 slots=(), external=(0,))
     outs, states = execute(p, params, inputs, interpret=True,
                            collect_state=True)
-    oracle = sch.run_stack(params[0], inputs[0], "unfolded")
+    oracle = sch.reference_stack(params[0], inputs[0])
     np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(oracle),
                                atol=1e-4)
     assert states[0]["h"].shape == (2, 1, 48)
@@ -232,6 +238,29 @@ def test_rglru_single_layer_executes():
     ref, _ = rglru_scan_ref(la, gx, jnp.zeros((2, 64)))
     np.testing.assert_allclose(np.asarray(out[0]), np.asarray(ref),
                                atol=1e-5)
+
+
+def test_init_state_for_external_item_is_rejected_not_dropped():
+    """Review fix: external-fallback schedules start from zero state, so an
+    init_state for an external item must be a loud error — silently
+    dropping it would return zero-state results for a caller expecting a
+    resume (the repro.rnn mixed-decode hazard)."""
+    from dataclasses import replace
+
+    it = WorkItem(uid=0, family="lstm", B=1, T=3, H=32, L=2)
+    cfg = lstm_config(32, layers=2)
+    params = {0: init_lstm_stack(jax.random.PRNGKey(0), cfg, jnp.float32)}
+    inputs = {0: jax.random.normal(jax.random.PRNGKey(1), (1, 3, 32)) * 0.5}
+    p = plan([it])
+    forced = replace(p, items=tuple(replace(ip, schedule="per_step")
+                                    for ip in p.items),
+                     slots=(), external=(0,))
+    init = {0: {"h": jnp.zeros((2, 1, 32)), "c": jnp.zeros((2, 1, 32))}}
+    with pytest.raises(ValueError, match="external-fallback"):
+        execute(forced, params, inputs, interpret=True, init_state=init)
+    # the packed plan accepts the same init_state
+    outs = execute(p, params, inputs, interpret=True, init_state=init)
+    assert outs[0].shape == (1, 3, 32)
 
 
 def test_mixed_families_in_one_plan():

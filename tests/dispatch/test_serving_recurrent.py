@@ -43,7 +43,7 @@ def test_packed_prefill_matches_per_request_and_oracle():
         np.testing.assert_allclose(done[uid].outputs, c1.outputs, atol=1e-5)
         np.testing.assert_allclose(done[uid].generated, c1.generated,
                                    atol=1e-5)
-        oracle = sch.run_stack(params, jnp.asarray(p)[None], "unfolded")
+        oracle = sch.reference_stack(params, jnp.asarray(p)[None])
         np.testing.assert_allclose(done[uid].outputs,
                                    np.asarray(oracle[0]), atol=1e-4)
     # the dispatch claim in serving: packed admission launches strictly
@@ -101,7 +101,7 @@ def test_wide_input_prefill_only_requests_serve():
     done = {c.uid: c for c in eng.run_to_completion()}
     assert sorted(done) == [0, 1]
     for uid, frames in prompts.items():
-        oracle = sch.run_stack(params, jnp.asarray(frames)[None], "unfolded")
+        oracle = sch.reference_stack(params, jnp.asarray(frames)[None])
         np.testing.assert_allclose(done[uid].outputs,
                                    np.asarray(oracle[0]), atol=1e-4)
 
@@ -139,7 +139,7 @@ def test_per_step_launch_accounting_is_honest():
         params, inputs)
     assert n == forced.launches == 10
     outs = execute(forced, params, inputs, interpret=True)
-    oracle = sch.run_stack(params[0], inputs[0], "unfolded")
+    oracle = sch.reference_stack(params[0], inputs[0])
     np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(oracle),
                                atol=1e-4)
 
@@ -180,22 +180,40 @@ def test_decode_plan_cache_reuses_steady_state_plans():
 
 
 def test_admit_raises_clearly_when_state_unspliceable(monkeypatch):
-    """If the executor hands back no spliceable state (None — the rglru /
-    bidirectional contract), admission must fail with a clear error, not a
-    bare KeyError deep in the splice."""
-    import repro.serving.recurrent as rec
-
+    """If the compiled stack hands back no spliceable state (None — the
+    rglru / bidirectional executor contract), admission must fail with a
+    clear error, not a bare KeyError deep in the splice."""
     _, eng = _engine(max_batch=1)
 
-    def no_state_execute(p, params, inputs, **kw):
-        outs = {uid: jnp.zeros((1, xs.shape[1], 48), jnp.float32)
-                for uid, xs in inputs.items()}
-        return outs, {uid: None for uid in inputs}
+    def no_state_prefill(seqs, priorities=None):
+        eng.compiled._last_plan = eng.compiled.lower(1, 4)
+        return [(jnp.zeros((1, xs.shape[1], 48), jnp.float32), None)
+                for xs in seqs]
 
-    monkeypatch.setattr(rec, "execute", no_state_execute)
+    monkeypatch.setattr(eng.compiled, "prefill", no_state_prefill)
     eng.submit(RecurrentRequest(uid=0, frames=_prompts((4,))[0]))
     with pytest.raises(RuntimeError, match="no spliceable"):
         eng.step()
+
+
+def test_engine_has_no_direct_dispatch_calls():
+    """ISSUE-4 acceptance: the engine is pure session management — every
+    plan/execute goes through CompiledStack (one planned execution path
+    shared with batch and single-call users)."""
+    import ast
+    import inspect
+
+    import repro.serving.recurrent as rec
+
+    src = inspect.getsource(rec)
+    for name in ("plan", "plan_decode", "execute", "prepare_decode_stack"):
+        assert f"{name}(" not in src.replace(f"compiled.{name}", ""), name
+    tree = ast.parse(src)
+    imported = {a.name for node in ast.walk(tree)
+                if isinstance(node, ast.ImportFrom)
+                and node.module and "dispatch" in node.module
+                for a in node.names}
+    assert imported <= {"DispatchPlan"}, imported  # type-only import
 
 
 def test_gru_family_serves_end_to_end():
@@ -216,7 +234,7 @@ def test_gru_family_serves_end_to_end():
     for uid, p in enumerate(prompts):
         y = jnp.asarray(p)[None]
         for layer in params["layers"]:
-            y = gru.run_layer(layer, y, "unfolded")
+            y = gru.run_layer_unfolded(layer, y)
         np.testing.assert_allclose(done[uid].outputs, np.asarray(y[0]),
                                    atol=1e-4)
         assert done[uid].generated.shape == (2, 48)

@@ -74,11 +74,11 @@ def test_stacked_cells_one_launch():
 def test_fused_layer_matches_reference_unroll_one_launch():
     params = gru.init_gru_layer(jax.random.PRNGKey(0), 48, 48, jnp.float32)
     xs = jax.random.normal(jax.random.PRNGKey(1), (2, 11, 48)) * 0.5
-    out = gru.run_layer(params, xs, "fused", interpret=True)
+    out = gru.run_layer_fused(params, xs, interpret=True)
     ref = gru.reference_unroll(params, xs)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
     n = pallas_launch_count(
-        lambda p, x: gru.run_layer(p, x, "fused", interpret=True), params, xs)
+        lambda p, x: gru.run_layer_fused(p, x, interpret=True), params, xs)
     assert n == 1
 
 

@@ -87,10 +87,10 @@ def test_one_launch_vs_T_launches(T):
     xs = jax.random.normal(jax.random.PRNGKey(1), (B, T, H)) * 0.5
 
     fused = pallas_launch_count(
-        lambda p, x: sch.run_layer(p, x, "fused", interpret=True), params, xs)
+        lambda p, x: sch.run_layer_fused(p, x, interpret=True), params, xs)
     per_step = pallas_launch_count(
-        lambda p, x: sch.run_layer(p, x, "unfolded",
-                                   cell_kernel=as_cell_kernel(interpret=True)),
+        lambda p, x: sch.run_layer_unfolded(
+            p, x, cell_kernel=as_cell_kernel(interpret=True)),
         params, xs)
     assert fused == 1
     assert per_step == T

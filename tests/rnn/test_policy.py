@@ -1,0 +1,60 @@
+"""ExecutionPolicy validation: every bad field fails at construction with
+an error naming the field and the allowed values (ISSUE-4 satellite — the
+old surface let an unknown schedule string die as a bare KeyError deep in
+core.gru.run_layer)."""
+import dataclasses
+
+import pytest
+
+from repro.rnn import DTYPES, SCHEDULES, ExecutionPolicy
+
+
+def test_defaults_are_valid():
+    pol = ExecutionPolicy()
+    assert pol.schedule == "auto" and pol.packing and pol.block_t == 0
+    assert "auto" in pol.describe()
+
+
+def test_unknown_schedule_names_field_and_values():
+    with pytest.raises(ValueError) as e:
+        ExecutionPolicy(schedule="bogus")
+    msg = str(e.value)
+    assert "ExecutionPolicy.schedule" in msg and "'bogus'" in msg
+    for s in SCHEDULES:
+        assert s in msg  # the full allowed list is spelled out
+
+
+@pytest.mark.parametrize("field,value", [
+    ("block_t", -1), ("block_t", "4"), ("block_t", True),
+    ("interpret", "yes"), ("interpret", 1),
+    ("dtype", "float64"), ("dtype", 32),
+    ("packing", "on"),
+    ("macs", 0), ("macs", -5), ("macs", 2.5), ("macs", False),
+])
+def test_bad_fields_name_themselves(field, value):
+    with pytest.raises(ValueError, match=f"ExecutionPolicy.{field}"):
+        ExecutionPolicy(**{field: value})
+
+
+def test_valid_corners_accepted():
+    for s in SCHEDULES:
+        ExecutionPolicy(schedule=s)
+    for d in DTYPES:
+        ExecutionPolicy(dtype=d)
+    ExecutionPolicy(block_t=16, interpret=False, packing=False, macs=1024)
+
+
+def test_policy_is_frozen_and_hashable():
+    pol = ExecutionPolicy()
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        pol.schedule = "fused"
+    assert hash(pol) == hash(ExecutionPolicy())
+
+
+def test_compile_rejects_schedule_strings():
+    """The old positional schedule-string habit gets a pointed TypeError,
+    not a confusing attribute crash later."""
+    from repro import rnn
+
+    with pytest.raises(TypeError, match="ExecutionPolicy"):
+        rnn.compile({"layers": [None]}, "unfolded")

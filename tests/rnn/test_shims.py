@@ -1,0 +1,145 @@
+"""The deprecated surfaces stay working, warn, and fail clearly; the
+internal code paths never touch them (what CI's ``make deprecations`` run
+— ``-W error::DeprecationWarning:repro\\.`` — enforces fleet-wide)."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import rnn
+from repro.configs.sharp_lstm import lstm_config, reduced
+from repro.core import gru
+from repro.core import schedules as sch
+from repro.models.layers.lstm import init_lstm_layer, init_lstm_stack
+
+
+def _stack():
+    return init_lstm_stack(jax.random.PRNGKey(0), reduced(), jnp.float32)
+
+
+def _xs(T=9):
+    return jax.random.normal(jax.random.PRNGKey(1), (2, T, 48)) * 0.5
+
+
+def test_run_stack_warns_and_matches_facade():
+    stack, xs = _stack(), _xs()
+    with pytest.warns(DeprecationWarning, match="repro.rnn.compile"):
+        out = sch.run_stack(stack, xs, "unfolded")
+    ref = rnn.compile(stack, rnn.ExecutionPolicy(
+        schedule="unfolded")).forward(xs)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_run_layer_warns_and_matches_reference():
+    params = init_lstm_layer(jax.random.PRNGKey(0), 48, 48, jnp.float32)
+    xs = _xs()
+    with pytest.warns(DeprecationWarning):
+        out = sch.run_layer(params, xs, "intergate")
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(sch.run_layer_intergate(params, xs)),
+        atol=1e-6)
+
+
+def test_gru_run_layer_warns_and_unknown_schedule_is_valueerror():
+    """Regression (ISSUE-4 satellite): an unknown schedule used to escape
+    as a bare KeyError from gru's function table; now it is a ValueError
+    naming the field and the allowed values."""
+    params = gru.init_gru_layer(jax.random.PRNGKey(0), 48, 48, jnp.float32)
+    xs = _xs()
+    with pytest.warns(DeprecationWarning):
+        out = gru.run_layer(params, xs, "unfolded")
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(gru.run_layer_unfolded(params, xs)),
+        atol=1e-6)
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError) as e:
+            gru.run_layer(params, xs, "bogus")
+    assert "ExecutionPolicy.schedule" in str(e.value)
+    assert "KeyError" not in repr(e)
+    # 'batch' exists for lstm but not gru: the error says so
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError, match="no gru reference"):
+            gru.run_layer(params, xs, "batch")
+
+
+def test_run_stack_unknown_schedule_lists_wavefront():
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError) as e:
+            sch.run_stack(_stack(), _xs(), "wavefrunt")
+    assert "wavefront" in str(e.value)
+
+
+def test_wavefront_shim_routes_through_dispatcher():
+    """run_stack('wavefront') is the dispatcher's packed timeline now (the
+    LSTM-only run_stack_wavefront is retired) with the launch geometry
+    preserved: L + ceil(T/bt) - 1 slot launches."""
+    from repro.kernels.common import pallas_launch_count
+
+    assert not hasattr(sch, "run_stack_wavefront")
+    stack, xs = _stack(), _xs(T=12)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        n = pallas_launch_count(
+            lambda s, x: sch.run_stack(s, x, "wavefront", block_t=4,
+                                       interpret=True), stack, xs)
+        out = sch.run_stack(stack, xs, "wavefront", block_t=4,
+                            interpret=True)
+    assert n == sch.wavefront_slots(2, 12, 4) == 4
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(sch.reference_stack(stack, xs)),
+                               atol=1e-4)
+
+
+def test_impl_only_kwargs_pin_to_reference_implementation():
+    """cell_kernel/tile_cols/... are implementation escape hatches the
+    policy surface does not carry; the shim runs them directly."""
+    params = init_lstm_layer(jax.random.PRNGKey(0), 48, 48, jnp.float32)
+    xs = _xs()
+    with pytest.warns(DeprecationWarning):
+        out = sch.run_layer(params, xs, "batch", tile_cols=16)
+    np.testing.assert_allclose(
+        np.asarray(out),
+        np.asarray(sch.run_layer_batch(params, xs, tile_cols=16)), atol=1e-6)
+
+
+def test_impl_only_kwargs_dispatch_per_family():
+    """Review fix: the escape-hatch path walks each layer through its OWN
+    family's implementation table — a GRU stack pinned to an LSTM-only
+    schedule must fail with a clear per-family error (it used to be fed to
+    the LSTM fns and die in a U.reshape(H, 4, H)), and an unsupported
+    schedule gets a non-contradictory message (the old one listed
+    'wavefront' as both unknown and allowed)."""
+    gstack = gru.init_gru_stack(jax.random.PRNGKey(0), 48, 48, 2,
+                                jnp.float32)
+    xs = _xs()
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError, match="no per-layer gru"):
+            sch.run_stack(gstack, xs, "batch", tile_cols=16)
+    # "wavefront" has no per-layer implementation anywhere: the error says
+    # why and does not list wavefront among the options
+    lstack = _stack()
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError, match="no per-layer") as e:
+            sch.run_stack(lstack, xs, "wavefront", tile_cols=16)
+    assert "wavefront" not in str(e.value).split("options")[1]
+
+
+def test_internal_paths_emit_no_deprecation_warnings():
+    """The acceptance claim behind CI's deprecations gate: facade forward/
+    prefill/decode and the serving engine never touch the deprecated
+    surface."""
+    from repro.serving import RecurrentRequest, RecurrentServingEngine
+
+    stack = _stack()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        cs = rnn.compile(stack, rnn.ExecutionPolicy(interpret=True))
+        ys, st = cs.prefill(_xs(T=6))
+        cs.decode(ys[:, -1], st)
+        eng = RecurrentServingEngine(reduced(), stack, max_batch=2,
+                                     interpret=True)
+        eng.submit(RecurrentRequest(
+            uid=0, frames=np.asarray(_xs(T=5)[0]), max_new_frames=2))
+        eng.run_to_completion()

@@ -102,7 +102,7 @@ def test_unfolded_tp_lstm_matches():
     _run("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import NamedSharding
-        from repro.core.schedules import run_layer
+        from repro.core.schedules import run_layer_unfolded
         from repro.core.unfolded import lstm_param_specs, run_layer_unfolded_tp
         from repro.launch.mesh import make_mesh
         from repro.models.layers.lstm import init_lstm_layer
@@ -111,7 +111,7 @@ def test_unfolded_tp_lstm_matches():
         H, B, T = 64, 2, 6
         params = init_lstm_layer(key, H, H, jnp.float32)
         xs = jax.random.normal(key, (B, T, H)) * 0.5
-        ref = run_layer(params, xs, 'unfolded')
+        ref = run_layer_unfolded(params, xs)
 
         mesh = make_mesh((8,), ('model',))
         specs = lstm_param_specs()
