@@ -16,10 +16,17 @@ mixed-B prefill mix packed (pad + in-kernel mask) vs the per-B-signature
 plan of the same items.  The facade sub-suite (ISSUE-4) proves
 ``repro.rnn.compile().forward()`` adds ZERO launches over direct
 dispatch.plan/execute on the same WorkItem — the front-end is the same
-pipeline, not a wrapper with overhead.
+pipeline, not a wrapper with overhead.  The bidir sub-suite (ISSUE-5)
+records a bidirectional admission wave through the interleaved fwd/bwd
+wavefront vs the retired per-layer fused fallback (per request, per layer,
+per direction — no packing), bit-equal gated.
+
+Rows report the MEDIAN of ``--repeats`` timed calls (after one warm-up);
+raise ``--repeats`` for stabler medians.
 """
 from __future__ import annotations
 
+import statistics
 import time
 from typing import Callable
 
@@ -46,14 +53,14 @@ MIX = [  # (config, T): different H / L / T — the adaptability scenario
 def _time(fn: Callable, *args, repeat: int = 3) -> float:
     fn(*args)
     ts = []
-    for _ in range(repeat):
+    for _ in range(max(1, repeat)):
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
         ts.append(time.perf_counter() - t0)
-    return min(ts) * 1e6
+    return statistics.median(ts) * 1e6
 
 
-def dispatch(emit) -> None:
+def dispatch(emit, repeats: int = 3) -> None:
     items = [WorkItem.from_config(cfg, T=T, uid=i)
              for i, (cfg, T) in enumerate(MIX)]
     params = {i: init_lstm_stack(jax.random.PRNGKey(i), cfg, jnp.float32)
@@ -89,25 +96,28 @@ def dispatch(emit) -> None:
     assert n_packed < n_naive, (n_packed, n_naive)
 
     shapes = "+".join(f"H{c.lstm_hidden}L{c.n_layers}T{t}" for c, t in MIX)
-    emit("dispatch/packed_prefill", _time(packed, params, inputs),
+    emit("dispatch/packed_prefill",
+         _time(packed, params, inputs, repeat=repeats),
          f"{shapes} launches={n_packed} slots={len(p.slots)} "
          f"max_err={max_err:.1e}")
     emit("dispatch/per_request_wavefront",
-         _time(per_request, params, inputs),
+         _time(per_request, params, inputs, repeat=repeats),
          f"{shapes} launches={n_naive}")
     emit("dispatch/oracle_unfolded",
          _time(lambda pr, xs: {i: sch.reference_stack(pr[i], xs[i])
-                               for i in xs}, params, inputs), shapes)
+                               for i in xs}, params, inputs,
+               repeat=repeats), shapes)
     emit("dispatch/plan", 0.0,
          f"items={len(items)} launches={p.launches} "
          f"naive={p.naive_launches} est={p.est_cycles:.0f}cy")
 
-    _decode_rows(emit)
-    _cross_b_rows(emit)
-    _facade_rows(emit)
+    _decode_rows(emit, repeats)
+    _cross_b_rows(emit, repeats)
+    _facade_rows(emit, repeats)
+    _bidir_rows(emit, repeats)
 
 
-def _decode_rows(emit) -> None:
+def _decode_rows(emit, repeats: int = 3) -> None:
     """Steady-state serving decode: planned (one chained launch over the k
     active slots) vs the pre-existing loop (L per-layer launches over the
     full max_batch pool, stale columns included)."""
@@ -165,15 +175,17 @@ def _decode_rows(emit) -> None:
     n_loop = pallas_launch_count(loop, y, h, c)
     assert n_planned == p.launches == 1 < n_loop == L
 
-    emit("dispatch/decode_planned_tick", _time(planned, y, h, c),
+    emit("dispatch/decode_planned_tick",
+         _time(planned, y, h, c, repeat=repeats),
          f"H{H}L{L} active={k}/{max_batch} launches_per_tick={n_planned} "
          f"rows={sum(it.B for it in items)} chained")
-    emit("dispatch/decode_loop_tick", _time(loop, y, h, c),
+    emit("dispatch/decode_loop_tick",
+         _time(loop, y, h, c, repeat=repeats),
          f"H{H}L{L} launches_per_tick={n_loop} rows={max_batch} "
          "(stale columns computed)")
 
 
-def _cross_b_rows(emit) -> None:
+def _cross_b_rows(emit, repeats: int = 3) -> None:
     """Cross-B packed prefill (pad + in-kernel mask) vs the equal-signature
     unpacked (per-B-signature) plan of the same mixed-B items."""
     H, L, T = 64, 3, 12
@@ -205,14 +217,15 @@ def _cross_b_rows(emit) -> None:
     assert n_p == packed.launches < n_u == unpacked.launches
 
     shapes = "+".join(f"B{it.B}" for it in items) + f" H{H}L{L}T{T}"
-    emit("dispatch/cross_b_packed_prefill", _time(run_packed, params, inputs),
+    emit("dispatch/cross_b_packed_prefill",
+         _time(run_packed, params, inputs, repeat=repeats),
          f"{shapes} launches={n_p} slots={len(packed.slots)}")
     emit("dispatch/cross_b_unpacked_prefill",
-         _time(run_unpacked, params, inputs),
+         _time(run_unpacked, params, inputs, repeat=repeats),
          f"{shapes} launches={n_u} slots={len(unpacked.slots)}")
 
 
-def _facade_rows(emit) -> None:
+def _facade_rows(emit, repeats: int = 3) -> None:
     """ISSUE-4 parity guard: the rnn facade is the SAME plan/execute
     pipeline — ``compile().forward()`` launches exactly the kernels of a
     direct dispatch.plan/execute of the same WorkItem (zero facade
@@ -242,7 +255,64 @@ def _facade_rows(emit) -> None:
         (n_facade, n_direct, direct_plan.launches)
 
     shapes = f"H{cfg.lstm_hidden}L{cfg.n_layers}T{T}"
-    emit("dispatch/facade_forward", _time(facade, stack, xs),
+    emit("dispatch/facade_forward",
+         _time(facade, stack, xs, repeat=repeats),
          f"{shapes} launches={n_facade} (== direct; plan cached)")
-    emit("dispatch/facade_direct_plan_execute", _time(direct, stack, xs),
+    emit("dispatch/facade_direct_plan_execute",
+         _time(direct, stack, xs, repeat=repeats),
          f"{shapes} launches={n_direct}")
+
+
+def _bidir_rows(emit, repeats: int = 3) -> None:
+    """ISSUE-5: a bidirectional admission wave (3 share-equal EESEN-style
+    BiLSTM requests) through the interleaved fwd/bwd wavefront — cells of
+    all requests and both directions packed into one slot timeline — vs
+    the retired per-layer fused fallback, which launched every (request,
+    layer, direction) alone.  Bit-equal gated before emission; the
+    structural launch counts are the before/after of retiring the
+    fallback."""
+    import dataclasses
+
+    H, L, T, bt, n_req = 64, 3, 12, 4, 3
+    cfg = dataclasses.replace(lstm_config(H, layers=L), bidirectional=True)
+    items = [WorkItem.from_config(cfg, T=T, uid=i, share=0)
+             for i in range(n_req)]
+    params = init_lstm_stack(jax.random.PRNGKey(0), cfg, jnp.float32)
+    inputs = {i: jax.random.normal(jax.random.PRNGKey(200 + i),
+                                   (1, T, H)) * 0.5 for i in range(n_req)}
+
+    p = plan(items, schedule="wavefront", block_t=bt)
+
+    def interleaved(pr, xs):
+        return execute(p, {i: pr for i in xs}, xs, interpret=True)
+
+    def fallback(pr, xs):
+        """The retired path: per-layer fused launches, each direction of
+        each layer of each request on its own (reference_stack 'fused' is
+        exactly the code the old per_layer fallback ran)."""
+        return {i: sch.reference_stack(pr, xs[i], "fused") for i in xs}
+
+    # -- correctness gate: interleaved == retired fallback, bit-for-bit ---
+    outs = interleaved(params, inputs)
+    ref = fallback(params, inputs)
+    for i in inputs:
+        np.testing.assert_array_equal(np.asarray(outs[i]),
+                                      np.asarray(ref[i]))
+
+    n_packed = pallas_launch_count(interleaved, params, inputs)
+    n_fallback = pallas_launch_count(fallback, params, inputs)
+    nk = -(-T // bt)
+    assert n_packed == p.launches == L * nk   # divisible T: full G-merge
+    assert n_fallback == n_req * 2 * L
+    assert n_packed < n_fallback
+    assert n_packed < 2 * L * nk              # the acceptance bound
+
+    shapes = f"B1x{n_req} H{H}L{L}T{T}bt{bt} bidirectional"
+    emit("dispatch/bidir_interleaved_prefill",
+         _time(interleaved, params, inputs, repeat=repeats),
+         f"{shapes} launches={n_packed} slots={len(p.slots)} "
+         f"waves=L*nk={L * nk}")
+    emit("dispatch/bidir_per_layer_fallback",
+         _time(fallback, params, inputs, repeat=repeats),
+         f"{shapes} launches={n_fallback} (retired: 2 per layer per "
+         "request)")

@@ -26,6 +26,9 @@ def main() -> None:
     ap.add_argument("--json", default=None,
                     help="write rows as JSON (default BENCH_<suite>.json "
                          "for non-'all' suites)")
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="timing repeats per row for suites that take it "
+                         "(median reported; raise for stabler medians)")
     ap.add_argument("--skip-roofline", action="store_true")
     args = ap.parse_args()
 
@@ -48,10 +51,15 @@ def main() -> None:
         benches.append(kernel_bench.kernels)
     if args.suite in ("all", "dispatch"):
         benches.append(dispatch_bench.dispatch)
+    import inspect
+
     for fn in benches:
         if args.only and args.only not in fn.__name__:
             continue
-        fn(emit)
+        if "repeats" in inspect.signature(fn).parameters:
+            fn(emit, repeats=args.repeats)
+        else:
+            fn(emit)
 
     if (args.suite == "all" and not args.skip_roofline
             and (not args.only or "roofline" in args.only)):

@@ -55,6 +55,19 @@ def config() -> ModelConfig:
     return lstm_config(1024, layers=1)
 
 
+def eesen_demo(dtype: str = "float32") -> ModelConfig:
+    """The paper's bidirectional EESEN stack (Table 5) in a demo-friendly
+    dtype: what examples/quickstart.py compiles end-to-end through the
+    dispatcher's interleaved bidirectional wavefront (`rnn.compile`).
+
+    ASR-style BiLSTMs like this are the workloads SHARP's adaptiveness
+    claim is evaluated on — the whole point of retiring the per-layer
+    bidirectional fallback (ISSUE-5)."""
+    import dataclasses
+
+    return dataclasses.replace(EESEN, dtype=dtype)
+
+
 def reduced() -> ModelConfig:
     return ModelConfig(
         name="sharp-lstm-reduced", family="rnn", n_layers=2, n_heads=1,

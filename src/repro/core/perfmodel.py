@@ -178,6 +178,35 @@ def stack_plan_cycles(family: str, H: int, X: int, T: int, L: int,
     return slots * slot_cost + slots * launch_cycles
 
 
+def bidir_stack_plan_cycles(family: str, H: int, X: int, T: int, L: int,
+                            design: Design, *, nk: int,
+                            launch_cycles: float = LAUNCH_CYCLES) -> float:
+    """Wall-clock cycle estimate of an L-layer *bidirectional* stack run as
+    the interleaved fwd/bwd wavefront (dispatch planner, ISSUE-5).
+
+    Each layer contributes a fwd chunk walk (time-ascending) and a bwd walk
+    (time-descending) over the same nk chunk boundaries.  The concat
+    dependency — layer l+1's chunk k needs BOTH fwd chunk k and bwd chunk k
+    of layer l — means the walks of consecutive layers barely overlap, so
+    the timeline is L·nk waves; but within a wave the two directions are
+    data-independent and share ONE G-batched launch (they hide each other's
+    serial tails), halving the serial wall versus running the directions
+    back to back.  Ragged T adds two unmerged waves per layer (the
+    remainder chunk meets a full-length chunk of the opposite direction,
+    breaking the launch signature), each costing one extra launch.
+    """
+    nk = max(1, min(nk, T)) if T else 1
+    bt = -(-T // nk) if T else 0
+    per0 = recurrent_step_cycles(family, H, X, design)
+    # deeper layers consume the previous layer's CONCAT output (2H wide)
+    per = recurrent_step_cycles(family, H, 2 * H, design) if L > 1 else per0
+    slot_cost = bt * (per0 + (L - 1) * per) / L
+    waves = L * nk
+    ragged = 2 if (T and nk > 1 and T % bt) else 0
+    launches = L * (nk + ragged)
+    return waves * slot_cost + launches * launch_cycles
+
+
 def per_step_plan_cycles(family: str, H: int, X: int, T: int, L: int,
                          design: Design, *,
                          launch_cycles: float = LAUNCH_CYCLES) -> float:

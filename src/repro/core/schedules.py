@@ -37,9 +37,12 @@ Stack-level scheduling additionally accepts
               chunk) is issued in the same slot and carries no recurrent
               dependence, so it overlaps with the serial tail exactly as in
               the paper's Fig. 8.d, now across layers as well as time.
-              Bidirectional stacks break the time alignment (the backward
-              direction consumes the previous layer's FULL sequence) and
-              fall back to per-layer fused execution.
+              Bidirectional stacks run an *interleaved* wavefront: each
+              layer's fwd walk visits chunks ascending and its bwd walk
+              descending, the two directions of a wave sharing one
+              G-batched launch (the concat dependency — layer l+1's chunk
+              k needs both directions' chunk k of layer l — shapes the
+              timeline; see dispatch/README.md "Bidirectional").
 
 ``tile`` (from core.tiling) controls the dispatch granularity of the
 batch/unfolded paths, mirroring the reconfigurable tile-engine;

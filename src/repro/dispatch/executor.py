@@ -18,6 +18,15 @@ in-kernel (``b_valid``) to exact no-ops.  ``chained`` slots (T=1 decode)
 run a whole tick's dependent layer chain in ONE launch via the decode
 kernels, the inter-layer value flowing through VMEM scratch.
 
+Bidirectional cells execute in the packed timeline too (ISSUE-5): a "bwd"
+cell walks its chunk in descending time — the executor feeds the sequence
+kernel the time-reversed chunk slice and flips the produced stripe back
+into original time order before storing it (pre-launch reversal; exact,
+remainder chunks included, because the slice IS the chunk).  Each
+direction carries its own recurrent state and its own parameter half
+(layer["fwd"] / layer["bwd"]), and a deeper cell's input is the chunk of
+the previous layer's fwd‖bwd feature concat.
+
 Numerics: the per-cell math inside a G-batched launch is identical to the
 G=1 launch (the kernel grid walks cells independently; padded rows are
 masked no-ops), so a packed plan's outputs match per-item execution
@@ -49,18 +58,25 @@ def execute(plan: DispatchPlan, params: Dict[int, dict],
             init_state: Optional[Dict[int, dict]] = None,
             prepared: Optional[Dict[int, dict]] = None):
     """Run ``plan``.  params[uid] = stack params ({"layers": [...]}),
-    inputs[uid] = xs (B, T, X).  Returns outputs {uid: (B, T, H)} — or
+    inputs[uid] = xs (B, T, X).  Returns outputs {uid: (B, T, H)} —
+    (B, T, 2H) for bidirectional items (fwd‖bwd concat) — or
     (outputs, states) when ``collect_state``: states[uid] is
-    {"h": (L,B,H)[, "c": (L,B,H)]} (exact t=T recurrent state), or
-    ``None`` for items that expose no single t=T (h[, c]) state — rglru
-    (diagonal recurrence, no gate state surfaced) and bidirectional stacks
-    (two opposing time ends).  Callers splicing state must check for None.
+    {"h": (L,B,H)[, "c": (L,B,H)]} (exact t=T recurrent state); for
+    bidirectional items a per-direction pair {"fwd": {...}, "bwd": {...}}
+    (fwd is the exact t=T state, bwd the exact t=0 state — the end of its
+    walk); or ``None`` for items that expose no (h[, c]) state at all —
+    rglru (diagonal recurrence, no gate state surfaced) and any item
+    executed through an external stateless schedule.  Callers splicing
+    decode state must check for a plain {"h": ...} dict, as the serving
+    engine does.
 
     ``init_state`` optionally seeds the recurrent state of packed items:
     init_state[uid] = {"h": (L,B,H)[, "c": (L,B,H)]} replaces the zero
     initial state (the serving engine's decode ticks resume from it).
     External-fallback items ignore it (their schedule surfaces start from
     zeros) — the planner never routes a decode item external.
+    Bidirectional items reject it: their two walks start from opposite
+    sequence ends, so there is no mid-stream resume point.
 
     ``prepared`` optionally carries pre-stacked decode weights per uid
     (see ``prepare_decode_stack``) so steady-state decode ticks don't
@@ -95,7 +111,9 @@ def execute(plan: DispatchPlan, params: Dict[int, dict],
     outputs: Dict[int, jnp.ndarray] = {}
     states: Dict[int, dict] = {}
 
-    # ---- external fallbacks (bidirectional / per-step / rglru / T=0) ----
+    # ---- external fallbacks (reference schedules / per-step / rglru /
+    # T=0) — bidirectional items land here only under a forced stateless
+    # schedule; their planned path is the interleaved packed timeline ----
     for ip in plan.items:
         if ip.uid not in plan.external:
             continue
@@ -112,25 +130,34 @@ def execute(plan: DispatchPlan, params: Dict[int, dict],
             outputs[it.uid], states[it.uid] = _run_stack_collect(
                 it, params[it.uid], xs, interpret=interpret)
             continue
-        # per_layer (the bidirectional / forced-"fused" fallback) is the
-        # per-layer fused path; everything else external runs its own
-        # named schedule through the reference library
+        # per_layer (the forced-"fused" shape) is the per-layer fused
+        # path; everything else external runs its own named schedule
+        # through the reference library
         sched = "fused" if ip.schedule in ("per_layer", "fused") \
             else ip.schedule
         outputs[it.uid] = _run_reference(
             params[it.uid], xs, sched,
             interpret=interpret, block_t=ip.block_t)
         if collect_state:
-            states[it.uid] = None  # bidirectional: no single t=T state
+            states[it.uid] = None  # stateless external schedule
 
     # ---- packed wavefront timeline --------------------------------------
+    # live state is keyed (layer, direction): unidirectional items only
+    # ever touch direction "fwd"; a bidirectional item's two walks carry
+    # independent state and parameter halves
     live: Dict[int, dict] = {}
     for ip in plan.items:
         if ip.uid in plan.external:
             continue
         it = ip.item
+        dirs = ("fwd", "bwd") if it.bidirectional else ("fwd",)
         dtype = inputs[it.uid].dtype
         st0 = (init_state or {}).get(it.uid)
+        if st0 is not None and it.bidirectional:
+            raise ValueError(
+                f"init_state given for bidirectional item {it.uid}: the "
+                "fwd/bwd walks start from opposite sequence ends, so there "
+                "is no mid-stream state to resume from")
 
         def _c0(l):
             # cell state exists per LSTM layer only; a mixed stack's gru
@@ -143,11 +170,13 @@ def execute(plan: DispatchPlan, params: Dict[int, dict],
 
         live[it.uid] = {
             "plan": ip,
-            "h": ([st0["h"][l] for l in range(it.L)] if st0 else
-                  [jnp.zeros((it.B, it.H), dtype) for _ in range(it.L)]),
-            "c": ([_c0(l) for l in range(it.L)]
+            "h": {(l, d): (st0["h"][l] if st0 is not None else
+                           jnp.zeros((it.B, it.H), dtype))
+                  for l in range(it.L) for d in dirs},
+            "c": ({(l, d): _c0(l) for l in range(it.L) for d in dirs}
                   if "lstm" in it.families else None),
-            "outs": [[None] * ip.nk for _ in range(it.L)],
+            "outs": {(l, d): [None] * ip.nk
+                     for l in range(it.L) for d in dirs},
         }
 
     for slot in plan.slots:
@@ -162,22 +191,18 @@ def execute(plan: DispatchPlan, params: Dict[int, dict],
             for cell in grp:
                 st = live[cell.uid]
                 ip: ItemPlan = st["plan"]
-                layer = params[cell.uid]["layers"][cell.layer]
-                t0 = cell.chunk * ip.block_t
-                if cell.layer == 0:
-                    src = inputs[cell.uid][:, t0:t0 + slot.chunk_len]
-                else:
-                    src = st["outs"][cell.layer - 1][cell.chunk]
+                layer = _cell_layer_params(params, st, cell)
+                src = _cell_src(inputs, st, cell, slot.chunk_len)
                 xw_rows.append(_hoist(layer, src, gates))
-                h_rows.append(st["h"][cell.layer])
+                h_rows.append(st["h"][(cell.layer, cell.direction)])
                 if slot.family == "lstm":
-                    c_rows.append(st["c"][cell.layer])
+                    c_rows.append(st["c"][(cell.layer, cell.direction)])
             # cross-B row: parameter-sharing cells concatenate on B (same
             # U by the share contract — take the lead cell's); rows
             # narrower than the slot's width pad with zeros, masked
             # in-kernel to exact no-ops
             xw_g = _cat_pad(xw_rows, slot.B)
-            us.append(params[grp[0].uid]["layers"][grp[0].layer]
+            us.append(_cell_layer_params(params, live[grp[0].uid], grp[0])
                       ["U"].reshape(slot.H, gates, slot.H))
             xws.append(xw_g)
             hs.append(_cat_pad(h_rows, slot.B))
@@ -204,27 +229,84 @@ def execute(plan: DispatchPlan, params: Dict[int, dict],
             for cell in grp:
                 st = live[cell.uid]
                 nb = st["plan"].item.B
-                st["h"][cell.layer] = h_n[g, off:off + nb].astype(h0.dtype)
+                key = (cell.layer, cell.direction)
+                st["h"][key] = h_n[g, off:off + nb].astype(h0.dtype)
                 if c_n is not None:
-                    st["c"][cell.layer] = c_n[g, off:off + nb]
-                st["outs"][cell.layer][cell.chunk] = \
-                    out[g, off:off + nb].astype(inputs[cell.uid].dtype)
+                    st["c"][key] = c_n[g, off:off + nb]
+                chunk = out[g, off:off + nb].astype(inputs[cell.uid].dtype)
+                if cell.direction == "bwd":
+                    # the kernel walked the chunk in reversed time; store
+                    # the stripe back in original time order
+                    chunk = jnp.flip(chunk, axis=1)
+                st["outs"][key][cell.chunk] = chunk
                 off += nb
 
     for uid, st in live.items():
         it = st["plan"].item
-        outputs[uid] = jnp.concatenate(st["outs"][it.L - 1], axis=1)
+        top = jnp.concatenate(st["outs"][(it.L - 1, "fwd")], axis=1)
+        if it.bidirectional:
+            bwd = jnp.concatenate(st["outs"][(it.L - 1, "bwd")], axis=1)
+            top = jnp.concatenate([top, bwd], axis=-1)
+        outputs[uid] = top
         if collect_state:
-            states[uid] = {"h": jnp.stack(st["h"])}
-            if st["c"] is not None:
-                # mixed stacks: gru layers have no cell state — their rows
-                # are zeros so "c" keeps the documented (L, B, H) shape
-                states[uid]["c"] = jnp.stack(
-                    [c if c is not None
-                     else jnp.zeros((it.B, it.H), jnp.float32)
-                     for c in st["c"]])
+            if it.bidirectional:
+                # per-direction state: fwd's walk ends at t=T, bwd's at
+                # t=0 — two exact end-of-walk states, no single t=T one
+                states[uid] = {d: _dir_state(st, it, d)
+                               for d in ("fwd", "bwd")}
+            else:
+                states[uid] = _dir_state(st, it, "fwd")
 
     return (outputs, states) if collect_state else outputs
+
+
+def _dir_state(st, item, direction: str) -> dict:
+    """Stack one direction's per-layer end-of-walk state into the
+    documented {"h": (L,B,H)[, "c"]} shape (gru rows of a mixed stack's
+    "c" are zeros)."""
+    out = {"h": jnp.stack([st["h"][(l, direction)]
+                           for l in range(item.L)])}
+    if st["c"] is not None:
+        out["c"] = jnp.stack(
+            [st["c"][(l, direction)]
+             if st["c"][(l, direction)] is not None
+             else jnp.zeros((item.B, item.H), jnp.float32)
+             for l in range(item.L)])
+    return out
+
+
+def _cell_layer_params(params, st, cell):
+    """The parameter dict one cell's launch row binds: the cell's layer,
+    and for bidirectional items the cell's direction half."""
+    layer = params[cell.uid]["layers"][cell.layer]
+    if st["plan"].item.bidirectional:
+        layer = layer[cell.direction]
+    return layer
+
+
+def _cell_src(inputs, st, cell, chunk_len: int):
+    """One cell's input chunk, in the cell's own walk order.
+
+    Layer 0 reads the item's input slice; deeper layers read the previous
+    layer's just-produced chunk — for bidirectional items the fwd‖bwd
+    feature concat (both stored in original time order).  "bwd" cells walk
+    descending time: the chunk slice is flipped before the hoist
+    (pre-launch reversal — exact, the slice IS the chunk, remainders
+    included)."""
+    ip: ItemPlan = st["plan"]
+    it = ip.item
+    if cell.layer == 0:
+        t0 = cell.chunk * ip.block_t
+        src = inputs[cell.uid][:, t0:t0 + chunk_len]
+    elif it.bidirectional:
+        src = jnp.concatenate(
+            [st["outs"][(cell.layer - 1, "fwd")][cell.chunk],
+             st["outs"][(cell.layer - 1, "bwd")][cell.chunk]], axis=-1)
+    else:
+        src = st["outs"][(cell.layer - 1, "fwd")][cell.chunk]
+    if cell.direction == "bwd":
+        src = jnp.flip(src, axis=1)
+    return src
 
 
 def _cat_pad(rows, B: int):
@@ -289,10 +371,12 @@ def _run_chained_slot(slot, params, inputs, live, *, interpret=None,
     prep = ((prepared or {}).get(lead_uid)
             or prepare_decode_stack(params[lead_uid], slot.family))
     Ws, bs, Us = prep["Ws"], prep["bs"], prep["Us"]
-    h0 = jnp.stack([_cat_pad([live[c.uid]["h"][l] for c in row_cells],
+    h0 = jnp.stack([_cat_pad([live[c.uid]["h"][(l, "fwd")]
+                              for c in row_cells],
                              slot.B) for l in range(L)])  # (L, B, H)
     if slot.family == "lstm":
-        c0 = jnp.stack([_cat_pad([live[c.uid]["c"][l] for c in row_cells],
+        c0 = jnp.stack([_cat_pad([live[c.uid]["c"][(l, "fwd")]
+                                  for c in row_cells],
                                  slot.B) for l in range(L)])
         h_n, c_n = lstm_decode(xw0, Ws, bs, Us, h0, c0, interpret=interpret)
     else:
@@ -305,11 +389,12 @@ def _run_chained_slot(slot, params, inputs, live, *, interpret=None,
         nb = st["plan"].item.B
         dtype = inputs[cell.uid].dtype
         for l in range(L):
-            st["h"][l] = h_n[l, off:off + nb].astype(h0.dtype)
+            st["h"][(l, "fwd")] = h_n[l, off:off + nb].astype(h0.dtype)
             if c_n is not None:
-                st["c"][l] = c_n[l, off:off + nb]
+                st["c"][(l, "fwd")] = c_n[l, off:off + nb]
             # layer l's new h IS its T=1 output frame
-            st["outs"][l][0] = h_n[l, off:off + nb, None].astype(dtype)
+            st["outs"][(l, "fwd")][0] = \
+                h_n[l, off:off + nb, None].astype(dtype)
         off += nb
 
 

@@ -20,6 +20,14 @@ This is the software rendition of SHARP's intelligent tile-based dispatch
      into one slot (in-kernel masked) when the perfmodel scores the
      widened launch cheaper than an extra one.
 
+Bidirectional stacks are first-class in the packed timeline (ISSUE-5):
+each bidirectional layer contributes a fwd cell walk (time-ascending
+chunks) and a bwd walk (time-descending) interleaved into one wave
+timeline — the two directions of a wave are data-independent and G-merge
+into a single launch (and cross-B pack with other requests), instead of
+the retired per-layer fused fallback that launched each direction of each
+layer on its own with no packing at all.
+
 ``plan_decode`` plans a serving decode tick: T=1 items over one shared
 stack become a single *chained* slot — one launch walks the L dependent
 layer cells in grid order with the inter-layer value in VMEM scratch —
@@ -36,7 +44,8 @@ from dataclasses import dataclass, replace
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 from repro.core.autotune import table
-from repro.core.perfmodel import (Design, LAUNCH_CYCLES, decode_plan_cycles,
+from repro.core.perfmodel import (Design, LAUNCH_CYCLES,
+                                  bidir_stack_plan_cycles, decode_plan_cycles,
                                   per_step_plan_cycles, slot_launch_cycles,
                                   stack_plan_cycles)
 from repro.core.schedules import wavefront_active
@@ -49,10 +58,16 @@ DEFAULT_MACS = 16384  # planner's reference tile-engine budget (paper 16K)
 
 @dataclass(frozen=True)
 class Cell:
-    """One (item, layer, time-chunk) unit of recurrent work."""
+    """One (item, layer, time-chunk, direction) unit of recurrent work.
+
+    ``direction`` is "fwd" for unidirectional items and the forward half of
+    bidirectional layers; "bwd" cells walk their chunk in *descending* time
+    (the executor feeds the sequence kernel the time-reversed chunk slice
+    and flips the produced stripe back — exact, including remainders)."""
     uid: int
     layer: int
     chunk: int
+    direction: str = "fwd"
 
 
 @dataclass(frozen=True)
@@ -97,7 +112,10 @@ class Slot:
 
     def describe(self) -> str:
         grps = " ".join(
-            "[" + " ".join(f"({c.uid},l{c.layer},k{c.chunk})" for c in grp)
+            "[" + " ".join(
+                f"({c.uid},l{c.layer},k{c.chunk}"
+                + ("" if c.direction == "fwd" else ",bwd") + ")"
+                for c in grp)
             + f"]b{b}" for grp, b in zip(self.groups, self.group_b))
         tag = " chained" if self.chained else ""
         return (f"slot {self.index:3d} wave {self.wave:3d}  "
@@ -134,6 +152,8 @@ class ItemPlan:
     def describe(self) -> str:
         it = self.item
         tag = "" if self.executable else " [plan-only]"
+        if it.bidirectional:
+            tag = " bidir" + tag
         return (f"item {it.uid:3d}  {it.family} H{it.H} L{it.L} B{it.B} "
                 f"T{it.T} X{it.X} prio{it.priority}  -> {self.schedule} "
                 f"bt={self.block_t} nk={self.nk} K={self.tile_k} "
@@ -195,12 +215,50 @@ def _chunk_lens(T: int, bt: int) -> List[int]:
     return out
 
 
+def bidir_wavefront_launches(L: int, T: int, bt: int) -> int:
+    """Launch count of one L-layer bidirectional item packed alone at
+    T-stripe ``bt``: L·nk waves (see ``_item_cells``), each merging its fwd
+    and bwd cells into ONE G-batched launch — except, under ragged T, the
+    two waves per layer where the remainder chunk meets a full-length chunk
+    of the opposite direction (different chunk_len -> different launch
+    signature).  At most 2·L·nk, the per-direction-per-chunk count, and
+    strictly below it except the nk=2 ragged boundary case, where every
+    wave splits (L·(2+2) == 2·L·2); divisible stripes and nk=1 give the
+    full win (L·nk — at nk=1 half the retired fallback's 2·L)."""
+    nk = cdiv(T, bt)
+    ragged = 2 if (nk > 1 and T % bt) else 0
+    return L * (nk + ragged)
+
+
 def _item_cells(ip: ItemPlan) -> Dict[int, List[Tuple[int, Cell]]]:
-    """wave -> [(chunk_len, Cell)] for one packable item."""
+    """wave -> [(chunk_len, Cell)] for one packable item.
+
+    Unidirectional items wavefront on the classic anti-diagonal (layer l's
+    chunk k in wave l + k).  Bidirectional items run the *interleaved*
+    timeline: layer l's fwd walk visits chunks ascending, its bwd walk
+    descending, over the same chunk boundaries; layer l+1's chunk k becomes
+    ready only once fwd has produced chunk k AND bwd has produced chunk k
+    (the concat dependency — in the bwd walk's own order that is its chunk
+    nk-1-k), so the earliest-start schedule is
+
+        wave(l, fwd, k) = l·nk + k        wave(l, bwd, k) = l·nk + (nk-1-k)
+
+    — L·nk waves, each holding one fwd and one bwd cell of one layer, the
+    two directions hiding each other's serial dependence in one G-batched
+    launch (same-signature merge in ``_pack``)."""
     it = ip.item
     lens = _chunk_lens(it.T, ip.block_t)
     nk = len(lens)
     waves: Dict[int, List[Tuple[int, Cell]]] = {}
+    if it.bidirectional:
+        for l in range(it.L):
+            for k in range(nk):
+                waves.setdefault(l * nk + k, []).append(
+                    (lens[k], Cell(uid=it.uid, layer=l, chunk=k)))
+                waves.setdefault(l * nk + (nk - 1 - k), []).append(
+                    (lens[k], Cell(uid=it.uid, layer=l, chunk=k,
+                                   direction="bwd")))
+        return waves
     for s in range(it.L + nk - 1):
         lo, hi = wavefront_active(s, it.L, nk)
         for l in range(lo, hi + 1):
@@ -252,16 +310,23 @@ def _pack(item_plans: Sequence[ItemPlan], macs: int, *,
                 # the item's head family — a mixed lstm/gru stack's cells
                 # land in per-family slots of the same wave timeline
                 fam = it.families[cell.layer]
+                # direction is part of every group key: a B-concat row
+                # shares ONE recurrent matrix U, and a bidirectional
+                # layer's fwd/bwd halves are distinct parameters (they may
+                # still share the LAUNCH — different g rows of one slot)
                 if cross_b:
                     sig = (fam, it.H, chunk_len, it.dtype)
-                    gkey = (("share", it.share, cell.layer)
+                    gkey = (("share", it.share, cell.layer, cell.direction)
                             if it.share is not None else
-                            ("solo", it.uid, cell.layer, cell.chunk))
+                            ("solo", it.uid, cell.layer, cell.chunk,
+                             cell.direction))
                 else:
                     sig = (fam, it.H, it.B, chunk_len, it.dtype)
-                    gkey = ("solo", it.uid, cell.layer, cell.chunk)
+                    gkey = ("solo", it.uid, cell.layer, cell.chunk,
+                            cell.direction)
                 sigs.setdefault(sig, {}).setdefault(gkey, []).append(
-                    (it.order_key() + (cell.layer,), cell, it.B))
+                    (it.order_key() + (cell.layer, cell.direction), cell,
+                     it.B))
         for sig in sorted(sigs, key=str):
             if cross_b:
                 family, H, chunk_len, dtype = sig
@@ -337,6 +402,17 @@ def _stack_est(it: WorkItem, design: Design, *, nk: int) -> float:
                for f, n in sorted(Counter(it.families).items()))
 
 
+def _wave_est(it: WorkItem, design: Design, *, nk: int) -> float:
+    """Perfmodel estimate of the item's packed-timeline shape at striping
+    ``nk``: the anti-diagonal wavefront for unidirectional items, the
+    interleaved fwd/bwd timeline for bidirectional ones (which are always
+    homogeneous, so the single-family bidir model is exact)."""
+    if it.bidirectional:
+        return bidir_stack_plan_cycles(it.family, it.H, it.X, it.T, it.L,
+                                       design, nk=nk)
+    return _stack_est(it, design, nk=nk)
+
+
 def _per_step_plan(it: WorkItem, design: Design, tile_k, mvm_block,
                    dirs: int = 1) -> ItemPlan:
     """lstm per_step runs one cell-kernel launch per (layer, step); gru has
@@ -358,11 +434,13 @@ def _forced_plan(it: WorkItem, design: Design, force: str, force_bt: int,
     external: the executor runs them through the pure research
     implementations in core.schedules / core.gru (zero kernel launches).
     ``fused`` is the legacy per-layer fused path (one internally-striped
-    sequence-kernel launch per layer -> schedule tag "per_layer");
+    sequence-kernel launch per layer -> schedule tag "per_layer") for
+    unidirectional items, and the one-wave-per-layer interleaved shape for
+    bidirectional ones (whose per-layer fallback ISSUE-5 retired);
     ``wavefront`` enters the packed slot timeline at the forced (or
     autotuned) T-stripe.
     """
-    dirs = 2 if it.bidirectional else 1
+    dirs = it.dirs
     if force in REFERENCE_SCHEDULES:
         if force == "batch" and set(it.families) != {"lstm"}:
             raise ValueError(
@@ -378,20 +456,26 @@ def _forced_plan(it: WorkItem, design: Design, force: str, force_bt: int,
                         naive_launches=0, est_cycles=est)
     if force == "per_step":
         return _per_step_plan(it, design, tile_k, mvm_block, dirs=dirs)
-    if force == "fused" or it.bidirectional:
-        # per-layer fused launches (the sequence kernel stripes internally,
-        # so any T fits in one launch per layer/direction)
-        est = dirs * _stack_est(it, design, nk=1)
-        return ItemPlan(item=it, schedule="per_layer", block_t=force_bt,
-                        nk=1, tile_k=tile_k, mvm_block=mvm_block,
-                        naive_launches=dirs * it.L, est_cycles=est)
+    if force == "fused":
+        if not it.bidirectional:
+            # per-layer fused launches (the sequence kernel stripes
+            # internally, so any T fits in one launch per layer)
+            est = _stack_est(it, design, nk=1)
+            return ItemPlan(item=it, schedule="per_layer", block_t=force_bt,
+                            nk=1, tile_k=tile_k, mvm_block=mvm_block,
+                            naive_launches=it.L, est_cycles=est)
+        # bidirectional "fused" is the one-wave-per-layer shape of the
+        # interleaved timeline (nk collapses to 1 when the whole T fits the
+        # VMEM budget — one G=2 launch per layer, fwd and bwd merged —
+        # otherwise the minimal striping that does fit)
+        force_bt = force_bt or it.T
     # wavefront: forced stripe if given (VMEM-checked), else the autotuned
     # one — nk may collapse to 1, which IS the packable fused shape
     bt = _fit_stripe(min(it.T, force_bt) if force_bt else
                      table().seq_block(it.T, it.B, it.H, gates=it.gates),
                      it.B, it.H, it.gates)
     nk = cdiv(it.T, bt)
-    est = _stack_est(it, design, nk=nk)
+    est = _wave_est(it, design, nk=nk)
     ip = ItemPlan(item=it, schedule="wavefront" if nk > 1 else "fused",
                   block_t=bt, nk=nk, tile_k=tile_k, mvm_block=mvm_block,
                   naive_launches=0, est_cycles=est)
@@ -426,14 +510,6 @@ def _schedule_item(it: WorkItem, macs: int, design: Design,
     if force is not None:
         return _forced_plan(it, design, force, force_bt, tile_k, mvm_block)
 
-    if it.bidirectional:
-        # fwd/bwd break the wavefront time alignment (core.schedules):
-        # per-layer fused fallback, 2 launches per layer
-        est = 2 * _stack_est(it, design, nk=1)
-        return ItemPlan(item=it, schedule="per_layer", block_t=0, nk=1,
-                        tile_k=tile_k, mvm_block=mvm_block,
-                        naive_launches=2 * it.L, est_cycles=est)
-
     if force_bt:
         # an explicit stripe override (ExecutionPolicy.block_t) pins the
         # wavefront candidate even under "auto" — the scorer still weighs
@@ -452,9 +528,9 @@ def _schedule_item(it: WorkItem, macs: int, design: Design,
     scored = []
     for bt in cands:
         nk = cdiv(it.T, bt)
-        est = _stack_est(it, design, nk=nk)
+        est = _wave_est(it, design, nk=nk)
         scored.append((est, -bt, bt, nk, "wavefront" if nk > 1 else "fused"))
-    ps = _per_step_plan(it, design, tile_k, mvm_block)
+    ps = _per_step_plan(it, design, tile_k, mvm_block, dirs=it.dirs)
     scored.append((ps.est_cycles, 0, 0, it.T, "per_step"))
     est, _, bt, nk, sched = min(scored)
 
@@ -563,7 +639,12 @@ def plan_decode(items: Iterable[WorkItem], *,
             raise ValueError(f"item {it.uid}: decode items must declare a "
                              "shared parameter stack (share=...)")
         if it.bidirectional:
-            raise ValueError("bidirectional stacks have no streaming decode")
+            raise ValueError(
+                f"item {it.uid}: bidirectional stacks have no streaming "
+                f"decode — the backward walk of its {it.L} layer(s) "
+                "consumes the FULL sequence, so a T=1 tick cannot exist; "
+                "run whole sequences through forward()/prefill() (the "
+                "interleaved-wavefront prefill path) instead")
         key = (it.family, it.H, it.L, it.X, it.dtype, it.share)
         if key != (head.family, head.H, head.L, head.X, head.dtype,
                    head.share):
@@ -618,9 +699,12 @@ def _align_group_stripes(items: Sequence[WorkItem],
         if ip.schedule in ("wavefront", "fused") and it.family != "rglru" \
                 and it.T > 0 and not it.bidirectional \
                 and not it.heterogeneous:
-            # under cross-B, different-B items can share launches too
-            # (heterogeneous items keep their own validated stripe — their
-            # perfmodel trial costs are per-family sums, not comparable)
+            # under cross-B, different-B items can share launches too.
+            # heterogeneous items keep their own validated stripe (their
+            # perfmodel trial costs are per-family sums, not comparable);
+            # bidirectional items likewise — their interleaved timeline is
+            # costed by bidir_stack_plan_cycles, and their cells still
+            # pack with any same-signature wave through _pack
             sig = ((it.family, it.H, it.dtype) if cross_b
                    else (it.family, it.H, it.B, it.dtype))
             groups.setdefault(sig, []).append(it)

@@ -102,6 +102,14 @@ class WorkItem:
         return max(GATES[f] for f in self.families)
 
     @property
+    def dirs(self) -> int:
+        """Directions per layer: 2 for bidirectional stacks, whose every
+        layer contributes a fwd and a bwd cell walk to the planner's
+        interleaved timeline (each with its own parameter half and
+        recurrent state)."""
+        return 2 if self.bidirectional else 1
+
+    @property
     def heterogeneous(self) -> bool:
         return len(set(self.families)) > 1
 

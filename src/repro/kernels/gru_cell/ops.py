@@ -24,7 +24,14 @@ def gru_seq(U3, xw, h0=None, *, b_valid=None, block_t: int = 0,
     table's VMEM-budget choice (gates=3).
 
     ``b_valid`` (stacked form only): (G,) int array of valid batch rows per
-    cell under ragged-B packing — rows >= b_valid[g] are exact no-ops."""
+    cell under ragged-B packing — rows >= b_valid[g] are exact no-ops.
+
+    Time-reversed walks (the bwd half of a bidirectional layer) use
+    pre-launch reversal exactly like ``lstm_seq``: flip the xw stripe on
+    the time axis and flip ``hs`` back — exact for any T (the T-edge mask
+    only pads beyond T), with ``h_T`` then the state after the t=0 step
+    (see kernels.lstm_cell.lstm_seq and
+    tests/kernels/test_seq_reversed.py)."""
     stacked = xw.ndim == 5
     if not stacked:
         if b_valid is not None:

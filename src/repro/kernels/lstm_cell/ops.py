@@ -58,7 +58,17 @@ def lstm_seq(U4, xw, h0=None, c0=None, *, b_valid=None, block_t: int = 0,
     ``b_valid`` (stacked form only): (G,) int array of valid batch rows per
     cell when ragged-B cells were padded to a common B — rows >= b_valid[g]
     are exact no-ops (state passes through), so valid rows' t=T state is
-    bit-exact regardless of padding."""
+    bit-exact regardless of padding.
+
+    Time-reversed walks (the bwd half of a bidirectional layer) use
+    pre-launch reversal: feed ``jnp.flip(xw, time_axis)`` and flip ``hs``
+    back — the kernel walks whatever order the stripe carries, its T-edge
+    mask only ever pads *beyond* T, so the reversed walk is exact for any
+    T, ragged remainder chunks included, and ``h_T``/``c_T`` are then the
+    state after the t=0 step (the end of the reversed walk).  The dispatch
+    executor flips per cell, so one G-batched launch can mix fwd and bwd
+    cells (tests/kernels/test_seq_reversed.py property-tests the
+    contract)."""
     stacked = xw.ndim == 5
     if not stacked:
         if b_valid is not None:

@@ -19,13 +19,16 @@ dispatcher's planner/executor:
                          prints every launch the executor will make)
     stats                launches / est_cycles / plans_built accounting
 
-Plans are shape-only and cached per (B, T, dtype) signature, so repeated
-calls at one shape replan nothing — batch users, the serving engine, and
-the deprecated ``core.schedules.run_stack`` shim all share this exact
-pipeline, which is the point: dispatcher wins (wavefront packing, cross-B
-merges, chained decode) reach every entry surface, and a mixed
-lstm/gru stack wavefronts across families with no special casing (the
-planner groups cells into launches by their own layer's family).
+Plans are shape-only and cached per (direction, B, T, dtype) signature, so
+repeated calls at one shape replan nothing — batch users, the serving
+engine, and the deprecated ``core.schedules.run_stack`` shim all share
+this exact pipeline, which is the point: dispatcher wins (wavefront
+packing, cross-B merges, chained decode) reach every entry surface, a
+mixed lstm/gru stack wavefronts across families with no special casing
+(the planner groups cells into launches by their own layer's family), and
+a bidirectional stack runs the interleaved fwd/bwd wavefront (ISSUE-5) —
+forward returns the (B, T, 2H) fwd‖bwd concat, prefill per-direction
+end-of-walk state, and decode raises (no streaming decode exists).
 """
 from __future__ import annotations
 
@@ -179,6 +182,13 @@ class CompiledStack:
                         priority=priority, bidirectional=self.bidirectional,
                         share=0, families=self.families)
 
+    @property
+    def _dir_key(self) -> str:
+        """Direction component of every plan-cache key: a bidirectional
+        stack's plans are interleaved fwd/bwd timelines, never
+        interchangeable with a unidirectional stack's at the same shape."""
+        return "bi" if self.bidirectional else "uni"
+
     #: plan-cache bound: decode keys are bounded by the batch widths seen,
     #: but a long-running serving process with ragged prompt lengths almost
     #: never repeats an admission-wave signature — without a cap the cache
@@ -213,7 +223,7 @@ class CompiledStack:
         and a one-element admission wave are the same plan)."""
         pol = self.policy
         force = None if pol.schedule == "auto" else pol.schedule
-        key = ("fwd", shapes, prios)
+        key = ("fwd", self._dir_key, shapes, prios)
         return self._cached(key, lambda: plan(
             [self._item(i, b, t, dt, priority=p)
              for i, ((b, t, dt), p) in enumerate(zip(shapes, prios))],
@@ -269,9 +279,10 @@ class CompiledStack:
         DispatchPlan — their (layer, time-chunk) cells share wavefront
         slots and cross-B rows — and returns a list of (ys, state).
 
-        Bidirectional stacks return ``state=None`` (two opposing time ends
-        expose no single t=T state — the executor's documented contract);
-        check before splicing, as the serving engine does.
+        Bidirectional stacks return per-direction state
+        ``{"fwd": {"h"[, "c"]}, "bwd": {...}}`` — fwd's walk ends at t=T,
+        bwd's at t=0, so there is no single t=T state to splice into a
+        decode (the serving engine checks for a plain {"h": ...} dict).
         """
         if self.policy.schedule in ("sequential", "batch", "intergate",
                                     "unfolded", "per_step"):
@@ -325,8 +336,11 @@ class CompiledStack:
         """
         if self.bidirectional:
             raise ValueError(
-                "CompiledStack.decode: bidirectional stacks have no "
-                "streaming decode")
+                f"CompiledStack.decode: bidirectional stacks ({self.L} "
+                "layers, both directions) have no streaming decode — the "
+                "backward walk consumes the full sequence; run whole "
+                "sequences through forward()/prefill() (the interleaved-"
+                "wavefront path) instead")
         x_t = jnp.asarray(x_t)
         if x_t.ndim == 2:
             x_t = x_t[:, None, :]

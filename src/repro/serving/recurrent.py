@@ -144,9 +144,10 @@ class RecurrentServingEngine:
 
         for (slot, req), (out_b, st) in zip(pairs, results):
             if st is None or "h" not in st:
-                # the executor returns None for items with no single t=T
-                # state (rglru / bidirectional) — nothing to splice, and
-                # silently proceeding would serve garbage decode frames
+                # the executor returns None (rglru, stateless schedules)
+                # or a per-direction dict (bidirectional) for items with
+                # no single t=T state — nothing to splice, and silently
+                # proceeding would serve garbage decode frames
                 raise RuntimeError(
                     f"request {req.uid}: prefill returned no spliceable "
                     f"recurrent state (family {self.family!r}); the engine "

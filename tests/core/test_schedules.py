@@ -109,7 +109,10 @@ def test_wavefront_slot_launch_count():
     assert n == sch.wavefront_slots(L, T, bt) == L + T // bt - 1
 
 
-def test_wavefront_bidirectional_falls_back():
+def test_wavefront_bidirectional_interleaves():
+    """Bidirectional + wavefront no longer falls back (ISSUE-5): the shim
+    lowers to the dispatcher's interleaved fwd/bwd timeline and must still
+    match the per-step reference."""
     cfg = dataclasses.replace(reduced(), bidirectional=True)
     stack = init_lstm_stack(jax.random.PRNGKey(0), cfg, jnp.float32)
     xs = jax.random.normal(jax.random.PRNGKey(1), (2, 7, cfg.lstm_hidden)) * 0.5

@@ -177,3 +177,14 @@ def test_plan_decode_validates_items():
     with pytest.raises(ValueError, match="family"):
         plan_decode([WorkItem(uid=0, family="rglru", B=1, T=1, H=H, L=1,
                               share=0)])
+
+
+def test_plan_decode_bidirectional_error_names_item_and_alternative():
+    """ISSUE-5 satellite regression: the bidirectional rejection used to be
+    a bare ValueError — it must name the offending item, its layer count,
+    and point at the supported forward()/prefill() path."""
+    bi = WorkItem(uid=7, family="lstm", B=1, T=1, H=H, L=L, share=0,
+                  bidirectional=True)
+    with pytest.raises(ValueError,
+                       match=r"item 7.*3 layer.*forward\(\)"):
+        plan_decode([bi])

@@ -142,9 +142,10 @@ def test_external_fallbacks_still_collect_state():
 
 
 def test_stateless_families_collect_none_not_empty_dict():
-    """ISSUE-3 satellite: rglru and bidirectional items return an explicit
-    ``states[uid] = None`` (documented), not a silent {} that KeyErrors at
-    first use."""
+    """ISSUE-3 satellite (amended by ISSUE-5): rglru items return an
+    explicit ``states[uid] = None`` (documented), not a silent {} that
+    KeyErrors at first use.  Bidirectional items are no longer stateless —
+    see test_bidirectional_collects_per_direction_state."""
     rg = WorkItem(uid=0, family="rglru", B=1, T=8, H=32, L=1)
     la = -jnp.abs(jax.random.normal(jax.random.PRNGKey(0), (1, 8, 32))) * 0.3
     gx = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 32))
@@ -152,16 +153,68 @@ def test_stateless_families_collect_none_not_empty_dict():
                         interpret=True, collect_state=True)
     assert states[0] is None
 
+
+def _bi_setup(L=2, H=24, T=6, B=1, seed=2):
     import dataclasses
 
-    bi = WorkItem(uid=0, family="lstm", B=1, T=6, H=24, L=2,
+    bi = WorkItem(uid=0, family="lstm", B=B, T=T, H=H, L=L,
                   bidirectional=True)
-    cfg = dataclasses.replace(lstm_config(24, layers=2), bidirectional=True)
-    params = {0: init_lstm_stack(jax.random.PRNGKey(2), cfg, jnp.float32)}
-    xs = {0: jax.random.normal(jax.random.PRNGKey(3), (1, 6, 24)) * 0.5}
-    _, states = execute(plan([bi]), params, xs, interpret=True,
+    cfg = dataclasses.replace(lstm_config(H, layers=L), bidirectional=True)
+    params = {0: init_lstm_stack(jax.random.PRNGKey(seed), cfg, jnp.float32)}
+    xs = jax.random.normal(jax.random.PRNGKey(seed + 1), (B, T, H)) * 0.5
+    return bi, params, xs
+
+
+def test_bidirectional_lstm_packed_bit_identical_to_fused_reference():
+    """ISSUE-5 tentpole exactness: the interleaved packed timeline —
+    chunked fwd/bwd walks, per-cell pre-launch reversal, concat inputs —
+    reproduces the retired per-layer fused path BIT for bit (fp32), at
+    strictly fewer launches than 2·L·⌈T/bt⌉ (structurally proven)."""
+    bi, params, xs = _bi_setup(L=3, H=24, T=14, B=2)
+    p = plan([bi], schedule="wavefront", block_t=4)
+    outs = execute(p, params, {0: xs}, interpret=True)
+    ref = sch.reference_stack(params[0], xs, "fused")
+    np.testing.assert_array_equal(np.asarray(outs[0]), np.asarray(ref))
+    n = pallas_launch_count(
+        lambda pr, x: execute(p, pr, {0: x}, interpret=True), params, xs)
+    assert n == p.launches < 2 * 3 * 4  # < 2·L·⌈T/bt⌉
+
+
+def test_bidirectional_collects_per_direction_state():
+    """collect_state for a bidirectional item returns the per-direction
+    end-of-walk states (fwd: exact t=T, bwd: exact t=0) instead of the
+    pre-ISSUE-5 None."""
+    bi, params, xs = _bi_setup(L=2, H=24, T=7)
+    _, states = execute(plan([bi]), params, {0: xs}, interpret=True,
                         collect_state=True)
-    assert states[0] is None
+    st = states[0]
+    assert set(st) == {"fwd", "bwd"}
+    # oracle: per-layer fused halves with return_state
+    y = xs
+    for l, layer in enumerate(params[0]["layers"]):
+        f, (hf, cf) = sch.run_layer_fused(layer["fwd"], y,
+                                          interpret=True, return_state=True)
+        b, (hb, cb) = sch.run_layer_fused(layer["bwd"], jnp.flip(y, axis=1),
+                                          interpret=True, return_state=True)
+        np.testing.assert_array_equal(np.asarray(st["fwd"]["h"][l]),
+                                      np.asarray(hf))
+        np.testing.assert_array_equal(np.asarray(st["bwd"]["h"][l]),
+                                      np.asarray(hb))
+        np.testing.assert_array_equal(np.asarray(st["fwd"]["c"][l]),
+                                      np.asarray(cf))
+        np.testing.assert_array_equal(np.asarray(st["bwd"]["c"][l]),
+                                      np.asarray(cb))
+        y = jnp.concatenate([f, jnp.flip(b, axis=1)], axis=-1)
+
+
+def test_bidirectional_rejects_init_state():
+    """The fwd/bwd walks start from opposite sequence ends — there is no
+    mid-stream resume point, so a seeded state must be a loud error."""
+    bi, params, xs = _bi_setup(L=2, H=24, T=5)
+    init = {0: {"h": jnp.zeros((2, 1, 24)), "c": jnp.zeros((2, 1, 24))}}
+    with pytest.raises(ValueError, match="bidirectional"):
+        execute(plan([bi]), params, {0: xs}, interpret=True,
+                init_state=init)
 
 
 def test_mixed_width_slot_is_exact_and_padded():
@@ -193,7 +246,7 @@ def test_mixed_width_slot_is_exact_and_padded():
                                       np.asarray(solo_st[i]["c"]))
 
 
-def test_bidirectional_gru_fallback_executes():
+def test_bidirectional_gru_packs_and_executes():
     it = WorkItem(uid=0, family="gru", B=1, T=6, H=24, L=2,
                   bidirectional=True)
     key = jax.random.PRNGKey(0)
@@ -207,7 +260,8 @@ def test_bidirectional_gru_fallback_executes():
     params = {0: {"layers": layers}}
     xs = jax.random.normal(jax.random.PRNGKey(1), (1, 6, 24)) * 0.5
     p = plan([it])
-    assert p.item(0).schedule == "per_layer"
+    assert p.item(0).schedule in ("wavefront", "fused")  # packed, not
+    assert not p.external                                # external
     out = execute(p, params, {0: xs}, interpret=True)
     # oracle: fwd/bwd reference unroll per layer
     y = xs

@@ -65,17 +65,90 @@ def test_all_cells_covered_exactly_once():
         assert len(cells) == len(set(cells)) == ip.item.L * ip.nk
 
 
-def test_rglru_and_bidirectional_fall_back():
+def test_rglru_falls_back_and_bidirectional_packs():
+    """rglru stays external (diagonal recurrence, per-layer scan); a
+    bidirectional item no longer falls back — its fwd/bwd cells enter the
+    packed interleaved timeline (ISSUE-5 retired the per-layer path)."""
     rg = WorkItem.from_config(get_config("recurrentgemma-2b"), T=8, uid=0)
     assert rg.family == "rglru"
     bi = WorkItem.from_config(EESEN, T=8, uid=1)
-    assert bi.bidirectional
+    assert bi.bidirectional and bi.dirs == 2
     lstm_it = WorkItem.from_config(lstm_config(64, layers=3), T=24, uid=2)
     p = plan([rg, bi, lstm_it])
-    assert set(p.external) == {0, 1}
+    assert set(p.external) == {0}
     assert p.item(0).naive_launches == rg.L
-    assert p.item(1).schedule == "per_layer"
-    assert p.item(1).naive_launches == 2 * bi.L
+    ip = p.item(1)
+    assert ip.schedule in ("wavefront", "fused")
+    cells = [c for s in p.slots for c in s.cells if c.uid == 1]
+    assert len(cells) == 2 * bi.L * ip.nk  # every (layer, chunk, dir) once
+    assert {c.direction for c in cells} == {"fwd", "bwd"}
+
+
+def _bi_item(L=3, T=12, B=1, uid=0, share=None):
+    import dataclasses
+
+    cfg = dataclasses.replace(lstm_config(64, layers=L),
+                              bidirectional=True)
+    return WorkItem.from_config(cfg, T=T, B=B, uid=uid, share=share)
+
+
+def test_bidirectional_launch_count_matches_interleaved_formula():
+    """The acceptance proof: an L-layer bidirectional prefill plans at
+    most 2·L·⌈T/bt⌉ launches (the per-direction-per-chunk count) —
+    strictly fewer except the nk=2 ragged boundary case, where every wave
+    splits — and exactly matches ``bidir_wavefront_launches``: L·nk
+    waves, one G-merged launch each, +2 unmerged waves per layer under
+    ragged T."""
+    from repro.dispatch.planner import bidir_wavefront_launches
+    from repro.kernels.common import cdiv
+
+    L = 3
+    for T, bt in ((12, 4), (14, 4), (7, 7), (5, 2), (5, 3)):
+        p = plan([_bi_item(L=L, T=T)], schedule="wavefront", block_t=bt)
+        ip = p.item(0)
+        nk = cdiv(T, ip.block_t)
+        assert p.launches == bidir_wavefront_launches(L, T, ip.block_t), \
+            (T, bt, p.describe())
+        assert p.launches <= 2 * L * nk
+        if not (nk == 2 and T % ip.block_t):  # the documented equality
+            assert p.launches < 2 * L * nk, (T, bt)
+        assert p.launches == ip.naive_launches
+    # divisible stripes G-merge every wave: exactly L·nk launches
+    assert plan([_bi_item(L=L, T=12)], schedule="wavefront",
+                block_t=4).launches == L * 3
+
+
+def test_bidirectional_interleaved_dependencies_respected():
+    """Execution order must satisfy the concat dependency: a layer-l cell
+    of chunk k runs only after BOTH directions of layer l-1 produced chunk
+    k, and after its own walk's previous chunk (fwd: k-1, bwd: k+1)."""
+    p = plan([_bi_item(L=3, T=14)], schedule="wavefront", block_t=4)
+    nk = p.item(0).nk
+    seen = set()
+    for s in p.slots:
+        for c in s.cells:
+            if c.layer > 0:
+                assert (c.layer - 1, c.chunk, "fwd") in seen, c
+                assert (c.layer - 1, c.chunk, "bwd") in seen, c
+            if c.direction == "fwd" and c.chunk > 0:
+                assert (c.layer, c.chunk - 1, "fwd") in seen, c
+            if c.direction == "bwd" and c.chunk < nk - 1:
+                assert (c.layer, c.chunk + 1, "bwd") in seen, c
+        seen.update((c.layer, c.chunk, c.direction) for c in s.cells)
+
+
+def test_bidirectional_cross_b_packs_but_never_merges_directions():
+    """share-equal bidirectional requests B-concat per (layer, chunk,
+    direction) row — fwd and bwd halves bind different U matrices, so they
+    may share a LAUNCH (two g rows) but never a row."""
+    items = [_bi_item(L=2, T=8, uid=i, share=0) for i in range(2)]
+    p = plan(items, schedule="wavefront", block_t=4)
+    solo = plan([items[0]], schedule="wavefront", block_t=4)
+    assert p.launches < 2 * solo.launches  # cross-request merge happened
+    for s in p.slots:
+        for grp in s.groups:
+            assert len({(c.layer, c.direction) for c in grp}) == 1
+    assert any(len(grp) == 2 for s in p.slots for grp in s.groups)
 
 
 def test_duplicate_uids_rejected():

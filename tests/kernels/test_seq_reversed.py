@@ -1,0 +1,141 @@
+"""Time-reversed sequence-kernel parity (ISSUE-5 satellite).
+
+The dispatcher's bidirectional bwd cells use *pre-launch reversal*: flip
+the hoisted xw stripe on the time axis, run the unchanged sequence kernel,
+flip the produced hs stripe back.  Two contracts are pinned here:
+
+1. a reversed-input ``lstm_seq``/``gru_seq`` walk matches the step-loop
+   oracle walking original time *descending* (fp32 and bf16, any T);
+2. the executor's chunked composition — descending chunk walk with state
+   chained across launches and exact remainder chunks — BIT-equals the
+   single-launch whole-T reversed walk (the exactness claim behind the
+   interleaved bidirectional wavefront).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from tests._hyp import given, settings, st
+
+from repro.kernels.gru_cell.ops import gru_seq
+from repro.kernels.gru_cell.ref import gru_step_ref
+from repro.kernels.lstm_cell.ops import lstm_seq
+from repro.kernels.lstm_cell.ref import lstm_cell_ref
+
+H = 40
+
+
+def _mk(B, T, dtype, seed=0, gates=4):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    U = (jax.random.normal(ks[0], (H, gates, H), jnp.float32) * 0.2
+         ).astype(dtype)
+    xw = jax.random.normal(ks[1], (B, T, gates, H), jnp.float32).astype(dtype)
+    h0 = (jax.random.normal(ks[2], (B, H), jnp.float32) * 0.5).astype(dtype)
+    c0 = jax.random.normal(ks[3], (B, H), jnp.float32) * 0.5
+    return U, xw, h0, c0
+
+
+def _rev_lstm_oracle(U4, xw, h0, c0):
+    """Step loop over original time DESCENDING (the bwd walk)."""
+    T = xw.shape[1]
+    h, c = h0, c0.astype(jnp.float32)
+    outs = [None] * T
+    for t in range(T - 1, -1, -1):
+        h, c = lstm_cell_ref(U4, xw[:, t], h, c)
+        outs[t] = h
+    return jnp.stack(outs, axis=1), h, c
+
+
+def _rev_gru_oracle(U3, xw, h0):
+    T = xw.shape[1]
+    h = h0
+    outs = [None] * T
+    for t in range(T - 1, -1, -1):
+        h = gru_step_ref(U3, xw[:, t], h)
+        outs[t] = h
+    return jnp.stack(outs, axis=1), h
+
+
+@settings(max_examples=10, deadline=None)
+@given(T=st.integers(1, 18), bt=st.sampled_from([1, 3, 4, 8]),
+       dtype=st.sampled_from(["float32", "bfloat16"]))
+def test_reversed_lstm_seq_matches_descending_step_loop(T, bt, dtype):
+    """flip ∘ lstm_seq ∘ flip == the descending step-loop oracle, ragged
+    T-stripe remainders (bt not dividing T) included."""
+    dt = jnp.dtype(dtype)
+    U4, xw, h0, c0 = _mk(2, T, dt, seed=T * 31 + bt)
+    hs, h_n, c_n = lstm_seq(U4, jnp.flip(xw, 1), h0, c0, block_t=bt,
+                            interpret=True)
+    hs = jnp.flip(hs, 1)
+    ref_hs, ref_h, ref_c = _rev_lstm_oracle(U4, xw, h0, c0)
+    atol = 1e-4 if dtype == "float32" else 2e-2
+    np.testing.assert_allclose(np.asarray(hs, np.float32),
+                               np.asarray(ref_hs, np.float32), atol=atol)
+    np.testing.assert_allclose(np.asarray(h_n, np.float32),
+                               np.asarray(ref_h, np.float32), atol=atol)
+    np.testing.assert_allclose(np.asarray(c_n), np.asarray(ref_c), atol=atol)
+
+
+@settings(max_examples=10, deadline=None)
+@given(T=st.integers(1, 18), bt=st.sampled_from([1, 3, 4, 8]),
+       dtype=st.sampled_from(["float32", "bfloat16"]))
+def test_reversed_gru_seq_matches_descending_step_loop(T, bt, dtype):
+    dt = jnp.dtype(dtype)
+    U3, xw, h0, _ = _mk(2, T, dt, seed=T * 17 + bt, gates=3)
+    hs, h_n = gru_seq(U3, jnp.flip(xw, 1), h0, block_t=bt, interpret=True)
+    hs = jnp.flip(hs, 1)
+    ref_hs, ref_h = _rev_gru_oracle(U3, xw, h0)
+    atol = 1e-4 if dtype == "float32" else 2e-2
+    np.testing.assert_allclose(np.asarray(hs, np.float32),
+                               np.asarray(ref_hs, np.float32), atol=atol)
+    np.testing.assert_allclose(np.asarray(h_n, np.float32),
+                               np.asarray(ref_h, np.float32), atol=atol)
+
+
+@settings(max_examples=10, deadline=None)
+@given(T=st.integers(1, 18), bt=st.sampled_from([1, 3, 4, 8]))
+def test_chunked_descending_lstm_walk_bit_equals_single_launch(T, bt):
+    """The executor's composition — per-chunk flip, state chained across
+    launches in descending chunk order, exact remainder chunk — is
+    BIT-identical to one whole-T reversed launch (fp32: the f32 state
+    round-trips exactly between chunk launches)."""
+    U4, xw, h0, c0 = _mk(2, T, jnp.float32, seed=T * 7 + bt)
+    one_hs, one_h, one_c = lstm_seq(U4, jnp.flip(xw, 1), h0, c0,
+                                    block_t=min(bt, T), interpret=True)
+    one_hs = jnp.flip(one_hs, 1)
+
+    nk = -(-T // bt)
+    h, c = h0, c0
+    outs = [None] * nk
+    for k in range(nk - 1, -1, -1):  # the bwd walk's own chunk order
+        sl = xw[:, k * bt:k * bt + bt]
+        hs, h, c = lstm_seq(U4, jnp.flip(sl, 1), h, c,
+                            block_t=sl.shape[1], interpret=True)
+        h = h.astype(h0.dtype)
+        outs[k] = jnp.flip(hs, 1)
+    np.testing.assert_array_equal(np.asarray(jnp.concatenate(outs, 1)),
+                                  np.asarray(one_hs))
+    np.testing.assert_array_equal(np.asarray(h), np.asarray(one_h))
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(one_c))
+
+
+@settings(max_examples=10, deadline=None)
+@given(T=st.integers(1, 18), bt=st.sampled_from([1, 3, 4, 8]))
+def test_chunked_descending_gru_walk_bit_equals_single_launch(T, bt):
+    U3, xw, h0, _ = _mk(2, T, jnp.float32, seed=T * 13 + bt, gates=3)
+    one_hs, one_h = gru_seq(U3, jnp.flip(xw, 1), h0, block_t=min(bt, T),
+                            interpret=True)
+    one_hs = jnp.flip(one_hs, 1)
+
+    nk = -(-T // bt)
+    h = h0
+    outs = [None] * nk
+    for k in range(nk - 1, -1, -1):
+        sl = xw[:, k * bt:k * bt + bt]
+        hs, h = gru_seq(U3, jnp.flip(sl, 1), h, block_t=sl.shape[1],
+                        interpret=True)
+        h = h.astype(h0.dtype)
+        outs[k] = jnp.flip(hs, 1)
+    np.testing.assert_array_equal(np.asarray(jnp.concatenate(outs, 1)),
+                                  np.asarray(one_hs))
+    np.testing.assert_array_equal(np.asarray(h), np.asarray(one_h))

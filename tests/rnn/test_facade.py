@@ -285,6 +285,76 @@ def test_2d_input_auto_batches():
 
 
 # ---------------------------------------------------------------------------
+# bidirectional stacks: interleaved wavefront through the facade (ISSUE-5)
+# ---------------------------------------------------------------------------
+
+
+def _bi_cfg(L=3, hidden=H):
+    return dataclasses.replace(lstm_config(hidden, layers=L),
+                               bidirectional=True, dtype="float32")
+
+
+def test_bidirectional_forward_bit_identical_and_launch_proof():
+    """The acceptance criterion end to end: compile().forward() on a
+    bidirectional stack is BIT-identical to reference_stack and plans
+    strictly fewer launches than 2·L·⌈T/bt⌉ — structurally proven on the
+    compiled facade, not just the planner."""
+    cfg, T, bt, L = _bi_cfg(L=3), 12, 4, 3
+    cs = rnn.compile(cfg, rnn.ExecutionPolicy(
+        schedule="wavefront", block_t=bt, interpret=True))
+    xs = _xs(B=2, T=T)
+    ys = cs.forward(xs)
+    assert ys.shape == (2, T, 2 * H)
+    ref = sch.reference_stack(cs.params, xs, "fused")
+    np.testing.assert_array_equal(np.asarray(ys), np.asarray(ref))
+    np.testing.assert_allclose(
+        np.asarray(ys), np.asarray(sch.reference_stack(cs.params, xs)),
+        atol=1e-4)
+    p = cs.plan
+    nk = p.item(0).nk
+    assert p.launches < 2 * L * nk == 2 * L * (T // bt)
+    n = pallas_launch_count(
+        lambda pr, x: rnn.CompiledStack(pr, cs.policy).forward(x),
+        cs.params, xs)
+    assert n == p.launches
+    # every slot's fwd/bwd pair merged: one G=2 launch per wave here
+    assert all(s.g == 2 for s in p.slots) and len(p.slots) == L * nk
+
+
+def test_bidirectional_prefill_returns_per_direction_state():
+    cfg = _bi_cfg(L=2)
+    cs = rnn.compile(cfg, POL)
+    xs = _xs(B=1, T=9)
+    ys, st = cs.prefill(xs)
+    assert set(st) == {"fwd", "bwd"}
+    assert st["fwd"]["h"].shape == (2, 1, H)
+    assert st["bwd"]["c"].shape == (2, 1, H)
+    np.testing.assert_array_equal(np.asarray(ys),
+                                  np.asarray(cs.forward(xs)))
+
+
+def test_bidirectional_decode_raises_with_pointer():
+    cfg = _bi_cfg(L=2)
+    cs = rnn.compile(cfg, POL)
+    with pytest.raises(ValueError, match=r"forward\(\)/prefill\(\)"):
+        cs.decode(jnp.zeros((1, 1, H)), {"h": jnp.zeros((2, 1, H))})
+
+
+def test_plan_cache_keys_carry_direction_info():
+    """ISSUE-5: cache keys distinguish uni and bidirectional timelines
+    explicitly (not just by stack identity)."""
+    uni = rnn.compile(init_lstm_stack(jax.random.PRNGKey(0),
+                                      lstm_config(H, layers=2), jnp.float32),
+                      POL)
+    bi = rnn.compile(_bi_cfg(L=2), POL)
+    uni.lower(1, 8)
+    bi.lower(1, 8)
+    (uk,), (bk,) = uni._plans.keys(), bi._plans.keys()
+    assert uk != bk
+    assert "uni" in uk and "bi" in bk
+
+
+# ---------------------------------------------------------------------------
 # clear errors + the repro package facade (ISSUE-4 satellites)
 # ---------------------------------------------------------------------------
 

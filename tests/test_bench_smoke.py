@@ -70,3 +70,11 @@ def test_dispatch_suite_writes_json(tmp_path):
     # kernels than the equal-signature unpacked plan
     assert (launches("dispatch/cross_b_packed_prefill")
             < launches("dispatch/cross_b_unpacked_prefill"))
+    # the bidir claim (ISSUE-5), measured: the interleaved fwd/bwd
+    # wavefront launches strictly fewer kernels than the retired per-layer
+    # fused fallback on the same bidirectional admission wave (bit-equal
+    # gated inside the bench before emission)
+    assert (launches("dispatch/bidir_interleaved_prefill")
+            < launches("dispatch/bidir_per_layer_fallback"))
+    assert "bidirectional" in rows["dispatch/bidir_interleaved_prefill"][
+        "derived"]
