@@ -2,10 +2,17 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test ci deprecations api-demo bench-kernels bench-dispatch bench
+.PHONY: test ci chaos deprecations api-demo bench-kernels bench-dispatch bench
 
 test:
 	$(PY) -m pytest -x -q
+
+# Fault-injection (chaos) suite only: guarded execution ladder, poisoned-
+# slot quarantine, deadline retirement (tests marked @pytest.mark.chaos).
+# Included in `make test` too — this target is the fast failure-semantics
+# gate CI runs by name.
+chaos:
+	$(PY) -m pytest -x -q -m chaos
 
 # Deprecation gate: the FULL tier-1 suite, erroring on any
 # DeprecationWarning ATTRIBUTED TO a repro.* module — i.e. repro-internal

@@ -115,6 +115,7 @@ def dispatch(emit, repeats: int = 3) -> None:
     _cross_b_rows(emit, repeats)
     _facade_rows(emit, repeats)
     _bidir_rows(emit, repeats)
+    _fault_rows(emit, repeats)
 
 
 def _decode_rows(emit, repeats: int = 3) -> None:
@@ -316,3 +317,49 @@ def _bidir_rows(emit, repeats: int = 3) -> None:
          _time(fallback, params, inputs, repeat=repeats),
          f"{shapes} launches={n_fallback} (retired: 2 per layer per "
          "request)")
+
+
+def _fault_rows(emit, repeats: int = 3) -> None:
+    """ISSUE-6: the guarded execution ladder, priced.  The same forward
+    under (a) the healthy fused path, (b) every slot's fused launch
+    failing -> per-step re-execution, (c) fused AND per-step failing ->
+    pure-jnp reference — the degraded serving modes a faulty device would
+    run in.  Recovery is oracle-equal gated (against the healthy outputs)
+    and the degradation counters are asserted before anything is
+    emitted."""
+    cfg, T = lstm_config(64, layers=3), 24
+    stack = init_lstm_stack(jax.random.PRNGKey(0), cfg, jnp.float32)
+    xs = jax.random.normal(jax.random.PRNGKey(300), (1, T, 64)) * 0.5
+
+    pol = rnn.ExecutionPolicy(interpret=True, on_fault="fallback")
+    cs = rnn.compile(stack, pol)
+    base = np.asarray(cs.forward(xs))
+    n_slots = len(cs.plan.slots)
+
+    def degraded(through_level):
+        d = rnn.compile(stack, pol)
+        # once=False: EVERY call's launches fail through the level, so the
+        # timed repeats all run degraded (the soak shape, not one blip)
+        d.fault.arm(range(n_slots), through_level=through_level, once=False)
+        return d
+
+    per_step, reference = degraded(0), degraded(1)
+    for d in (per_step, reference):
+        np.testing.assert_allclose(np.asarray(d.forward(xs)), base,
+                                   atol=1e-5)
+    assert per_step.stats.fallback_level == 1
+    assert reference.stats.fallback_level == 2
+    assert per_step.stats.degraded_launches == n_slots
+
+    shapes = f"H{cfg.lstm_hidden}L{cfg.n_layers}T{T}"
+    emit("dispatch/fault_healthy_forward",
+         _time(cs.forward, xs, repeat=repeats),
+         f"{shapes} slots={n_slots} fallback=fused (ladder level 0)")
+    emit("dispatch/fault_per_step_fallback",
+         _time(per_step.forward, xs, repeat=repeats),
+         f"{shapes} slots={n_slots} fallback=per_step "
+         f"degraded={n_slots}/call")
+    emit("dispatch/fault_reference_fallback",
+         _time(reference.forward, xs, repeat=repeats),
+         f"{shapes} slots={n_slots} fallback=reference "
+         f"degraded={n_slots}/call")

@@ -31,15 +31,33 @@ Numerics: the per-cell math inside a G-batched launch is identical to the
 G=1 launch (the kernel grid walks cells independently; padded rows are
 masked no-ops), so a packed plan's outputs match per-item execution
 exactly — property-tested in tests/dispatch/.
+
+Fault isolation (ISSUE-6): every packed/chained launch runs behind a
+guarded execution ladder.  Under ``on_fault="fallback"`` a launch that
+raises (or that a ``runtime.errors.FaultInjector`` makes raise) re-executes
+per-step — the same kernels at block_t=1, one launch per timestep (per
+*layer* for chained decode slots) — and, failing that, through the
+non-deprecated pure-jnp reference (``kernels.*.ref``), which is
+oracle-equal by construction and cannot fail on a kernel launch.  Each
+degradation is recorded in the caller's ``ExecutionReport``
+(slot index, deepest rung, cause); ``on_fault="raise"`` preserves the
+pre-ISSUE-6 fail-fast behaviour, wrapping the failure in a structured
+``LaunchError`` naming the slot and the uids that shared the launch.
+``check_finite`` additionally verifies each launch's recurrent state and
+raises ``NonFiniteStateError`` naming exactly the poisoned items (a NaN is
+deterministic — no rung can fix it — so this raises under either mode).
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 
 from repro.dispatch.planner import DispatchPlan, ItemPlan
 from repro.dispatch.workitem import GATES
+from repro.runtime.errors import (FALLBACK_LEVELS, ExecutionReport,
+                                  FaultInjector, LaunchError,
+                                  NonFiniteStateError)
 
 
 def _hoist(layer_params, src, gates: int):
@@ -56,7 +74,11 @@ def execute(plan: DispatchPlan, params: Dict[int, dict],
             interpret: Optional[bool] = None,
             collect_state: bool = False,
             init_state: Optional[Dict[int, dict]] = None,
-            prepared: Optional[Dict[int, dict]] = None):
+            prepared: Optional[Dict[int, dict]] = None,
+            on_fault: str = "raise",
+            check_finite: bool = False,
+            inject: Optional[FaultInjector] = None,
+            report: Optional[ExecutionReport] = None):
     """Run ``plan``.  params[uid] = stack params ({"layers": [...]}),
     inputs[uid] = xs (B, T, X).  Returns outputs {uid: (B, T, H)} —
     (B, T, 2H) for bidirectional items (fwd‖bwd concat) — or
@@ -86,9 +108,19 @@ def execute(plan: DispatchPlan, params: Dict[int, dict],
     through the per-layer fused path — the only surface that returns exact
     state — so for those items the plan's per_step/per_layer launch
     accounting describes the stateless execution, not this one.
+
+    ``on_fault``/``check_finite``/``inject``/``report`` drive the guarded
+    execution ladder (module doc): "fallback" re-executes a failed
+    packed/chained launch per-step, then through the pure-jnp reference,
+    recording each degradation in ``report``; "raise" fails fast with a
+    structured ``LaunchError``.  ``check_finite`` raises
+    ``NonFiniteStateError`` naming exactly the items whose post-launch
+    recurrent state went NaN/Inf.  ``inject`` is the test-time fault hook
+    (``runtime.errors.FaultInjector``).
     """
-    from repro.kernels.gru_cell.ops import gru_seq
-    from repro.kernels.lstm_cell.ops import lstm_seq
+    if on_fault not in ("raise", "fallback"):
+        raise ValueError(f"execute: on_fault={on_fault!r} invalid; "
+                         "allowed: raise, fallback")
 
     # fail fast, before any work: a plan may legitimately carry plan-only
     # items (ItemPlan.executable == False) for admission pricing — callers
@@ -182,7 +214,9 @@ def execute(plan: DispatchPlan, params: Dict[int, dict],
     for slot in plan.slots:
         if slot.chained:
             _run_chained_slot(slot, params, inputs, live,
-                              interpret=interpret, prepared=prepared)
+                              interpret=interpret, prepared=prepared,
+                              on_fault=on_fault, check_finite=check_finite,
+                              inject=inject, report=report)
             continue
         gates = GATES[slot.family]
         xws, us, hs, cs = [], [], [], []
@@ -212,18 +246,16 @@ def execute(plan: DispatchPlan, params: Dict[int, dict],
         xw = jnp.stack(xws)          # (G, B, bt, gates, H)
         U = jnp.stack(us)            # (G, H, gates, H)
         h0 = jnp.stack(hs)           # (G, B, H)
+        c0 = jnp.stack(cs) if slot.family == "lstm" else None
         b_valid = (jnp.asarray(slot.group_b, jnp.int32)
                    if any(b < slot.B for b in slot.group_b) else None)
-        if slot.family == "lstm":
-            out, h_n, c_n = lstm_seq(U, xw, h0, jnp.stack(cs),
-                                     b_valid=b_valid,
-                                     block_t=slot.chunk_len,
-                                     interpret=interpret)
-        else:
-            out, h_n = gru_seq(U, xw, h0, b_valid=b_valid,
-                               block_t=slot.chunk_len, interpret=interpret)
-            c_n = None
+        uids = sorted({c.uid for grp in slot.groups for c in grp})
+        out, h_n, c_n = _guarded_launch(
+            slot.index, uids,
+            _seq_ladder(slot, U, xw, h0, c0, b_valid, interpret=interpret),
+            on_fault=on_fault, inject=inject, report=report)
 
+        bad: List[int] = []
         for g, grp in enumerate(slot.groups):
             off = 0
             for cell in grp:
@@ -233,6 +265,10 @@ def execute(plan: DispatchPlan, params: Dict[int, dict],
                 st["h"][key] = h_n[g, off:off + nb].astype(h0.dtype)
                 if c_n is not None:
                     st["c"][key] = c_n[g, off:off + nb]
+                if check_finite and not _rows_finite(
+                        h_n[g, off:off + nb],
+                        None if c_n is None else c_n[g, off:off + nb]):
+                    bad.append(cell.uid)
                 chunk = out[g, off:off + nb].astype(inputs[cell.uid].dtype)
                 if cell.direction == "bwd":
                     # the kernel walked the chunk in reversed time; store
@@ -240,6 +276,12 @@ def execute(plan: DispatchPlan, params: Dict[int, dict],
                     chunk = jnp.flip(chunk, axis=1)
                 st["outs"][key][cell.chunk] = chunk
                 off += nb
+        if bad:
+            bad = sorted(set(bad))
+            raise NonFiniteStateError(
+                f"non-finite recurrent state after slot {slot.index} "
+                f"(uids {bad})", uids=bad, slot=slot.index,
+                where="slot state")
 
     for uid, st in live.items():
         it = st["plan"].item
@@ -258,6 +300,98 @@ def execute(plan: DispatchPlan, params: Dict[int, dict],
                 states[uid] = _dir_state(st, it, "fwd")
 
     return (outputs, states) if collect_state else outputs
+
+
+# ---------------------------------------------------------------------------
+# guarded execution ladder
+# ---------------------------------------------------------------------------
+
+
+def _guarded_launch(slot_index: int, uids, ladder, *, on_fault: str,
+                    inject: Optional[FaultInjector],
+                    report: Optional[ExecutionReport]):
+    """Run one slot's launch down the guarded execution ladder.
+
+    ``ladder`` holds one thunk per ``FALLBACK_LEVELS`` rung, shallowest
+    first.  Any exception a rung raises (including an injected one) is
+    wrapped in a structured ``LaunchError``; under ``on_fault="fallback"``
+    the next rung is tried, and a recovery at rung > 0 is recorded in
+    ``report``.  The last rung is the pure-jnp reference — it cannot fail
+    on a kernel launch, so under "fallback" only an armed-through-reference
+    ``FaultInjector`` makes the error escape."""
+    cause = None
+    last = len(ladder) - 1
+    for level, attempt in enumerate(ladder):
+        try:
+            if inject is not None:
+                inject.maybe_fail(slot_index, level, uids)
+            result = attempt()
+        except Exception as err:  # noqa: BLE001 — the ladder IS the boundary
+            fault = err if isinstance(err, LaunchError) else LaunchError(
+                f"launch failed: slot {slot_index} at ladder level "
+                f"{FALLBACK_LEVELS[level]!r} "
+                f"(uids {sorted(set(uids))}): {err!r}",
+                uids=uids, slot=slot_index, level=FALLBACK_LEVELS[level])
+            if on_fault != "fallback" or level == last:
+                raise fault from err
+            cause = fault
+            continue
+        if level > 0 and report is not None:
+            report.record(slot_index, level, cause)
+        return result
+    raise AssertionError("unreachable: ladder exhausted without raising")
+
+
+def _seq_ladder(slot, U, xw, h0, c0, b_valid, *, interpret):
+    """The three launch strategies for a packed sequence slot, shallowest
+    first: the planned fused launch; per-step — the same kernels at
+    block_t=1, one launch per timestep; and the pure-jnp reference scan.
+    All three consume the identical pre-hoisted ``xw`` (bwd cells arrive
+    pre-flipped), so their outputs agree to the kernel's own tolerance and
+    the scatter below is rung-agnostic."""
+    from repro.kernels.gru_cell.ops import gru_seq
+    from repro.kernels.gru_cell.ref import gru_seq_ref
+    from repro.kernels.lstm_cell.ops import lstm_seq
+    from repro.kernels.lstm_cell.ref import lstm_seq_ref
+
+    lstm = slot.family == "lstm"
+
+    def fused():
+        if lstm:
+            return lstm_seq(U, xw, h0, c0, b_valid=b_valid,
+                            block_t=slot.chunk_len, interpret=interpret)
+        out, h_n = gru_seq(U, xw, h0, b_valid=b_valid,
+                           block_t=slot.chunk_len, interpret=interpret)
+        return out, h_n, None
+
+    def per_step():
+        outs, h, c = [], h0, c0
+        for t in range(slot.chunk_len):
+            xw_t = xw[:, :, t:t + 1]
+            if lstm:
+                o, h, c = lstm_seq(U, xw_t, h, c, b_valid=b_valid,
+                                   block_t=1, interpret=interpret)
+            else:
+                o, h = gru_seq(U, xw_t, h, b_valid=b_valid, block_t=1,
+                               interpret=interpret)
+            outs.append(o)
+        return jnp.concatenate(outs, axis=2), h, (c if lstm else None)
+
+    def reference():
+        if lstm:
+            return lstm_seq_ref(U, xw, h0, c0)
+        out, h_n = gru_seq_ref(U, xw, h0)
+        return out, h_n, None
+
+    return [fused, per_step, reference]
+
+
+def _rows_finite(h_rows, c_rows=None) -> bool:
+    """True when one cell's slice of post-launch state is all-finite."""
+    ok = bool(jnp.isfinite(h_rows).all())
+    if ok and c_rows is not None:
+        ok = bool(jnp.isfinite(c_rows).all())
+    return ok
 
 
 def _dir_state(st, item, direction: str) -> dict:
@@ -347,7 +481,10 @@ def prepare_decode_stack(stack_params: dict, family: str) -> dict:
 
 
 def _run_chained_slot(slot, params, inputs, live, *, interpret=None,
-                      prepared=None):
+                      prepared=None, on_fault: str = "raise",
+                      check_finite: bool = False,
+                      inject: Optional[FaultInjector] = None,
+                      report: Optional[ExecutionReport] = None):
     """Execute a chained decode slot: ONE launch for a whole T=1 tick.
 
     The slot's groups are the L serially dependent layer cells, each the
@@ -356,10 +493,11 @@ def _run_chained_slot(slot, params, inputs, live, *, interpret=None,
     through VMEM scratch (see kernels.*.lstm_decode/gru_decode).  Layer
     0's input GEMM is hoisted here, inside the slot (it exists before
     launch); deeper layers' input GEMMs run in-kernel off the chain.
-    """
-    from repro.kernels.gru_cell.ops import gru_decode
-    from repro.kernels.lstm_cell.ops import lstm_decode
 
+    Runs behind the same guarded ladder as sequence slots — the per_step
+    rung here is per-*layer*: L separate T=1 sequence-kernel launches
+    chaining the inter-layer value on the host.
+    """
     gates = GATES[slot.family]
     row_cells = slot.groups[0]      # request row order, fixed across layers
     lead_uid = row_cells[0].uid
@@ -378,16 +516,24 @@ def _run_chained_slot(slot, params, inputs, live, *, interpret=None,
         c0 = jnp.stack([_cat_pad([live[c.uid]["c"][(l, "fwd")]
                                   for c in row_cells],
                                  slot.B) for l in range(L)])
-        h_n, c_n = lstm_decode(xw0, Ws, bs, Us, h0, c0, interpret=interpret)
     else:
-        h_n = gru_decode(xw0, Ws, bs, Us, h0, interpret=interpret)
-        c_n = None
+        c0 = None
+    uids = sorted({c.uid for c in row_cells})
+    h_n, c_n = _guarded_launch(
+        slot.index, uids,
+        _chained_ladder(slot, xw0, Ws, bs, Us, h0, c0, interpret=interpret),
+        on_fault=on_fault, inject=inject, report=report)
 
     off = 0
+    bad: List[int] = []
     for cell in row_cells:
         st = live[cell.uid]
         nb = st["plan"].item.B
         dtype = inputs[cell.uid].dtype
+        if check_finite and not _rows_finite(
+                h_n[:, off:off + nb],
+                None if c_n is None else c_n[:, off:off + nb]):
+            bad.append(cell.uid)
         for l in range(L):
             st["h"][(l, "fwd")] = h_n[l, off:off + nb].astype(h0.dtype)
             if c_n is not None:
@@ -396,6 +542,62 @@ def _run_chained_slot(slot, params, inputs, live, *, interpret=None,
             st["outs"][(l, "fwd")][0] = \
                 h_n[l, off:off + nb, None].astype(dtype)
         off += nb
+    if bad:
+        bad = sorted(set(bad))
+        raise NonFiniteStateError(
+            f"non-finite recurrent state after chained slot {slot.index} "
+            f"(uids {bad})", uids=bad, slot=slot.index, where="decode tick")
+
+
+def _chained_ladder(slot, xw0, Ws, bs, Us, h0, c0, *, interpret):
+    """The three launch strategies for a chained T=1 decode slot: the
+    planned single decode-kernel launch; per-layer — L separate T=1
+    sequence-kernel launches with the inter-layer value (and its input
+    GEMM) chained on the host; and the pure-jnp reference cells walked the
+    same way.  All return ((L,B,H) h_n, (L,B,H) c_n | None)."""
+    from repro.kernels.gru_cell.ops import gru_decode, gru_seq
+    from repro.kernels.gru_cell.ref import gru_step_ref
+    from repro.kernels.lstm_cell.ops import lstm_decode, lstm_seq
+    from repro.kernels.lstm_cell.ref import lstm_cell_ref
+
+    lstm = slot.family == "lstm"
+    L = h0.shape[0]
+
+    def fused():
+        if lstm:
+            return lstm_decode(xw0, Ws, bs, Us, h0, c0, interpret=interpret)
+        return gru_decode(xw0, Ws, bs, Us, h0, interpret=interpret), None
+
+    def chain(step):
+        # walk the layer chain on the host: layer l>0's input half is the
+        # previous layer's fresh h through that layer's input GEMM
+        hs, cs = [], []
+        xw_t = xw0
+        for l in range(L):
+            if l:
+                xw_t = (jnp.einsum("bh,hgj->bgj", hs[-1], Ws[l])
+                        + bs[l]).astype(xw0.dtype)
+            h, c = step(l, xw_t)
+            hs.append(h)
+            cs.append(c)
+        return jnp.stack(hs), (jnp.stack(cs) if lstm else None)
+
+    def per_layer(l, xw_t):
+        if lstm:
+            _, h, c = lstm_seq(Us[l][None], xw_t[None, :, None],
+                               h0[l][None], c0[l][None],
+                               block_t=1, interpret=interpret)
+            return h[0], c[0]
+        _, h = gru_seq(Us[l][None], xw_t[None, :, None], h0[l][None],
+                       block_t=1, interpret=interpret)
+        return h[0], None
+
+    def reference(l, xw_t):
+        if lstm:
+            return lstm_cell_ref(Us[l], xw_t, h0[l], c0[l])
+        return gru_step_ref(Us[l], xw_t, h0[l]), None
+
+    return [fused, lambda: chain(per_layer), lambda: chain(reference)]
 
 
 def _run_reference(stack, xs, schedule, *, interpret=None,

@@ -43,6 +43,7 @@ from repro.core.schedules import stack_families
 from repro.dispatch import (DispatchPlan, WorkItem, execute, plan,
                             plan_decode, prepare_decode_stack)
 from repro.rnn.policy import ExecutionPolicy
+from repro.runtime.errors import ExecutionReport, FaultInjector
 
 
 @dataclasses.dataclass
@@ -51,7 +52,15 @@ class StackStats:
 
     ``launches``/``est_cycles`` include decode ticks; ``plans_built``
     counts plan-cache misses (flat counters across steady-state reuse are
-    the plan-cache proof the serving tests assert)."""
+    the plan-cache proof the serving tests assert).
+
+    ``degraded_launches`` counts slots the guarded execution ladder had to
+    re-execute below their planned rung (policy ``on_fault="fallback"``);
+    ``fallback_level`` is the deepest rung ever used (index into
+    ``runtime.errors.FALLBACK_LEVELS``: 0 planned, 1 per-step, 2 pure-jnp
+    reference); ``faults`` is the human-readable fault trail.  All three
+    stay zero/empty on a healthy stack — they are the degradation signal
+    the serving layer watches."""
 
     forward_calls: int = 0
     decode_calls: int = 0
@@ -60,6 +69,9 @@ class StackStats:
     plans_built: int = 0
     decode_launches: int = 0
     decode_plans_built: int = 0
+    degraded_launches: int = 0
+    fallback_level: int = 0
+    faults: List[str] = dataclasses.field(default_factory=list)
 
 
 def _as_policy(policy) -> ExecutionPolicy:
@@ -157,6 +169,9 @@ class CompiledStack:
                 f"CompiledStack: layers must share one hidden width, got "
                 f"{sorted(widths)}")
         self.stats = StackStats()
+        #: test/chaos hook: arm with plan slot indices to make launches
+        #: raise (see runtime.errors.FaultInjector); disarmed = no-op
+        self.fault = FaultInjector()
         self.last_decode_plan: Optional[DispatchPlan] = None
         self._last_plan: Optional[DispatchPlan] = None
         self._plans: Dict[tuple, DispatchPlan] = {}
@@ -244,9 +259,24 @@ class CompiledStack:
             xs = xs.astype(self.policy.dtype)
         return xs, squeeze
 
-    def _account(self, p: DispatchPlan, decode: bool = False) -> None:
+    def _guard(self) -> Tuple[ExecutionReport, dict]:
+        """Per-call guarded-ladder kwargs for execute(): the policy's fault
+        knobs, this stack's injector, and a fresh degradation report that
+        ``_account`` folds into ``.stats`` after a successful call."""
+        rep = ExecutionReport()
+        return rep, {"on_fault": self.policy.on_fault,
+                     "check_finite": self.policy.check_finite,
+                     "inject": self.fault, "report": rep}
+
+    def _account(self, p: DispatchPlan, decode: bool = False,
+                 report: Optional[ExecutionReport] = None) -> None:
         self.stats.launches += p.launches
         self.stats.est_cycles += p.est_cycles
+        if report is not None and report.degraded_launches:
+            self.stats.degraded_launches += report.degraded_launches
+            self.stats.fallback_level = max(self.stats.fallback_level,
+                                            report.fallback_level)
+            self.stats.faults.extend(report.faults)
         if decode:
             self.stats.decode_calls += 1
             self.stats.decode_launches += p.launches
@@ -264,9 +294,10 @@ class CompiledStack:
         if T == 0:
             raise ValueError("CompiledStack.forward: T=0 sequence")
         p = self.lower(B, T, str(xs.dtype))
+        rep, guard = self._guard()
         outs = execute(p, {0: self.params}, {0: xs},
-                       interpret=self.policy.interpret)
-        self._account(p)
+                       interpret=self.policy.interpret, **guard)
+        self._account(p, report=rep)
         ys = outs[0]
         return ys[0] if squeeze else ys
 
@@ -313,10 +344,11 @@ class CompiledStack:
         p = self._lower_many(
             tuple((x.shape[0], x.shape[1], str(x.dtype))
                   for x in inputs.values()), tuple(prios))
+        rep, guard = self._guard()
         outs, states = execute(p, {i: self.params for i in inputs}, inputs,
                                interpret=self.policy.interpret,
-                               collect_state=True)
-        self._account(p)
+                               collect_state=True, **guard)
+        self._account(p, report=rep)
         res = []
         for i, (_, squeeze) in enumerate(prepped):
             ys = outs[i][0] if squeeze else outs[i]
@@ -373,11 +405,12 @@ class CompiledStack:
                 cross_b=self.policy.packing, schedule="wavefront",
                 block_t=1))
             prepared = None
+        rep, guard = self._guard()
         outs, states = execute(p, {0: self.params}, {0: x_t},
                                interpret=self.policy.interpret,
                                collect_state=True, init_state={0: state},
-                               prepared=prepared)
-        self._account(p, decode=True)
+                               prepared=prepared, **guard)
+        self._account(p, decode=True, report=rep)
         return outs[0], states[0]
 
     # ------------------------------------------------------------------
@@ -395,6 +428,11 @@ class CompiledStack:
             f"est {s.est_cycles:.0f}cy",
             f"  plan cache: {len(self._plans)} shapes",
         ]
+        if s.degraded_launches:
+            from repro.runtime.errors import FALLBACK_LEVELS
+            lines.append(
+                f"  DEGRADED: {s.degraded_launches} launches fell back "
+                f"(deepest rung: {FALLBACK_LEVELS[s.fallback_level]})")
         if self._last_plan is not None:
             lines.append("  last plan:")
             lines += ["    " + ln

@@ -26,6 +26,13 @@ SCHEDULES = ("auto", "wavefront", "fused", "per_step",
 
 DTYPES = ("float32", "bfloat16", "float16")
 
+#: "raise" = fail fast (pre-ISSUE-6 behaviour): the first launch failure
+#: unwinds the caller.  "fallback" = the guarded execution ladder: a failed
+#: fused/chained launch re-executes per-step and, failing that, through the
+#: non-deprecated pure-jnp reference (oracle-equal by construction), with
+#: the degradation recorded in ``CompiledStack.stats``.
+ON_FAULT = ("raise", "fallback")
+
 
 def _bad(field: str, value, allowed) -> ValueError:
     return ValueError(
@@ -49,6 +56,14 @@ class ExecutionPolicy:
                its own launch row; the benchmark baseline).
     macs:      planner tile-engine budget (the paper's K-width exploration
                space; DEFAULT_MACS = 16K, the paper's reference design).
+    on_fault:  "raise" (fail fast) or "fallback" (guarded execution
+               ladder: failed launches re-execute per-step, then through
+               the pure-jnp reference, recorded in ``.stats`` — see
+               ``ON_FAULT``).
+    check_finite: verify each launch's recurrent state is finite and raise
+               a structured ``NonFiniteStateError`` naming the poisoned
+               items (fallback cannot fix a NaN — it re-derives
+               deterministically — so this raises under either on_fault).
     """
 
     schedule: str = "auto"
@@ -57,6 +72,8 @@ class ExecutionPolicy:
     dtype: Optional[str] = None
     packing: bool = True
     macs: int = DEFAULT_MACS
+    on_fault: str = "raise"
+    check_finite: bool = False
 
     def __post_init__(self):
         if self.schedule not in SCHEDULES:
@@ -74,9 +91,15 @@ class ExecutionPolicy:
         if (not isinstance(self.macs, int) or isinstance(self.macs, bool)
                 or self.macs < 1):
             raise _bad("macs", self.macs, ("a positive int (MAC budget)",))
+        if self.on_fault not in ON_FAULT:
+            raise _bad("on_fault", self.on_fault, ON_FAULT)
+        if not isinstance(self.check_finite, bool):
+            raise _bad("check_finite", self.check_finite, (True, False))
 
     def describe(self) -> str:
         return (f"ExecutionPolicy(schedule={self.schedule}, "
                 f"block_t={self.block_t or 'auto'}, "
                 f"interpret={self.interpret}, dtype={self.dtype or 'keep'}, "
-                f"packing={self.packing}, macs={self.macs})")
+                f"packing={self.packing}, macs={self.macs}, "
+                f"on_fault={self.on_fault}, "
+                f"check_finite={self.check_finite})")

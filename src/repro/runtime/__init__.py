@@ -1,1 +1,5 @@
+from repro.runtime.errors import (  # noqa: F401
+    FALLBACK_LEVELS, ExecutionReport, FaultInjector, LaunchError,
+    NonFiniteStateError, PlanRejected, QueueFull, RequestTimeout,
+    ServingFault)
 from repro.runtime.ft import FTConfig, StragglerWatchdog, TrainLoop  # noqa: F401

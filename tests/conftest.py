@@ -12,6 +12,13 @@ if SRC not in sys.path:
     sys.path.insert(0, SRC)
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "chaos: fault-injection suite (guarded ladder, quarantine, "
+        "deadlines) — run via `make chaos` or `-m chaos`")
+
+
 @pytest.fixture(scope="session")
 def rng_key():
     return jax.random.PRNGKey(0)

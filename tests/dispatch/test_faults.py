@@ -1,0 +1,320 @@
+"""Fault-injection (chaos) suite — ISSUE-6 acceptance.
+
+Proves isolation end-to-end: with one poisoned/failed request in a packed
+wave, every co-batched request completes bit-identically to the fault-free
+run; the faulty request surfaces a structured ``status != "ok"``
+completion; ``CompiledStack.stats`` reports the degraded/fallback
+launches; and ``on_fault="raise"`` preserves fail-fast.  Run alone via
+``make chaos`` (pytest marker ``chaos``)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.sharp_lstm import lstm_config
+from repro.core import schedules as sch
+from repro.models.layers.lstm import init_lstm_stack
+from repro.rnn import (ExecutionPolicy, LaunchError, NonFiniteStateError,
+                       QueueFull, RequestTimeout, compile as rnn_compile)
+from repro.serving import RecurrentRequest, RecurrentServingEngine
+
+pytestmark = pytest.mark.chaos
+
+CFG = lstm_config(32, layers=2)
+
+
+def _params():
+    return init_lstm_stack(jax.random.PRNGKey(0), CFG, jnp.float32)
+
+
+def _xs(B=2, T=6, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((B, T, 32)), jnp.float32) * 0.5
+
+
+def _engine(max_batch=3, **kw):
+    return RecurrentServingEngine(CFG, _params(), max_batch=max_batch,
+                                  interpret=True, **kw)
+
+
+def _prompts(lengths, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.standard_normal((t, 32)).astype(np.float32) * 0.5
+            for t in lengths]
+
+
+# ---------------------------------------------------------------------------
+# guarded execution ladder (CompiledStack / executor)
+# ---------------------------------------------------------------------------
+
+
+def test_injected_fault_recovers_per_step_and_is_recorded():
+    xs = _xs()
+    healthy = rnn_compile(_params(), ExecutionPolicy(interpret=True))
+    base = np.asarray(healthy.forward(xs))
+
+    cs = rnn_compile(_params(),
+                     ExecutionPolicy(interpret=True, on_fault="fallback"))
+    cs.fault.arm([0])  # fused attempt of slot 0 raises; per-step recovers
+    out = np.asarray(cs.forward(xs))
+    np.testing.assert_allclose(base, out, atol=1e-5)
+    assert cs.stats.degraded_launches == 1
+    assert cs.stats.fallback_level == 1  # per_step
+    assert cs.fault.fired == [(0, 0)]
+    assert "fell back" in cs.stats.faults[0]
+    assert "DEGRADED" in cs.describe()
+
+    # healthy stacks report zero degradation
+    assert healthy.stats.degraded_launches == 0
+    assert healthy.stats.fallback_level == 0 and not healthy.stats.faults
+
+
+def test_forced_reference_fallback_is_oracle_equal():
+    xs = _xs()
+    params = _params()
+    cs = rnn_compile(params,
+                     ExecutionPolicy(interpret=True, on_fault="fallback"))
+    cs.fault.arm([0], through_level=1)  # fused AND per-step fail
+    out = np.asarray(cs.forward(xs))
+    oracle = np.asarray(sch.reference_stack(params, xs))
+    np.testing.assert_allclose(out, oracle, atol=1e-4)
+    assert cs.stats.fallback_level == 2  # reference rung
+
+
+def test_on_fault_raise_preserves_fail_fast():
+    cs = rnn_compile(_params(), ExecutionPolicy(interpret=True))
+    assert cs.policy.on_fault == "raise"
+    cs.fault.arm([0])
+    with pytest.raises(LaunchError) as e:
+        cs.forward(_xs())
+    assert e.value.slot == 0 and e.value.injected
+    assert e.value.level == "fused" and e.value.uids == (0,)
+    assert cs.stats.degraded_launches == 0  # the call died, nothing folded
+    # the injector fired once and disarmed (ft.failure_at_steps semantics):
+    # the retry succeeds
+    cs.forward(_xs())
+    assert cs.stats.forward_calls == 1
+
+
+def test_exhausted_ladder_escapes_even_under_fallback():
+    cs = rnn_compile(_params(),
+                     ExecutionPolicy(interpret=True, on_fault="fallback"))
+    cs.fault.arm([0], through_level=2)  # every rung fails
+    with pytest.raises(LaunchError, match="reference"):
+        cs.forward(_xs())
+    assert cs.fault.fired == [(0, 0), (0, 1), (0, 2)]
+
+
+def test_decode_tick_ladder_recovers_chained_slot():
+    xs = _xs(B=2, T=5)
+    healthy = rnn_compile(_params(), ExecutionPolicy(interpret=True))
+    cs = rnn_compile(_params(),
+                     ExecutionPolicy(interpret=True, on_fault="fallback"))
+    _, st_h = healthy.prefill(xs)
+    _, st = cs.prefill(xs)
+    y_h, st2_h = healthy.decode(xs[:, :1], st_h)
+    for through in (0, 1):  # per-layer rung, then pure-jnp reference rung
+        cs.fault.arm([0], through_level=through)
+        y, st2 = cs.decode(xs[:, :1], st)
+        np.testing.assert_allclose(np.asarray(y_h), np.asarray(y),
+                                   atol=1e-5)
+        np.testing.assert_allclose(np.asarray(st2_h["h"]),
+                                   np.asarray(st2["h"]), atol=1e-5)
+    assert cs.stats.degraded_launches == 2
+    assert cs.stats.fallback_level == 2
+
+
+def test_check_finite_raises_structured_error():
+    cs = rnn_compile(_params(),
+                     ExecutionPolicy(interpret=True, check_finite=True))
+    L, B, H = 2, 2, 32
+    bad = {"h": jnp.full((L, B, H), jnp.nan, jnp.float32),
+           "c": jnp.zeros((L, B, H), jnp.float32)}
+    with pytest.raises(NonFiniteStateError) as e:
+        cs.decode(jnp.zeros((B, 1, 32), jnp.float32), bad)
+    assert e.value.uids == (0,) and e.value.where == "decode tick"
+
+
+# ---------------------------------------------------------------------------
+# poisoned-slot quarantine (serving engine)
+# ---------------------------------------------------------------------------
+
+
+def _run(eng, prompts, max_new=3, **req_kw):
+    for uid, p in enumerate(prompts):
+        eng.submit(RecurrentRequest(uid=uid, frames=p, max_new_frames=max_new,
+                                    **req_kw))
+    return {c.uid: c for c in eng.run_to_completion()}
+
+
+def test_prefill_launch_fault_fails_only_target_bit_identical():
+    """An injected launch failure in the packed admission wave fails only
+    the targeted request; the wave bisects and co-batched requests
+    complete bit-identically to the fault-free run."""
+    prompts = _prompts((8, 8, 6))
+    clean = _run(_engine(), prompts)
+
+    eng = _engine()
+    eng.fail_prefill_of = {1}
+    done = _run(eng, prompts)
+    assert sorted(done) == [0, 1, 2]
+    assert done[1].status == "failed"
+    assert "launch fault" in done[1].error
+    assert done[1].outputs.shape == (0, 32)  # prefill never finished
+    assert eng.prefill_retries == 3 and eng.quarantined == 1
+    for uid in (0, 2):
+        assert done[uid].status == "ok" and done[uid].error is None
+        np.testing.assert_array_equal(clean[uid].outputs, done[uid].outputs)
+        np.testing.assert_array_equal(clean[uid].generated,
+                                      done[uid].generated)
+
+
+def test_prefill_fault_under_raise_mode_fails_fast():
+    eng = _engine(on_fault="raise")
+    eng.fail_prefill_of = {0}
+    eng.submit(RecurrentRequest(uid=0, frames=_prompts((6,))[0],
+                                max_new_frames=1))
+    with pytest.raises(LaunchError):
+        eng.step()
+
+
+def test_poisoned_prefill_state_quarantines_only_target():
+    prompts = _prompts((7, 7, 5), seed=3)
+    clean = _run(_engine(), prompts)
+
+    eng = _engine()
+    eng.poison_slot_at = {2: -1}  # poison uid 2's spliced prefill state
+    done = _run(eng, prompts)
+    assert done[2].status == "failed"
+    assert "prefill state" in done[2].error
+    for uid in (0, 1):
+        assert done[uid].status == "ok"
+        np.testing.assert_array_equal(clean[uid].outputs, done[uid].outputs)
+        np.testing.assert_array_equal(clean[uid].generated,
+                                      done[uid].generated)
+
+
+def test_decode_poison_quarantines_mid_flight():
+    """A NaN appearing in one request's recurrent state mid-decode fails
+    only that request (partial frames preserved); the co-batched request
+    finishes bit-identically to its fault-free run."""
+    prompts = _prompts((6, 9), seed=5)
+    clean = _run(_engine(max_batch=2), prompts, max_new=4)
+
+    eng = _engine(max_batch=2)
+    eng.poison_slot_at = {0: 2}  # uid 0's state goes NaN before tick 2
+    done = _run(eng, prompts, max_new=4)
+    assert done[0].status == "failed"
+    assert "decode" in done[0].error
+    assert done[0].generated.shape == (2, 32)  # ticks 0 and 1 preserved
+    np.testing.assert_array_equal(clean[0].generated[:2], done[0].generated)
+    assert done[1].status == "ok"
+    assert done[1].generated.shape == (4, 32)
+    np.testing.assert_array_equal(clean[1].outputs, done[1].outputs)
+    np.testing.assert_array_equal(clean[1].generated, done[1].generated)
+    assert eng.quarantined == 1
+
+
+def test_submit_rejects_nonfinite_prompt():
+    eng = _engine()
+    bad = _prompts((5,))[0]
+    bad[2, 7] = np.nan
+    with pytest.raises(NonFiniteStateError) as e:
+        eng.submit(RecurrentRequest(uid=42, frames=bad))
+    assert e.value.uids == (42,) and e.value.where == "prompt"
+    assert "42" in str(e.value)
+    assert not eng.queue  # nothing admitted
+
+
+# ---------------------------------------------------------------------------
+# deadlines, backpressure, watchdog
+# ---------------------------------------------------------------------------
+
+
+def test_max_ticks_deadline_retires_with_timeout_status():
+    eng = _engine(max_batch=2)
+    eng.submit(RecurrentRequest(uid=0, frames=_prompts((6,))[0],
+                                max_new_frames=100, max_ticks=3))
+    eng.submit(RecurrentRequest(uid=1, frames=_prompts((6,))[0],
+                                max_new_frames=2))
+    done = {c.uid: c for c in eng.run_to_completion()}
+    assert done[0].status == "timeout"
+    assert "max_ticks=3" in done[0].error
+    assert done[0].generated.shape == (3, 32)  # partial work preserved
+    assert done[1].status == "ok"
+
+
+def test_wall_time_deadline_retires_with_timeout_status():
+    eng = _engine(max_batch=1)
+    eng.submit(RecurrentRequest(uid=0, frames=_prompts((6,))[0],
+                                max_new_frames=10_000, deadline_s=0.0))
+    done = eng.run_to_completion()
+    assert done[0].status == "timeout"
+    assert "deadline" in done[0].error
+
+
+def test_run_to_completion_overrun_carries_done():
+    """ISSUE-6 satellite: an engine-level overrun raises RequestTimeout
+    carrying the completions already finished — and the budget is per
+    call, so a drained engine can be reused with a fresh budget."""
+    eng = _engine(max_batch=1)
+    eng.submit(RecurrentRequest(uid=0, frames=_prompts((6,))[0],
+                                max_new_frames=1))
+    eng.submit(RecurrentRequest(uid=1, frames=_prompts((6,))[0],
+                                max_new_frames=50))
+    with pytest.raises(RequestTimeout) as e:
+        eng.run_to_completion(max_ticks=5)
+    assert [c.uid for c in e.value.done] == [0]  # finished work preserved
+    assert e.value.uids == (1,)
+    # the engine is still drainable — and the tick budget resets per call
+    # (the old implementation compared a cumulative counter)
+    done = eng.run_to_completion(max_ticks=60)
+    assert sorted(c.uid for c in done) == [0, 1]
+
+    eng.submit(RecurrentRequest(uid=2, frames=_prompts((6,))[0],
+                                max_new_frames=50))
+    done = eng.run_to_completion(max_ticks=60)  # would overrun cumulatively
+    assert sorted(c.uid for c in done) == [0, 1, 2]
+
+
+def test_bounded_queue_reject_backpressure():
+    eng = _engine(max_batch=1, max_queue=2)
+    for uid in (0, 1):
+        eng.submit(RecurrentRequest(uid=uid, frames=_prompts((5,))[0],
+                                    max_new_frames=1))
+    with pytest.raises(QueueFull) as e:
+        eng.submit(RecurrentRequest(uid=2, frames=_prompts((5,))[0],
+                                    max_new_frames=1))
+    assert e.value.uids == (2,)
+    assert sorted(c.uid for c in eng.run_to_completion()) == [0, 1]
+
+
+def test_bounded_queue_drop_oldest_backpressure():
+    eng = _engine(max_batch=1, max_queue=2, backpressure="drop_oldest")
+    for uid in (0, 1, 2):
+        eng.submit(RecurrentRequest(uid=uid, frames=_prompts((5,))[0],
+                                    max_new_frames=1))
+    assert eng.dropped == 1
+    done = {c.uid: c for c in eng.run_to_completion()}
+    assert done[0].status == "failed"  # evicted head surfaces, never lost
+    assert "evicted" in done[0].error
+    assert done[1].status == "ok" and done[2].status == "ok"
+
+
+def test_straggler_watchdog_observes_decode_ticks():
+    eng = _engine(max_batch=2, watchdog_factor=1e6)  # never flags
+    _run(eng, _prompts((6, 6)), max_new=3)
+    assert eng.watchdog.ewma is not None  # ticks were observed
+    assert eng.straggler_ticks == []
+
+
+def test_engine_constructor_rejections_are_structured():
+    from repro.rnn import PlanRejected
+
+    params = _params()
+    with pytest.raises(PlanRejected, match="rnn_family"):
+        RecurrentServingEngine(CFG, params, rnn_family="tcn")
+    import dataclasses as dc
+    bidir = dc.replace(CFG, bidirectional=True)
+    with pytest.raises(PlanRejected, match="streaming decode"):
+        RecurrentServingEngine(bidir, params)

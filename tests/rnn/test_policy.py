@@ -30,6 +30,8 @@ def test_unknown_schedule_names_field_and_values():
     ("dtype", "float64"), ("dtype", 32),
     ("packing", "on"),
     ("macs", 0), ("macs", -5), ("macs", 2.5), ("macs", False),
+    ("on_fault", "retry"), ("on_fault", True),
+    ("check_finite", "yes"), ("check_finite", 1),
 ])
 def test_bad_fields_name_themselves(field, value):
     with pytest.raises(ValueError, match=f"ExecutionPolicy.{field}"):
@@ -42,6 +44,21 @@ def test_valid_corners_accepted():
     for d in DTYPES:
         ExecutionPolicy(dtype=d)
     ExecutionPolicy(block_t=16, interpret=False, packing=False, macs=1024)
+
+
+def test_fault_knobs_default_fail_fast():
+    """ISSUE-6: the library default stays fail-fast ("raise", no finite
+    checks); the knobs validate like every other field and show up in
+    describe()."""
+    from repro.rnn import ON_FAULT
+
+    pol = ExecutionPolicy()
+    assert pol.on_fault == "raise" and pol.check_finite is False
+    assert "on_fault=raise" in pol.describe()
+    for mode in ON_FAULT:
+        assert ExecutionPolicy(on_fault=mode).on_fault == mode
+    assert "check_finite=True" in \
+        ExecutionPolicy(check_finite=True).describe()
 
 
 def test_policy_is_frozen_and_hashable():

@@ -78,3 +78,12 @@ def test_dispatch_suite_writes_json(tmp_path):
             < launches("dispatch/bidir_per_layer_fallback"))
     assert "bidirectional" in rows["dispatch/bidir_interleaved_prefill"][
         "derived"]
+    # the robustness claim (ISSUE-6), measured: the degraded-mode rows ran
+    # the guarded ladder (recovery oracle-equal gated inside the bench)
+    # and priced each rung against the healthy fused path
+    assert "fallback=fused" in rows["dispatch/fault_healthy_forward"][
+        "derived"]
+    for rung in ("per_step", "reference"):
+        derived = rows[f"dispatch/fault_{rung}_fallback"]["derived"]
+        assert f"fallback={rung}" in derived
+        assert "degraded=" in derived
