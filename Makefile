@@ -2,7 +2,8 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test ci chaos deprecations api-demo bench-kernels bench-dispatch bench
+.PHONY: test ci chaos deprecations api-demo trace-demo bench-kernels \
+        bench-dispatch bench
 
 test:
 	$(PY) -m pytest -x -q
@@ -26,6 +27,12 @@ deprecations:
 # The unified front-end tour (compile/forward/prefill/decode + plans).
 api-demo:
 	$(PY) examples/rnn_api_demo.py
+
+# Traced forward + decode -> artifacts/trace.json (chrome://tracing),
+# metrics_snapshot.json, launch_costs.json (predicted vs measured).
+# CI runs this and uploads the trace as a build artifact.
+trace-demo:
+	$(PY) examples/trace_demo.py --out-dir artifacts
 
 # What CI runs (.github/workflows/ci.yml): the tier-1 suite (which already
 # includes the benchmark smoke tests — tests/test_bench_smoke.py runs the

@@ -7,7 +7,6 @@ benchmark runs against.
 """
 from __future__ import annotations
 
-import time
 from typing import Callable
 
 import jax
@@ -19,16 +18,14 @@ from repro.kernels.lstm_cell.ops import (lstm_cell, lstm_cell_ref, lstm_seq,
                                          lstm_seq_ref)
 from repro.kernels.mvm_tile.ops import mvm, mvm_ref
 from repro.kernels.rglru.ops import rglru_scan, rglru_scan_ref
+from repro.runtime.obs import measure_us
 
 
 def _time(fn: Callable, *args, repeat: int = 3) -> float:
-    fn(*args)
-    ts = []
-    for _ in range(repeat):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        ts.append(time.perf_counter() - t0)
-    return min(ts) * 1e6
+    """Shared runtime timer, min-of-repeats: microbenchmarks want the
+    best case (least scheduler noise), unlike the dispatch suite's
+    medians."""
+    return measure_us(fn, *args, repeats=repeat, warmup=1, reduce="min")
 
 
 def kernels(emit) -> None:

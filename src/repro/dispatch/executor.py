@@ -58,6 +58,7 @@ from repro.dispatch.workitem import GATES
 from repro.runtime.errors import (FALLBACK_LEVELS, ExecutionReport,
                                   FaultInjector, LaunchError,
                                   NonFiniteStateError)
+from repro.runtime.obs import NULL_TRACER, as_tracer
 
 
 def _hoist(layer_params, src, gates: int):
@@ -78,7 +79,8 @@ def execute(plan: DispatchPlan, params: Dict[int, dict],
             on_fault: str = "raise",
             check_finite: bool = False,
             inject: Optional[FaultInjector] = None,
-            report: Optional[ExecutionReport] = None):
+            report: Optional[ExecutionReport] = None,
+            tracer=None):
     """Run ``plan``.  params[uid] = stack params ({"layers": [...]}),
     inputs[uid] = xs (B, T, X).  Returns outputs {uid: (B, T, H)} —
     (B, T, 2H) for bidirectional items (fwd‖bwd concat) — or
@@ -117,7 +119,18 @@ def execute(plan: DispatchPlan, params: Dict[int, dict],
     ``NonFiniteStateError`` naming exactly the items whose post-launch
     recurrent state went NaN/Inf.  ``inject`` is the test-time fault hook
     (``runtime.errors.FaultInjector``).
+
+    ``tracer`` (optional ``runtime.obs.Tracer``): every packed/chained
+    slot gets a ``hoist`` span (row assembly + input GEMM dispatch) and a
+    *fenced* ``slot_launch`` span (``block_until_ready`` inside the span,
+    so its duration is the launch's wall-clock, not its async dispatch),
+    tagged with the slot signature and uids and fed to the per-signature
+    launch-latency histogram + the predicted-vs-measured launch-cost
+    table; ladder recoveries appear as nested ``fallback_rung`` spans and
+    ``launch_fault`` instants.  None (the default) binds the shared no-op
+    tracer — no events, no fencing, outputs bit-identical.
     """
+    tracer = as_tracer(tracer)
     if on_fault not in ("raise", "fallback"):
         raise ValueError(f"execute: on_fault={on_fault!r} invalid; "
                          "allowed: raise, fallback")
@@ -216,44 +229,56 @@ def execute(plan: DispatchPlan, params: Dict[int, dict],
             _run_chained_slot(slot, params, inputs, live,
                               interpret=interpret, prepared=prepared,
                               on_fault=on_fault, check_finite=check_finite,
-                              inject=inject, report=report)
+                              inject=inject, report=report,
+                              tracer=tracer, macs=plan.macs)
             continue
         gates = GATES[slot.family]
-        xws, us, hs, cs = [], [], [], []
-        for grp, b in zip(slot.groups, slot.group_b):
-            xw_rows, h_rows, c_rows = [], [], []
-            for cell in grp:
-                st = live[cell.uid]
-                ip: ItemPlan = st["plan"]
-                layer = _cell_layer_params(params, st, cell)
-                src = _cell_src(inputs, st, cell, slot.chunk_len)
-                xw_rows.append(_hoist(layer, src, gates))
-                h_rows.append(st["h"][(cell.layer, cell.direction)])
+        with tracer.span("hoist", slot=slot.index):
+            xws, us, hs, cs = [], [], [], []
+            for grp, b in zip(slot.groups, slot.group_b):
+                xw_rows, h_rows, c_rows = [], [], []
+                for cell in grp:
+                    st = live[cell.uid]
+                    ip: ItemPlan = st["plan"]
+                    layer = _cell_layer_params(params, st, cell)
+                    src = _cell_src(inputs, st, cell, slot.chunk_len)
+                    xw_rows.append(_hoist(layer, src, gates))
+                    h_rows.append(st["h"][(cell.layer, cell.direction)])
+                    if slot.family == "lstm":
+                        c_rows.append(st["c"][(cell.layer, cell.direction)])
+                # cross-B row: parameter-sharing cells concatenate on B
+                # (same U by the share contract — take the lead cell's);
+                # rows narrower than the slot's width pad with zeros,
+                # masked in-kernel to exact no-ops
+                xw_g = _cat_pad(xw_rows, slot.B)
+                us.append(_cell_layer_params(params, live[grp[0].uid],
+                                             grp[0])
+                          ["U"].reshape(slot.H, gates, slot.H))
+                xws.append(xw_g)
+                hs.append(_cat_pad(h_rows, slot.B))
                 if slot.family == "lstm":
-                    c_rows.append(st["c"][(cell.layer, cell.direction)])
-            # cross-B row: parameter-sharing cells concatenate on B (same
-            # U by the share contract — take the lead cell's); rows
-            # narrower than the slot's width pad with zeros, masked
-            # in-kernel to exact no-ops
-            xw_g = _cat_pad(xw_rows, slot.B)
-            us.append(_cell_layer_params(params, live[grp[0].uid], grp[0])
-                      ["U"].reshape(slot.H, gates, slot.H))
-            xws.append(xw_g)
-            hs.append(_cat_pad(h_rows, slot.B))
-            if slot.family == "lstm":
-                cs.append(_cat_pad(c_rows, slot.B))
+                    cs.append(_cat_pad(c_rows, slot.B))
 
-        xw = jnp.stack(xws)          # (G, B, bt, gates, H)
-        U = jnp.stack(us)            # (G, H, gates, H)
-        h0 = jnp.stack(hs)           # (G, B, H)
-        c0 = jnp.stack(cs) if slot.family == "lstm" else None
+            xw = jnp.stack(xws)          # (G, B, bt, gates, H)
+            U = jnp.stack(us)            # (G, H, gates, H)
+            h0 = jnp.stack(hs)           # (G, B, H)
+            c0 = jnp.stack(cs) if slot.family == "lstm" else None
         b_valid = (jnp.asarray(slot.group_b, jnp.int32)
                    if any(b < slot.B for b in slot.group_b) else None)
         uids = sorted({c.uid for grp in slot.groups for c in grp})
-        out, h_n, c_n = _guarded_launch(
-            slot.index, uids,
-            _seq_ladder(slot, U, xw, h0, c0, b_valid, interpret=interpret),
-            on_fault=on_fault, inject=inject, report=report)
+        sig = slot.signature() if tracer.enabled else ""
+        with tracer.span("slot_launch", slot=slot.index, sig=sig,
+                         uids=uids) as sp:
+            out, h_n, c_n = _guarded_launch(
+                slot.index, uids,
+                _seq_ladder(slot, U, xw, h0, c0, b_valid,
+                            interpret=interpret),
+                on_fault=on_fault, inject=inject, report=report,
+                tracer=tracer)
+            out, h_n, c_n = tracer.fence((out, h_n, c_n))
+        if tracer.enabled:
+            tracer.observe_launch(sig, _slot_est_cycles(slot, plan.macs),
+                                  sp.dur_us)
 
         bad: List[int] = []
         for g, grp in enumerate(slot.groups):
@@ -302,6 +327,21 @@ def execute(plan: DispatchPlan, params: Dict[int, dict],
     return (outputs, states) if collect_state else outputs
 
 
+def _slot_est_cycles(slot, macs: int, X: int = 0) -> float:
+    """The perfmodel's estimate for ONE slot launch — the predicted half
+    of the launch-cost table's predicted-vs-measured pair."""
+    from repro.core.perfmodel import (Design, decode_plan_cycles,
+                                      slot_launch_cycles)
+    from repro.dispatch.planner import DEFAULT_MACS
+
+    design = Design(macs=macs or DEFAULT_MACS, schedule="unfolded")
+    if slot.chained:
+        return decode_plan_cycles(slot.family, slot.H, X or slot.H,
+                                  len(slot.groups), design)
+    return slot_launch_cycles(slot.family, slot.H, slot.chunk_len,
+                              list(slot.group_b), design)
+
+
 # ---------------------------------------------------------------------------
 # guarded execution ladder
 # ---------------------------------------------------------------------------
@@ -309,7 +349,8 @@ def execute(plan: DispatchPlan, params: Dict[int, dict],
 
 def _guarded_launch(slot_index: int, uids, ladder, *, on_fault: str,
                     inject: Optional[FaultInjector],
-                    report: Optional[ExecutionReport]):
+                    report: Optional[ExecutionReport],
+                    tracer=NULL_TRACER):
     """Run one slot's launch down the guarded execution ladder.
 
     ``ladder`` holds one thunk per ``FALLBACK_LEVELS`` rung, shallowest
@@ -325,19 +366,34 @@ def _guarded_launch(slot_index: int, uids, ladder, *, on_fault: str,
         try:
             if inject is not None:
                 inject.maybe_fail(slot_index, level, uids)
-            result = attempt()
+            if level == 0:
+                result = attempt()
+            else:
+                # recovery rungs get their own nested span so a trace shows
+                # exactly where a launch's time went when it degraded
+                with tracer.span("fallback_rung", slot=slot_index,
+                                 rung=FALLBACK_LEVELS[level]):
+                    result = attempt()
         except Exception as err:  # noqa: BLE001 — the ladder IS the boundary
             fault = err if isinstance(err, LaunchError) else LaunchError(
                 f"launch failed: slot {slot_index} at ladder level "
                 f"{FALLBACK_LEVELS[level]!r} "
                 f"(uids {sorted(set(uids))}): {err!r}",
                 uids=uids, slot=slot_index, level=FALLBACK_LEVELS[level])
+            if tracer.enabled:
+                tracer.instant("launch_fault", slot=slot_index,
+                               rung=FALLBACK_LEVELS[level],
+                               error=type(err).__name__)
+                tracer.metrics.counter("launch_faults").add()
             if on_fault != "fallback" or level == last:
                 raise fault from err
             cause = fault
             continue
-        if level > 0 and report is not None:
-            report.record(slot_index, level, cause)
+        if level > 0:
+            if report is not None:
+                report.record(slot_index, level, cause)
+            if tracer.enabled:
+                tracer.metrics.counter("degraded_launches").add()
         return result
     raise AssertionError("unreachable: ladder exhausted without raising")
 
@@ -484,7 +540,8 @@ def _run_chained_slot(slot, params, inputs, live, *, interpret=None,
                       prepared=None, on_fault: str = "raise",
                       check_finite: bool = False,
                       inject: Optional[FaultInjector] = None,
-                      report: Optional[ExecutionReport] = None):
+                      report: Optional[ExecutionReport] = None,
+                      tracer=NULL_TRACER, macs: int = 0):
     """Execute a chained decode slot: ONE launch for a whole T=1 tick.
 
     The slot's groups are the L serially dependent layer cells, each the
@@ -504,25 +561,35 @@ def _run_chained_slot(slot, params, inputs, live, *, interpret=None,
     stack = params[lead_uid]["layers"]
     L = len(slot.groups)
 
-    xw0 = _cat_pad([_hoist(stack[0], inputs[c.uid], gates)[:, 0]
-                    for c in row_cells], slot.B)        # (B, gates, H)
-    prep = ((prepared or {}).get(lead_uid)
-            or prepare_decode_stack(params[lead_uid], slot.family))
-    Ws, bs, Us = prep["Ws"], prep["bs"], prep["Us"]
-    h0 = jnp.stack([_cat_pad([live[c.uid]["h"][(l, "fwd")]
-                              for c in row_cells],
-                             slot.B) for l in range(L)])  # (L, B, H)
-    if slot.family == "lstm":
-        c0 = jnp.stack([_cat_pad([live[c.uid]["c"][(l, "fwd")]
+    with tracer.span("hoist", slot=slot.index):
+        xw0 = _cat_pad([_hoist(stack[0], inputs[c.uid], gates)[:, 0]
+                        for c in row_cells], slot.B)    # (B, gates, H)
+        prep = ((prepared or {}).get(lead_uid)
+                or prepare_decode_stack(params[lead_uid], slot.family))
+        Ws, bs, Us = prep["Ws"], prep["bs"], prep["Us"]
+        h0 = jnp.stack([_cat_pad([live[c.uid]["h"][(l, "fwd")]
                                   for c in row_cells],
-                                 slot.B) for l in range(L)])
-    else:
-        c0 = None
+                                 slot.B) for l in range(L)])  # (L, B, H)
+        if slot.family == "lstm":
+            c0 = jnp.stack([_cat_pad([live[c.uid]["c"][(l, "fwd")]
+                                      for c in row_cells],
+                                     slot.B) for l in range(L)])
+        else:
+            c0 = None
     uids = sorted({c.uid for c in row_cells})
-    h_n, c_n = _guarded_launch(
-        slot.index, uids,
-        _chained_ladder(slot, xw0, Ws, bs, Us, h0, c0, interpret=interpret),
-        on_fault=on_fault, inject=inject, report=report)
+    sig = slot.signature() if tracer.enabled else ""
+    with tracer.span("slot_launch", slot=slot.index, sig=sig,
+                     uids=uids) as sp:
+        h_n, c_n = _guarded_launch(
+            slot.index, uids,
+            _chained_ladder(slot, xw0, Ws, bs, Us, h0, c0,
+                            interpret=interpret),
+            on_fault=on_fault, inject=inject, report=report, tracer=tracer)
+        h_n, c_n = tracer.fence((h_n, c_n))
+    if tracer.enabled:
+        X = stack[0]["W"].shape[0]
+        tracer.observe_launch(sig, _slot_est_cycles(slot, macs, X=X),
+                              sp.dur_us)
 
     off = 0
     bad: List[int] = []

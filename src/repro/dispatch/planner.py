@@ -52,6 +52,7 @@ from repro.core.schedules import wavefront_active
 from repro.core.tiling import SEQ_VMEM_BUDGET, seq_block_footprint
 from repro.dispatch.workitem import GATES, WorkItem
 from repro.kernels.common import cdiv
+from repro.runtime.obs import NULL_TRACER, as_tracer, slot_signature
 
 DEFAULT_MACS = 16384  # planner's reference tile-engine budget (paper 16K)
 
@@ -109,6 +110,15 @@ class Slot:
     @property
     def cells(self) -> Tuple[Cell, ...]:
         return tuple(c for grp in self.groups for c in grp)
+
+    def signature(self) -> str:
+        """The launch signature string traces and the measured-launch cost
+        table key on (family, G, padded B, H, T-stripe, dtype, direction
+        mix, chained) — see ``runtime.obs.slot_signature``."""
+        return slot_signature(self.family, self.H, self.g, self.B,
+                              self.chunk_len, self.dtype,
+                              directions=[c.direction for c in self.cells],
+                              chained=self.chained)
 
     def describe(self) -> str:
         grps = " ".join(
@@ -484,7 +494,7 @@ def _forced_plan(it: WorkItem, design: Design, force: str, force_bt: int,
 
 def _schedule_item(it: WorkItem, macs: int, design: Design,
                    force: Optional[str] = None,
-                   force_bt: int = 0) -> ItemPlan:
+                   force_bt: int = 0, tracer=NULL_TRACER) -> ItemPlan:
     """Tile + score one item: pick fused/wavefront striping or fallback."""
     tile_k = table().tile(it.gates * it.H, max(it.H, it.X), macs).k
     mvm_block = table().block(it.H, it.H, vmem_budget=2 * 2**20)
@@ -534,6 +544,15 @@ def _schedule_item(it: WorkItem, macs: int, design: Design,
     scored.append((ps.est_cycles, 0, 0, it.T, "per_step"))
     est, _, bt, nk, sched = min(scored)
 
+    if tracer.enabled:
+        # chosen-vs-rejected: every candidate the scorer weighed, so a
+        # trace shows WHY a shape won (and by how little)
+        tracer.instant(
+            "plan_candidates", uid=it.uid, chosen=f"{sched}@bt{bt}",
+            candidates=[{"schedule": s, "block_t": b, "nk": n,
+                         "est_cycles": e}
+                        for e, _, b, n, s in sorted(scored)])
+
     if sched == "per_step":
         return ps
     ip = ItemPlan(item=it, schedule=sched, block_t=bt, nk=nk, tile_k=tile_k,
@@ -554,7 +573,8 @@ def _with_naive(ip: ItemPlan) -> ItemPlan:
 
 def plan(items: Iterable[WorkItem], *, macs: int = DEFAULT_MACS,
          align_stripes: bool = True, cross_b: bool = True,
-         schedule: Optional[str] = None, block_t: int = 0) -> DispatchPlan:
+         schedule: Optional[str] = None, block_t: int = 0,
+         tracer=None) -> DispatchPlan:
     """Plan a batch of WorkItems into an explicit DispatchPlan.
 
     ``align_stripes``: items that could share launches (same family/H/
@@ -573,7 +593,13 @@ def plan(items: Iterable[WorkItem], *, macs: int = DEFAULT_MACS,
     ``block_t`` pins the wavefront T-stripe (honored under ``schedule=None``
     too — the scorer then only weighs the pinned stripe against per_step).
     None/0 = score freely.
+
+    ``tracer``: an optional ``runtime.obs.Tracer`` — planning gets a
+    ``plan`` span tagged with the outcome (slots/launches/est_cycles) and
+    each auto-scored item emits a ``plan_candidates`` instant with its
+    chosen-vs-rejected schedule scores.
     """
+    tracer = as_tracer(tracer)
     if schedule is not None and schedule not in FORCED_SCHEDULES:
         raise ValueError(f"unknown schedule {schedule!r}; "
                          f"options {FORCED_SCHEDULES}")
@@ -582,29 +608,35 @@ def plan(items: Iterable[WorkItem], *, macs: int = DEFAULT_MACS,
         raise ValueError("duplicate WorkItem uids")
     design = Design(macs=macs, schedule="unfolded")
 
-    plans = {it.uid: _schedule_item(it, macs, design, force=schedule,
-                                    force_bt=block_t) for it in items}
+    with tracer.span("plan", n_items=len(items),
+                     schedule=schedule or "auto") as sp:
+        plans = {it.uid: _schedule_item(it, macs, design, force=schedule,
+                                        force_bt=block_t, tracer=tracer)
+                 for it in items}
 
-    # a pinned block_t is a contract — alignment must not re-stripe it
-    if align_stripes and schedule is None and not block_t:
-        _align_group_stripes(items, plans, design, cross_b=cross_b)
+        # a pinned block_t is a contract — alignment must not re-stripe it
+        if align_stripes and schedule is None and not block_t:
+            _align_group_stripes(items, plans, design, cross_b=cross_b)
 
-    packable, external = [], []
-    for it in items:
-        ip = plans[it.uid]
-        if ip.schedule in ("wavefront", "fused") and it.family != "rglru" \
-                and it.T > 0:
-            packable.append(ip)
-        else:
-            external.append(ip.uid)
+        packable, external = [], []
+        for it in items:
+            ip = plans[it.uid]
+            if ip.schedule in ("wavefront", "fused") \
+                    and it.family != "rglru" and it.T > 0:
+                packable.append(ip)
+            else:
+                external.append(ip.uid)
 
-    slots = _pack(packable, macs, cross_b=cross_b)
-    return DispatchPlan(items=tuple(plans[it.uid] for it in items),
-                        slots=slots, external=tuple(external), macs=macs)
+        slots = _pack(packable, macs, cross_b=cross_b)
+        out = DispatchPlan(items=tuple(plans[it.uid] for it in items),
+                           slots=slots, external=tuple(external), macs=macs)
+        sp.tag(slots=len(out.slots), launches=out.launches,
+               est_cycles=out.est_cycles)
+    return out
 
 
-def plan_decode(items: Iterable[WorkItem], *,
-                macs: int = DEFAULT_MACS) -> DispatchPlan:
+def plan_decode(items: Iterable[WorkItem], *, macs: int = DEFAULT_MACS,
+                tracer=None) -> DispatchPlan:
     """Plan one serving decode tick: each item is a T=1 evaluation of the
     SAME parameter stack (all items must carry one non-None ``share`` key)
     for some batch rows — one active request each, in the serving engine.
@@ -619,6 +651,7 @@ def plan_decode(items: Iterable[WorkItem], *,
     assumed: ``decode_plan_cycles`` (1 launch) vs ``stack_plan_cycles``
     at nk=1 (L launches); the chain wins whenever LAUNCH_CYCLES > 0.
     """
+    tracer = as_tracer(tracer)
     items = sorted(items, key=WorkItem.order_key)
     if not items:
         raise ValueError("plan_decode needs at least one item")
@@ -664,20 +697,29 @@ def plan_decode(items: Iterable[WorkItem], *,
     # (fail here with context rather than confuse the serving engine with
     # an unexpected plan shape)
     assert est_chain <= est_layers, (est_chain, est_layers)
+    if tracer.enabled:
+        tracer.instant(
+            "plan_candidates", uids=[it.uid for it in items],
+            chosen="chained",
+            candidates=[{"schedule": "chained", "est_cycles": est_chain},
+                        {"schedule": "per_layer", "est_cycles": est_layers}])
 
-    item_plans = tuple(
-        ItemPlan(item=it, schedule="decode", block_t=1, nk=1, tile_k=tile_k,
-                 mvm_block=mvm_block, naive_launches=it.L,
-                 est_cycles=est_chain / len(items))
-        for it in items)
-    B_total = sum(it.B for it in items)
-    slot = Slot(index=0, wave=0, family=head.family, H=head.H, B=B_total,
-                chunk_len=1, dtype=head.dtype, tile_k=tile_k,
-                mvm_block=mvm_block,
-                groups=tuple(tuple(Cell(uid=it.uid, layer=l, chunk=0)
-                                   for it in items)
-                             for l in range(head.L)),
-                group_b=(B_total,) * head.L, chained=True)
+    with tracer.span("plan", n_items=len(items), schedule="decode",
+                     est_cycles=est_chain):
+        item_plans = tuple(
+            ItemPlan(item=it, schedule="decode", block_t=1, nk=1,
+                     tile_k=tile_k, mvm_block=mvm_block,
+                     naive_launches=it.L,
+                     est_cycles=est_chain / len(items))
+            for it in items)
+        B_total = sum(it.B for it in items)
+        slot = Slot(index=0, wave=0, family=head.family, H=head.H,
+                    B=B_total, chunk_len=1, dtype=head.dtype, tile_k=tile_k,
+                    mvm_block=mvm_block,
+                    groups=tuple(tuple(Cell(uid=it.uid, layer=l, chunk=0)
+                                       for it in items)
+                                 for l in range(head.L)),
+                    group_b=(B_total,) * head.L, chained=True)
     return DispatchPlan(items=item_plans, slots=(slot,), external=(),
                         macs=macs)
 

@@ -44,6 +44,7 @@ from repro.dispatch import (DispatchPlan, WorkItem, execute, plan,
                             plan_decode, prepare_decode_stack)
 from repro.rnn.policy import ExecutionPolicy
 from repro.runtime.errors import ExecutionReport, FaultInjector
+from repro.runtime.obs import NULL_TRACER, Tracer
 
 
 @dataclasses.dataclass
@@ -58,9 +59,16 @@ class StackStats:
     re-execute below their planned rung (policy ``on_fault="fallback"``);
     ``fallback_level`` is the deepest rung ever used (index into
     ``runtime.errors.FALLBACK_LEVELS``: 0 planned, 1 per-step, 2 pure-jnp
-    reference); ``faults`` is the human-readable fault trail.  All three
-    stay zero/empty on a healthy stack — they are the degradation signal
-    the serving layer watches."""
+    reference); ``faults`` is the human-readable fault trail — a ring
+    buffer keeping the ``MAX_FAULT_TRAIL`` most recent entries
+    (``faults_total`` counts every fault ever, so a long-lived serving
+    stack under chronic degradation holds bounded memory without losing
+    the signal).  All of these stay zero/empty on a healthy stack — they
+    are the degradation signal the serving layer watches."""
+
+    #: ring-buffer bound on ``faults`` — the trail keeps this many most
+    #: recent entries; ``faults_total`` keeps the true count
+    MAX_FAULT_TRAIL = 64
 
     forward_calls: int = 0
     decode_calls: int = 0
@@ -72,6 +80,15 @@ class StackStats:
     degraded_launches: int = 0
     fallback_level: int = 0
     faults: List[str] = dataclasses.field(default_factory=list)
+    faults_total: int = 0
+
+    def record_faults(self, entries: Sequence[str]) -> None:
+        """Append to the fault trail, keeping only the last
+        ``MAX_FAULT_TRAIL`` entries (ring-buffer semantics)."""
+        self.faults_total += len(entries)
+        self.faults.extend(entries)
+        if len(self.faults) > self.MAX_FAULT_TRAIL:
+            del self.faults[:len(self.faults) - self.MAX_FAULT_TRAIL]
 
 
 def _as_policy(policy) -> ExecutionPolicy:
@@ -169,6 +186,11 @@ class CompiledStack:
                 f"CompiledStack: layers must share one hidden width, got "
                 f"{sorted(widths)}")
         self.stats = StackStats()
+        #: the observability surface (policy ``trace=True``): a
+        #: runtime.obs.Tracer recording plan/hoist/launch/decode-tick spans
+        #: + metrics; the shared no-op tracer when tracing is off (zero
+        #: events, no fencing — the untraced path is bit-identical)
+        self.tracer = Tracer() if policy.trace else NULL_TRACER
         #: test/chaos hook: arm with plan slot indices to make launches
         #: raise (see runtime.errors.FaultInjector); disarmed = no-op
         self.fault = FaultInjector()
@@ -243,7 +265,7 @@ class CompiledStack:
             [self._item(i, b, t, dt, priority=p)
              for i, ((b, t, dt), p) in enumerate(zip(shapes, prios))],
             macs=pol.macs, cross_b=pol.packing, align_stripes=pol.packing,
-            schedule=force, block_t=pol.block_t))
+            schedule=force, block_t=pol.block_t, tracer=self.tracer))
 
     # ------------------------------------------------------------------
     def _prep(self, xs, name: str):
@@ -266,7 +288,8 @@ class CompiledStack:
         rep = ExecutionReport()
         return rep, {"on_fault": self.policy.on_fault,
                      "check_finite": self.policy.check_finite,
-                     "inject": self.fault, "report": rep}
+                     "inject": self.fault, "report": rep,
+                     "tracer": self.tracer}
 
     def _account(self, p: DispatchPlan, decode: bool = False,
                  report: Optional[ExecutionReport] = None) -> None:
@@ -276,7 +299,7 @@ class CompiledStack:
             self.stats.degraded_launches += report.degraded_launches
             self.stats.fallback_level = max(self.stats.fallback_level,
                                             report.fallback_level)
-            self.stats.faults.extend(report.faults)
+            self.stats.record_faults(report.faults)
         if decode:
             self.stats.decode_calls += 1
             self.stats.decode_launches += p.launches
@@ -293,10 +316,15 @@ class CompiledStack:
         B, T, _ = xs.shape
         if T == 0:
             raise ValueError("CompiledStack.forward: T=0 sequence")
-        p = self.lower(B, T, str(xs.dtype))
-        rep, guard = self._guard()
-        outs = execute(p, {0: self.params}, {0: xs},
-                       interpret=self.policy.interpret, **guard)
+        tr = self.tracer
+        with tr.span("forward", B=B, T=T) as sp:
+            p = self.lower(B, T, str(xs.dtype))
+            rep, guard = self._guard()
+            outs = execute(p, {0: self.params}, {0: xs},
+                           interpret=self.policy.interpret, **guard)
+            outs = tr.fence(outs)
+            if tr.enabled:
+                sp.tag(plan=tr.plan_id(p), launches=p.launches)
         self._account(p, report=rep)
         ys = outs[0]
         return ys[0] if squeeze else ys
@@ -339,15 +367,21 @@ class CompiledStack:
         inputs = {i: x for i, (x, _) in enumerate(prepped)}
         if any(x.shape[1] == 0 for x in inputs.values()):
             raise ValueError("CompiledStack.prefill: T=0 sequence")
-        # per-request dtype: a mixed-precision wave must not share launch
-        # signatures (the planner keys slots on dtype per item)
-        p = self._lower_many(
-            tuple((x.shape[0], x.shape[1], str(x.dtype))
-                  for x in inputs.values()), tuple(prios))
-        rep, guard = self._guard()
-        outs, states = execute(p, {i: self.params for i in inputs}, inputs,
-                               interpret=self.policy.interpret,
-                               collect_state=True, **guard)
+        tr = self.tracer
+        with tr.span("prefill", n_requests=len(seqs)) as sp:
+            # per-request dtype: a mixed-precision wave must not share
+            # launch signatures (the planner keys slots on dtype per item)
+            p = self._lower_many(
+                tuple((x.shape[0], x.shape[1], str(x.dtype))
+                      for x in inputs.values()), tuple(prios))
+            rep, guard = self._guard()
+            outs, states = execute(p, {i: self.params for i in inputs},
+                                   inputs,
+                                   interpret=self.policy.interpret,
+                                   collect_state=True, **guard)
+            outs, states = tr.fence((outs, states))
+            if tr.enabled:
+                sp.tag(plan=tr.plan_id(p), launches=p.launches)
         self._account(p, report=rep)
         res = []
         for i, (_, squeeze) in enumerate(prepped):
@@ -384,32 +418,42 @@ class CompiledStack:
             x_t = x_t.astype(self.policy.dtype)
         B = x_t.shape[0]
         dtype = str(x_t.dtype)
-        if not self.heterogeneous:
-            key = ("dec", B, dtype)
-            p = self._cached(key, lambda: plan_decode(
-                [self._item(0, B, 1, dtype)], macs=self.policy.macs))
-            if self._prepared is None:
-                self._prepared = prepare_decode_stack(self.params,
-                                                      self.families[0])
-            prepared = {0: self._prepared}
-        else:
-            # mixed stacks: per-layer T=1 plan — FORCED onto the packed
-            # timeline (schedule="wavefront" at bt=1 collapses to packable
-            # per-layer cells), because only packed items resume from
-            # init_state; at T=1 the auto scorer's fused and per_step
-            # estimates tie to within rounding, and a per_step pick would
-            # route external, where execute() rejects init_state
-            key = ("dec", B, dtype)
-            p = self._cached(key, lambda: plan(
-                [self._item(0, B, 1, dtype)], macs=self.policy.macs,
-                cross_b=self.policy.packing, schedule="wavefront",
-                block_t=1))
-            prepared = None
-        rep, guard = self._guard()
-        outs, states = execute(p, {0: self.params}, {0: x_t},
-                               interpret=self.policy.interpret,
-                               collect_state=True, init_state={0: state},
-                               prepared=prepared, **guard)
+        tr = self.tracer
+        with tr.span("decode_tick", B=B) as sp:
+            if not self.heterogeneous:
+                key = ("dec", B, dtype)
+                p = self._cached(key, lambda: plan_decode(
+                    [self._item(0, B, 1, dtype)], macs=self.policy.macs,
+                    tracer=tr))
+                if self._prepared is None:
+                    self._prepared = prepare_decode_stack(self.params,
+                                                          self.families[0])
+                prepared = {0: self._prepared}
+            else:
+                # mixed stacks: per-layer T=1 plan — FORCED onto the packed
+                # timeline (schedule="wavefront" at bt=1 collapses to
+                # packable per-layer cells), because only packed items
+                # resume from init_state; at T=1 the auto scorer's fused
+                # and per_step estimates tie to within rounding, and a
+                # per_step pick would route external, where execute()
+                # rejects init_state
+                key = ("dec", B, dtype)
+                p = self._cached(key, lambda: plan(
+                    [self._item(0, B, 1, dtype)], macs=self.policy.macs,
+                    cross_b=self.policy.packing, schedule="wavefront",
+                    block_t=1, tracer=tr))
+                prepared = None
+            rep, guard = self._guard()
+            outs, states = execute(p, {0: self.params}, {0: x_t},
+                                   interpret=self.policy.interpret,
+                                   collect_state=True,
+                                   init_state={0: state},
+                                   prepared=prepared, **guard)
+            outs, states = tr.fence((outs, states))
+            if tr.enabled:
+                sp.tag(plan=tr.plan_id(p), launches=p.launches)
+        if tr.enabled:
+            tr.metrics.histogram("decode_tick_us").observe(sp.dur_us)
         self._account(p, decode=True, report=rep)
         return outs[0], states[0]
 
@@ -432,7 +476,13 @@ class CompiledStack:
             from repro.runtime.errors import FALLBACK_LEVELS
             lines.append(
                 f"  DEGRADED: {s.degraded_launches} launches fell back "
-                f"(deepest rung: {FALLBACK_LEVELS[s.fallback_level]})")
+                f"(deepest rung: {FALLBACK_LEVELS[s.fallback_level]}; "
+                f"{s.faults_total} faults, trail keeps last "
+                f"{s.MAX_FAULT_TRAIL})")
+        if self.tracer.enabled:
+            lines.append("  observability:")
+            lines += ["    " + ln
+                      for ln in self.tracer.describe().splitlines()]
         if self._last_plan is not None:
             lines.append("  last plan:")
             lines += ["    " + ln

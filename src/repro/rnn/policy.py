@@ -64,6 +64,13 @@ class ExecutionPolicy:
                a structured ``NonFiniteStateError`` naming the poisoned
                items (fallback cannot fix a NaN — it re-derives
                deterministically — so this raises under either on_fault).
+    trace:     record wall-clock spans + metrics for every plan/launch/
+               decode tick on ``CompiledStack.tracer`` (a
+               ``runtime.obs.Tracer`` — Chrome-trace export, latency
+               histograms, predicted-vs-measured launch costs).  Off (the
+               default) binds the shared no-op tracer: no events, no
+               ``block_until_ready`` fencing, outputs bit-identical to
+               the untraced path.
     """
 
     schedule: str = "auto"
@@ -74,6 +81,7 @@ class ExecutionPolicy:
     macs: int = DEFAULT_MACS
     on_fault: str = "raise"
     check_finite: bool = False
+    trace: bool = False
 
     def __post_init__(self):
         if self.schedule not in SCHEDULES:
@@ -95,6 +103,8 @@ class ExecutionPolicy:
             raise _bad("on_fault", self.on_fault, ON_FAULT)
         if not isinstance(self.check_finite, bool):
             raise _bad("check_finite", self.check_finite, (True, False))
+        if not isinstance(self.trace, bool):
+            raise _bad("trace", self.trace, (True, False))
 
     def describe(self) -> str:
         return (f"ExecutionPolicy(schedule={self.schedule}, "
@@ -102,4 +112,4 @@ class ExecutionPolicy:
                 f"interpret={self.interpret}, dtype={self.dtype or 'keep'}, "
                 f"packing={self.packing}, macs={self.macs}, "
                 f"on_fault={self.on_fault}, "
-                f"check_finite={self.check_finite})")
+                f"check_finite={self.check_finite}, trace={self.trace})")

@@ -118,7 +118,8 @@ class RecurrentServingEngine:
                  max_queue: Optional[int] = None,
                  backpressure: str = "reject",
                  watchdog_factor: Optional[float] = None,
-                 watchdog_alpha: float = 0.3):
+                 watchdog_alpha: float = 0.3,
+                 trace: bool = False):
         if cfg.family != "rnn":
             raise PlanRejected(
                 f"recurrent engine serves rnn stacks, got config "
@@ -146,7 +147,13 @@ class RecurrentServingEngine:
         self.on_fault = on_fault
         self.compiled: CompiledStack = rnn_compile(
             stack_params, ExecutionPolicy(interpret=interpret, macs=macs,
-                                          on_fault=on_fault))
+                                          on_fault=on_fault, trace=trace))
+        #: the compiled stack's tracer (runtime.obs) — the engine folds its
+        #: serving events (admit spans, per-request admit->retire spans on
+        #: the "requests" track, queue/occupancy histograms, watchdog
+        #: instants) into the SAME trace the executor's launch spans land
+        #: in; the shared no-op tracer when ``trace=False``
+        self.tracer = self.compiled.tracer
         if self.compiled.families != (rnn_family,) * L:
             raise PlanRejected(
                 f"stack families {self.compiled.families} do not match "
@@ -167,6 +174,9 @@ class RecurrentServingEngine:
         self.generated: List[List[np.ndarray]] = [[] for _ in range(max_batch)]
         self.slot_ticks: List[int] = [0] * max_batch
         self.admitted_at: List[Optional[float]] = [None] * max_batch
+        # per-slot admission timestamps on the TRACER clock (µs), so
+        # retirement can file the retroactive request span
+        self._admit_us: List[Optional[float]] = [None] * max_batch
         self.done: List[RecurrentCompletion] = []
         self.steps = 0
         # dispatch accounting (inspected by tests/benchmarks); plan-cache
@@ -252,24 +262,26 @@ class RecurrentServingEngine:
         seqs = [jnp.asarray(req.frames, jnp.float32)[None]
                 for _, req in pairs]
         armed = self._arm_injected_prefill_fault(pairs)
-        try:
-            results = self.compiled.prefill(
-                seqs, priorities=[req.priority for _, req in pairs])
-        except LaunchError as err:
-            if self.on_fault != "fallback":
-                raise  # fail-fast mode: preserve pre-ISSUE-6 behaviour
-            self._quarantine_wave(pairs, err)
-            return
-        finally:
-            if armed:
-                self.compiled.fault.disarm()
-        p = self.compiled.plan
-        self.prefill_waves += 1
-        self.packed_launches += p.launches
-        self.naive_launches += p.naive_launches
-        self.last_plan = p
-        for (slot, req), (out_b, st) in zip(pairs, results):
-            self._splice(slot, req, out_b, st)
+        with self.tracer.span("admit", n_requests=len(pairs),
+                              uids=[req.uid for _, req in pairs]):
+            try:
+                results = self.compiled.prefill(
+                    seqs, priorities=[req.priority for _, req in pairs])
+            except LaunchError as err:
+                if self.on_fault != "fallback":
+                    raise  # fail-fast mode: preserve pre-ISSUE-6 behaviour
+                self._quarantine_wave(pairs, err)
+                return
+            finally:
+                if armed:
+                    self.compiled.fault.disarm()
+            p = self.compiled.plan
+            self.prefill_waves += 1
+            self.packed_launches += p.launches
+            self.naive_launches += p.naive_launches
+            self.last_plan = p
+            for (slot, req), (out_b, st) in zip(pairs, results):
+                self._splice(slot, req, out_b, st)
 
     def _arm_injected_prefill_fault(self, pairs) -> bool:
         """``fail_prefill_of`` hook: for waves containing a targeted uid,
@@ -301,6 +313,10 @@ class RecurrentServingEngine:
         """A request that faulted before occupying a slot: surface a
         failed completion (empty outputs — prefill never finished)."""
         self.quarantined += 1
+        if self.tracer.enabled:
+            self.tracer.instant("request_failed", track="requests",
+                                uid=req.uid, error=error)
+            self.tracer.metrics.counter("requests_failed").add()
         self.done.append(RecurrentCompletion(
             uid=req.uid, prompt_len=len(req.frames),
             outputs=np.zeros((0, self.H), np.float32),
@@ -347,6 +363,8 @@ class RecurrentServingEngine:
         self.generated[slot] = []
         self.slot_ticks[slot] = 0
         self.admitted_at[slot] = time.monotonic()
+        if self.tracer.enabled:
+            self._admit_us[slot] = self.tracer.now_us()
 
     # ------------------------------------------------------------------
     def _decode_tick(self):
@@ -383,9 +401,19 @@ class RecurrentServingEngine:
         self.decode_ticks += 1
         self.decode_launches += p.launches
         self.last_decode_plan = p
+        if self.tracer.enabled:
+            # serving-level distributions: how full the pool runs and how
+            # deep admissions back up, one observation per tick
+            self.tracer.metrics.histogram("slot_occupancy").observe(
+                len(active))
+            self.tracer.metrics.histogram("queue_depth").observe(
+                len(self.queue))
         if self.watchdog is not None and self.watchdog.observe(
                 self.decode_ticks, time.perf_counter() - t0):
             self.straggler_ticks.append(self.decode_ticks)
+            if self.tracer.enabled:
+                self.tracer.instant("straggler", tick=self.decode_ticks)
+                self.tracer.metrics.counter("straggler_ticks").add()
 
         self.h = self.h.at[:, idx].set(st["h"].astype(jnp.float32))
         if self.c is not None:
@@ -419,6 +447,16 @@ class RecurrentServingEngine:
         req = self.slots[slot]
         gen = (np.stack(self.generated[slot]) if self.generated[slot]
                else np.zeros((0, self.H), np.float32))
+        if self.tracer.enabled:
+            # the request's whole admit->retire lifetime as ONE retroactive
+            # span on the "requests" track, beside the exec track's launches
+            now = self.tracer.now_us()
+            start = self._admit_us[slot]
+            self.tracer.span_at(
+                "request", start if start is not None else now, now,
+                track="requests", uid=req.uid, slot=slot, status=status,
+                ticks=self.slot_ticks[slot], frames=len(gen))
+            self.tracer.metrics.counter(f"requests_{status}").add()
         self.done.append(RecurrentCompletion(
             uid=req.uid, prompt_len=len(req.frames),
             outputs=self.prefill_out[slot], generated=gen,
@@ -426,6 +464,7 @@ class RecurrentServingEngine:
         self.slots[slot] = None
         self.generated[slot] = []
         self.admitted_at[slot] = None
+        self._admit_us[slot] = None
 
     def _retire(self):
         """Deadline-aware retirement: frame-budget completion ("ok"),

@@ -1,0 +1,268 @@
+"""runtime.obs unit tests: span nesting, histogram quantiles on known
+data, the no-op tracer path, chrome-trace JSON schema round-trip, the
+predicted-vs-measured launch-cost table, and the shared bench timer."""
+import json
+
+import pytest
+
+from repro.runtime.obs import (LAUNCH_COSTS_PATH, Counter, Histogram,
+                               LaunchCostTable, MetricsRegistry, NULL_TRACER,
+                               NullTracer, Tracer, as_tracer, measure_us,
+                               slot_signature)
+
+
+# ---------------------------------------------------------------------------
+# counters + histograms
+# ---------------------------------------------------------------------------
+
+
+def test_counter():
+    c = Counter()
+    assert c.value == 0
+    c.add()
+    c.add(4)
+    assert c.value == 5
+
+
+def test_histogram_quantiles_known_data():
+    h = Histogram()
+    for v in range(1, 101):  # 1..100: nearest-rank quantiles are exact
+        h.observe(float(v))
+    assert h.count == 100
+    assert h.quantile(0.5) == 50.0
+    assert h.quantile(0.9) == 90.0
+    assert h.quantile(0.99) == 99.0
+    assert h.quantile(1.0) == 100.0
+    snap = h.snapshot()
+    assert snap["count"] == 100
+    assert snap["min"] == 1.0 and snap["max"] == 100.0
+    assert snap["mean"] == pytest.approx(50.5)
+    assert snap["p50"] == 50.0 and snap["p90"] == 90.0
+
+
+def test_histogram_reservoir_is_bounded_but_stats_exact():
+    h = Histogram(cap=64)
+    n = 10_000
+    for v in range(n):
+        h.observe(float(v))
+    assert h.count == n                      # full count kept
+    assert len(h._sample) == 64              # memory bounded
+    assert h.min == 0.0 and h.max == n - 1   # exact extremes
+    assert h.mean == pytest.approx((n - 1) / 2)
+    # reservoir quantile is approximate but must stay in range
+    assert 0.0 <= h.quantile(0.5) <= n - 1
+
+
+def test_histogram_empty():
+    h = Histogram()
+    assert h.quantile(0.5) == 0.0
+    assert h.snapshot()["count"] == 0
+
+
+def test_metrics_registry_reuses_instruments():
+    m = MetricsRegistry()
+    assert m.counter("a") is m.counter("a")
+    assert m.histogram("b") is m.histogram("b")
+    m.counter("a").add(2)
+    m.histogram("b").observe(3.0)
+    snap = m.snapshot()
+    assert snap["counters"]["a"] == 2
+    assert snap["histograms"]["b"]["count"] == 1
+    assert "a" in m.describe() and "b" in m.describe()
+
+
+# ---------------------------------------------------------------------------
+# spans + tracer
+# ---------------------------------------------------------------------------
+
+
+def test_span_nesting_depth_and_timing():
+    tr = Tracer()
+    with tr.span("outer", a=1):
+        with tr.span("inner"):
+            pass
+    # inner files first (exits first), depths record the nesting
+    names = [(s.name, s.depth) for s in tr.events]
+    assert names == [("inner", 1), ("outer", 0)]
+    inner, outer = tr.events
+    assert outer.tags == {"a": 1}
+    assert outer.start_us <= inner.start_us
+    assert (inner.start_us + inner.dur_us
+            <= outer.start_us + outer.dur_us + 1e-6)
+
+
+def test_span_tag_and_span_at_and_instant():
+    tr = Tracer()
+    with tr.span("s") as sp:
+        sp.tag(extra="x")
+    assert tr.events[0].tags == {"extra": "x"}
+    sp = tr.span_at("req", 10.0, 25.0, track="requests", uid=7)
+    assert sp.dur_us == 15.0 and sp.track == "requests"
+    tr.instant("fault", slot=3)
+    assert tr.events[-1].dur_us is None  # instants have no duration
+
+
+def test_plan_id_stable_and_sequential():
+    tr = Tracer()
+    a, b = object(), object()
+    assert tr.plan_id(a) == 0
+    assert tr.plan_id(b) == 1
+    assert tr.plan_id(a) == 0
+
+
+def test_observe_launch_feeds_histogram_and_table():
+    tr = Tracer()
+    sig = slot_signature("lstm", 64, 2, 1, 12, "float32")
+    for us in (100.0, 110.0, 120.0):
+        tr.observe_launch(sig, est_cycles=550.0, dur_us=us)
+    snap = tr.snapshot()
+    assert snap["metrics"]["histograms"][f"launch_us/{sig}"]["count"] == 3
+    row = snap["launch_costs"][sig]
+    assert row["n"] == 3 and row["med_us"] == 110.0
+    assert row["cycles_per_us"] == pytest.approx(5.0)
+    assert snap["predicted_vs_measured"]["signatures"] == 1
+    assert snap["predicted_vs_measured"]["mean_cycles_per_us"] == \
+        pytest.approx(5.0)
+
+
+def test_slot_signature_format():
+    assert (slot_signature("lstm", 64, 2, 1, 12, "float32")
+            == "lstm|H64|G2|B1|bt12|float32|fwd")
+    assert (slot_signature("gru", 96, 1, 4, 1, "bfloat16",
+                           directions=("fwd", "bwd"), chained=True)
+            == "gru|H96|G1|B4|bt1|bfloat16|bwd+fwd|chained")
+
+
+# ---------------------------------------------------------------------------
+# the no-op path
+# ---------------------------------------------------------------------------
+
+
+def test_null_tracer_is_inert():
+    assert NULL_TRACER.enabled is False
+    assert isinstance(NULL_TRACER, NullTracer)
+    sp = NULL_TRACER.span("x", a=1)
+    assert sp is NULL_TRACER.span("y")  # one reused span object
+    with sp as s:
+        s.tag(b=2)
+    assert NULL_TRACER.events == ()     # nothing ever recorded
+    obj = {"h": [1, 2]}
+    assert NULL_TRACER.fence(obj) is obj  # identity, no jax import needed
+    NULL_TRACER.instant("x")
+    NULL_TRACER.span_at("x", 0.0, 1.0)
+    NULL_TRACER.observe_launch("sig", 1.0, 1.0)
+    assert NULL_TRACER.snapshot()["spans"] == 0
+    assert len(NULL_TRACER.launch_costs) == 0
+
+
+def test_as_tracer():
+    assert as_tracer(None) is NULL_TRACER
+    tr = Tracer()
+    assert as_tracer(tr) is tr
+
+
+# ---------------------------------------------------------------------------
+# chrome trace export
+# ---------------------------------------------------------------------------
+
+
+def test_chrome_trace_schema_round_trip(tmp_path):
+    tr = Tracer()
+    with tr.span("outer"):
+        with tr.span("inner", slot=0):
+            pass
+        tr.instant("marker", slot=1)
+    tr.span_at("request", tr.events[0].start_us,
+               tr.events[0].start_us + 5.0, track="requests", uid=3)
+    path = tr.export_chrome_trace(str(tmp_path / "trace.json"))
+
+    data = json.loads(open(path).read())
+    assert data["displayTimeUnit"] == "ms"
+    evs = data["traceEvents"]
+    by_ph = {}
+    for e in evs:
+        by_ph.setdefault(e["ph"], []).append(e)
+    # process metadata + one thread_name per track (exec, requests)
+    meta_names = {e["name"]: e for e in by_ph["M"] if e["name"] != ""}
+    assert meta_names["process_name"]["args"]["name"] == "repro"
+    thread_names = {e["args"]["name"] for e in by_ph["M"]
+                    if e["name"] == "thread_name"}
+    assert thread_names == {"exec", "requests"}
+    # complete events: inner's interval nests inside outer's
+    X = {e["name"]: e for e in by_ph["X"]}
+    assert set(X) == {"outer", "inner", "request"}
+    assert X["outer"]["ts"] <= X["inner"]["ts"]
+    assert (X["inner"]["ts"] + X["inner"]["dur"]
+            <= X["outer"]["ts"] + X["outer"]["dur"] + 1e-3)
+    # the instant marker
+    (inst,) = by_ph["i"]
+    assert inst["name"] == "marker" and inst["s"] == "t"
+    assert inst["args"] == {"slot": 1}
+    # exec and requests land on different tids
+    assert X["request"]["tid"] != X["inner"]["tid"]
+
+
+# ---------------------------------------------------------------------------
+# launch-cost persistence
+# ---------------------------------------------------------------------------
+
+
+def test_launch_cost_table_save_load_merge(tmp_path):
+    path = str(tmp_path / "launch_costs.json")
+    t1 = LaunchCostTable()
+    t1.record("sigA", 100.0, 10.0)
+    t1.record("sigB", 200.0, 20.0)
+    assert t1.save(path) == path
+    loaded = LaunchCostTable.load(path)
+    assert set(loaded) == {"sigA", "sigB"}
+    assert loaded["sigA"]["cycles_per_us"] == pytest.approx(10.0)
+
+    # merge contract: this run's signatures overwrite, unseen ones kept
+    t2 = LaunchCostTable()
+    t2.record("sigB", 200.0, 40.0)
+    t2.record("sigC", 300.0, 30.0)
+    t2.save(path)
+    merged = LaunchCostTable.load(path)
+    assert set(merged) == {"sigA", "sigB", "sigC"}
+    assert merged["sigA"]["med_us"] == 10.0   # kept from run 1
+    assert merged["sigB"]["med_us"] == 40.0   # overwritten by run 2
+    assert "sigA" in open(path).read()        # plain JSON on disk
+    assert LAUNCH_COSTS_PATH.endswith("launch_costs.json")
+
+
+def test_launch_cost_describe():
+    t = LaunchCostTable()
+    assert "none measured" in t.describe()
+    t.record("sig", 100.0, 10.0)
+    assert "10.0us" in t.describe() and "100cy" in t.describe()
+
+
+# ---------------------------------------------------------------------------
+# the shared bench timer
+# ---------------------------------------------------------------------------
+
+
+def test_measure_us_warmup_excluded_and_positive():
+    calls = []
+
+    def fn(x):
+        calls.append(x)
+        return x
+
+    us = measure_us(fn, 1, repeats=3, warmup=2, reduce="median")
+    assert us >= 0.0
+    assert len(calls) == 5  # 2 warmup + 3 timed
+
+    assert measure_us(fn, 1, repeats=2, reduce="min") >= 0.0
+
+
+def test_measure_us_rejects_bad_reduce():
+    with pytest.raises(ValueError):
+        measure_us(lambda: None, reduce="mean")
+
+
+def test_tracer_describe_mentions_spans():
+    tr = Tracer()
+    with tr.span("s"):
+        pass
+    assert "1 spans" in tr.describe()

@@ -1,0 +1,43 @@
+"""Smoke-run ``examples/trace_demo.py`` (the `make trace-demo` target CI
+uploads artifacts from): it must execute end-to-end and leave behind a
+valid chrome://tracing JSON, a metrics snapshot with launch quantiles,
+and the predicted-vs-measured launch-cost table."""
+import json
+import os
+import subprocess
+import sys
+
+from tests.conftest import REPO_ROOT, SRC
+
+
+def test_trace_demo_writes_artifacts(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable,
+         os.path.join(REPO_ROOT, "examples", "trace_demo.py"),
+         "--out-dir", str(tmp_path)],
+        cwd=REPO_ROOT, env=env, capture_output=True, text=True, timeout=560)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "observability:" in proc.stdout
+
+    # the chrome trace: X spans for the whole pipeline, on the exec track
+    trace = json.loads((tmp_path / "trace.json").read_text())
+    assert trace["displayTimeUnit"] == "ms"
+    names = {e["name"] for e in trace["traceEvents"] if e["ph"] == "X"}
+    assert {"forward", "prefill", "decode_tick", "plan", "hoist",
+            "slot_launch"} <= names
+
+    # the metrics snapshot: per-signature quantiles + the aggregate ratio
+    snap = json.loads((tmp_path / "metrics_snapshot.json").read_text())
+    assert snap["spans"] > 0
+    assert snap["metrics"]["histograms"]["decode_tick_us"]["count"] == 3
+    assert snap["predicted_vs_measured"]["signatures"] >= 2
+    assert snap["predicted_vs_measured"]["mean_cycles_per_us"] > 0
+
+    # the persisted launch-cost table (the autotune-style artifact)
+    costs = json.loads((tmp_path / "launch_costs.json").read_text())
+    assert costs["signatures"]
+    for sig, row in costs["signatures"].items():
+        assert sig.startswith(("lstm|", "gru|"))
+        assert row["med_us"] > 0 and row["cycles_per_us"] > 0
