@@ -2,8 +2,8 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test ci chaos deprecations api-demo trace-demo bench-kernels \
-        bench-dispatch bench
+.PHONY: test ci chaos deprecations lint-repro verify-plans api-demo \
+        trace-demo bench-kernels bench-dispatch bench
 
 test:
 	$(PY) -m pytest -x -q
@@ -24,6 +24,20 @@ chaos:
 deprecations:
 	$(PY) -m pytest -x -q -W "error::DeprecationWarning:repro\."
 
+# Static repo lint (repro.analysis.repolint): no deprecated-shim calls, no
+# bare assert/RuntimeError on the serving path, one fenced clock
+# (runtime/obs.py), no Slot-internals coupling outside planner/executor/
+# analysis.  Pure AST walk — no test execution, fails CI before pytest.
+lint-repro:
+	$(PY) -m repro.analysis.repolint src/repro
+
+# The static-analysis suite by name: the plan-invariant mutation tests
+# (every seeded corruption rejected with its rule, pristine plans clean)
+# plus the lint's own tests.  A subset of `make test`; CI runs it early
+# as the fast dispatch-invariant gate.
+verify-plans:
+	$(PY) -m pytest -x -q tests/analysis
+
 # The unified front-end tour (compile/forward/prefill/decode + plans).
 api-demo:
 	$(PY) examples/rnn_api_demo.py
@@ -34,11 +48,12 @@ api-demo:
 trace-demo:
 	$(PY) examples/trace_demo.py --out-dir artifacts
 
-# What CI runs (.github/workflows/ci.yml): the tier-1 suite (which already
-# includes the benchmark smoke tests — tests/test_bench_smoke.py runs the
-# kernels + dispatch suites end-to-end and checks their claims) under the
-# deprecations gate — one run covers both.
-ci: deprecations
+# What CI runs (.github/workflows/ci.yml): the static lint first (no test
+# execution needed), then the tier-1 suite (which already includes the
+# benchmark smoke tests — tests/test_bench_smoke.py runs the kernels +
+# dispatch suites end-to-end and checks their claims) under the
+# deprecations gate — one pytest run covers both.
+ci: lint-repro deprecations
 
 # Kernel microbench suite; writes BENCH_kernels.json (committed — the
 # cross-PR perf trajectory).

@@ -21,6 +21,11 @@ records a bidirectional admission wave through the interleaved fwd/bwd
 wavefront vs the retired per-layer fused fallback (per request, per layer,
 per direction — no packing), bit-equal gated.
 
+The verify sub-suite (ISSUE-8) prices static plan verification:
+``verify="plan"`` (the default) vs ``verify="off"`` on the steady-state
+forward — bit-identity gated, smoke-checked < 5% — plus the one-time
+plancheck proof cost itself on a plan-cache miss.
+
 Rows report the MEDIAN of ``--repeats`` timed calls (after one warm-up);
 raise ``--repeats`` for stabler medians.
 """
@@ -115,6 +120,7 @@ def dispatch(emit, repeats: int = 3) -> None:
     _bidir_rows(emit, repeats)
     _fault_rows(emit, repeats)
     _obs_rows(emit, repeats)
+    _verify_rows(emit, repeats)
 
 
 def _decode_rows(emit, repeats: int = 3) -> None:
@@ -437,3 +443,50 @@ def _obs_rows(emit, repeats: int = 3) -> None:
     emit("dispatch/obs_traced_decode_tick", t_on,
          f"{shapes} trace=on chained overhead={(r - 1) * 100:+.1f}% "
          "(pairwise median, best of 3 trials)")
+
+
+def _verify_rows(emit, repeats: int = 3) -> None:
+    """ISSUE-8: static plan verification, priced.  The same compiled
+    forward with ``verify="off"`` vs ``verify="plan"`` (the default) —
+    bit-identity gated first, because a verifier must be observation
+    only.  Verification runs once per plan-cache miss, so the steady
+    state pays ~nothing (the smoke test asserts the pairwise estimate
+    stays < 5%); the ``verify_plancheck`` row prices the one-time
+    cache-miss cost itself — the full 13-rule proof over the mixed-batch
+    plan of the suite's main scenario."""
+    from repro.analysis.plancheck import check_plan
+
+    cfg, T, B = lstm_config(64, layers=3), 24, 8
+    stack = init_lstm_stack(jax.random.PRNGKey(0), cfg, jnp.float32)
+    xs = jax.random.normal(jax.random.PRNGKey(500), (B, T, 64)) * 0.5
+
+    off = rnn.compile(stack, rnn.ExecutionPolicy(interpret=True,
+                                                 verify="off"))
+    on = rnn.compile(stack, rnn.ExecutionPolicy(interpret=True,
+                                                verify="plan"))
+
+    # -- identity gate: verification must never alter execution -----------
+    np.testing.assert_array_equal(np.asarray(off.forward(xs)),
+                                  np.asarray(on.forward(xs)))
+    assert on.stats.plans_verified == 1 and off.stats.plans_verified == 0
+
+    shapes = f"H{cfg.lstm_hidden}L{cfg.n_layers}T{T}B{B}"
+    t_off, t_on, r = _overhead(lambda: off.forward(xs),
+                               lambda: on.forward(xs))
+    emit("dispatch/verify_off_forward", t_off,
+         f"{shapes} verify=off")
+    emit("dispatch/verify_on_forward", t_on,
+         f"{shapes} verify=plan overhead={(r - 1) * 100:+.1f}% "
+         "(pairwise median, best of 3 trials; verified once per "
+         "plan-cache miss)")
+
+    # the cache-miss cost itself: one full static proof of the suite's
+    # mixed-batch plan (no execution involved)
+    items = [WorkItem.from_config(c, T=t, uid=i)
+             for i, (c, t) in enumerate(MIX)]
+    p = plan(items)
+    rep = check_plan(p)
+    emit("dispatch/verify_plancheck",
+         _time(check_plan, p, repeat=max(repeats, 5)),
+         f"mixed batch: {rep.items} items {rep.slots} slots "
+         f"{rep.cells} cells, {len(rep.rules)} rules proven")

@@ -1,0 +1,17 @@
+"""Static analysis over the repo's own artifacts.
+
+Two layers, no execution involved in either:
+
+  * ``plancheck`` — a static verifier over ``DispatchPlan``: proves
+    coverage, wavefront readiness (the race/hazard rules), packing
+    legality, and resource budgets per plan, raising structured
+    ``runtime.errors.PlanInvariantError`` on any violation.  Wired into
+    the rnn facade as ``ExecutionPolicy(verify="plan")`` (the default).
+  * ``repolint`` — an AST lint enforcing the repo's codebase contracts
+    (no deprecated shims, no bare asserts on the serving path, one
+    fenced clock, no slot-internals coupling); ``make lint-repro``.
+"""
+from repro.analysis.plancheck import (PlanCheckReport, RULES,
+                                      check_decode_tick, check_plan)
+
+__all__ = ["check_plan", "check_decode_tick", "PlanCheckReport", "RULES"]

@@ -395,7 +395,10 @@ def _guarded_launch(slot_index: int, uids, ladder, *, on_fault: str,
             if tracer.enabled:
                 tracer.metrics.counter("degraded_launches").add()
         return result
-    raise AssertionError("unreachable: ladder exhausted without raising")
+    raise LaunchError(
+        f"guarded ladder for slot {slot_index} exhausted every rung "
+        "without returning or raising — executor invariant broken",
+        uids=uids, slot=slot_index, level=FALLBACK_LEVELS[last])
 
 
 def _seq_ladder(slot, U, xw, h0, c0, b_valid, *, interpret):

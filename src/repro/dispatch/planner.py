@@ -571,6 +571,19 @@ def _with_naive(ip: ItemPlan) -> ItemPlan:
 # ---------------------------------------------------------------------------
 
 
+def validate_unique_uids(items: Sequence[WorkItem]) -> None:
+    """Reject duplicate ``uid``s — the one identity rule every planner
+    entry point (and the static verifier's coverage check) shares.  A uid
+    names one request's row range across every slot; a duplicate would
+    silently alias two requests' state.  Raises ``PlanRejected`` (a
+    ``ValueError``: duplicate ids are an input error)."""
+    seen = Counter(it.uid for it in items)
+    dups = sorted(u for u, n in seen.items() if n > 1)
+    if dups:
+        from repro.runtime.errors import PlanRejected
+        raise PlanRejected(f"duplicate WorkItem uids {dups}", uids=dups)
+
+
 def plan(items: Iterable[WorkItem], *, macs: int = DEFAULT_MACS,
          align_stripes: bool = True, cross_b: bool = True,
          schedule: Optional[str] = None, block_t: int = 0,
@@ -604,8 +617,7 @@ def plan(items: Iterable[WorkItem], *, macs: int = DEFAULT_MACS,
         raise ValueError(f"unknown schedule {schedule!r}; "
                          f"options {FORCED_SCHEDULES}")
     items = sorted(items, key=WorkItem.order_key)
-    if len({it.uid for it in items}) != len(items):
-        raise ValueError("duplicate WorkItem uids")
+    validate_unique_uids(items)
     design = Design(macs=macs, schedule="unfolded")
 
     with tracer.span("plan", n_items=len(items),
@@ -655,8 +667,7 @@ def plan_decode(items: Iterable[WorkItem], *, macs: int = DEFAULT_MACS,
     items = sorted(items, key=WorkItem.order_key)
     if not items:
         raise ValueError("plan_decode needs at least one item")
-    if len({it.uid for it in items}) != len(items):
-        raise ValueError("duplicate WorkItem uids")
+    validate_unique_uids(items)
     head = items[0]
     if head.family not in ("lstm", "gru"):
         raise ValueError(f"no decode kernel for family {head.family!r}")
@@ -696,7 +707,14 @@ def plan_decode(items: Iterable[WorkItem], *, macs: int = DEFAULT_MACS,
     # by the (L-1)·LAUNCH_CYCLES term, so a flip means the perfmodel broke
     # (fail here with context rather than confuse the serving engine with
     # an unexpected plan shape)
-    assert est_chain <= est_layers, (est_chain, est_layers)
+    if est_chain > est_layers:
+        from repro.runtime.errors import PlanInvariantError
+        raise PlanInvariantError(
+            f"decode cost model inverted: chained launch estimated at "
+            f"{est_chain} cycles > {est_layers} for the per-layer walk, "
+            f"but they differ only by the (L-1)·LAUNCH_CYCLES term "
+            f"({head.family} H{head.H} L{head.L}) — the perfmodel broke",
+            rule="decode-cost-model", uids=[it.uid for it in items])
     if tracer.enabled:
         tracer.instant(
             "plan_candidates", uids=[it.uid for it in items],

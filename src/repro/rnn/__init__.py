@@ -17,13 +17,14 @@ directory for the API tour and the migration table from the deprecated
 """
 from repro.rnn.compiled import CompiledStack, StackStats, compile  # noqa: F401
 from repro.rnn.policy import (DTYPES, ON_FAULT, SCHEDULES,  # noqa: F401
-                              ExecutionPolicy)
+                              VERIFY, ExecutionPolicy)
 from repro.runtime.errors import (FALLBACK_LEVELS, FaultInjector,  # noqa: F401
                                   LaunchError, NonFiniteStateError,
-                                  PlanRejected, QueueFull, RequestTimeout,
-                                  ServingFault)
+                                  PlanInvariantError, PlanRejected,
+                                  QueueFull, RequestTimeout, ServingFault)
 
 __all__ = ["compile", "CompiledStack", "StackStats", "ExecutionPolicy",
-           "SCHEDULES", "DTYPES", "ON_FAULT", "FALLBACK_LEVELS",
+           "SCHEDULES", "DTYPES", "ON_FAULT", "VERIFY", "FALLBACK_LEVELS",
            "ServingFault", "LaunchError", "NonFiniteStateError",
-           "PlanRejected", "QueueFull", "RequestTimeout", "FaultInjector"]
+           "PlanRejected", "PlanInvariantError", "QueueFull",
+           "RequestTimeout", "FaultInjector"]

@@ -75,6 +75,7 @@ class StackStats:
     launches: int = 0
     est_cycles: float = 0.0
     plans_built: int = 0
+    plans_verified: int = 0
     decode_launches: int = 0
     decode_plans_built: int = 0
     degraded_launches: int = 0
@@ -236,6 +237,14 @@ class CompiledStack:
         p = self._plans.get(key)
         if p is None:
             p = build()
+            if self.policy.verify == "plan":
+                # verify ONCE per cache miss, before the plan is ever
+                # executable from the cache — steady-state reuse pays
+                # nothing, and the verify span prices the miss cost
+                from repro.analysis.plancheck import check_plan
+                with self.tracer.span("verify", slots=len(p.slots)):
+                    check_plan(p)
+                self.stats.plans_verified += 1
             while len(self._plans) >= self.MAX_CACHED_PLANS:
                 self._plans.pop(next(iter(self._plans)))
             self._plans[key] = p
@@ -468,7 +477,8 @@ class CompiledStack:
             f"  {self.policy.describe()}",
             f"  stats: {s.forward_calls} forward / {s.decode_calls} decode "
             f"calls, {s.launches} launches ({s.decode_launches} decode), "
-            f"{s.plans_built} plans built ({s.decode_plans_built} decode), "
+            f"{s.plans_built} plans built ({s.decode_plans_built} decode, "
+            f"{s.plans_verified} verified), "
             f"est {s.est_cycles:.0f}cy",
             f"  plan cache: {len(self._plans)} shapes",
         ]

@@ -33,6 +33,13 @@ DTYPES = ("float32", "bfloat16", "float16")
 #: the degradation recorded in ``CompiledStack.stats``.
 ON_FAULT = ("raise", "fallback")
 
+#: "plan" (the default) statically verifies every DispatchPlan the stack
+#: builds — coverage, wavefront readiness, packing legality, VMEM budget
+#: (``analysis.plancheck``) — raising a structured ``PlanInvariantError``
+#: before any launch; runs once per plan-cache build, under an obs
+#: ``verify`` span.  "off" skips verification (the benchmark baseline).
+VERIFY = ("off", "plan")
+
 
 def _bad(field: str, value, allowed) -> ValueError:
     return ValueError(
@@ -64,6 +71,13 @@ class ExecutionPolicy:
                a structured ``NonFiniteStateError`` naming the poisoned
                items (fallback cannot fix a NaN — it re-derives
                deterministically — so this raises under either on_fault).
+    verify:    "plan" (default) statically verifies every plan the stack
+               builds against the dispatch invariants — exact coverage,
+               wavefront readiness, packing legality, stripe/VMEM budgets
+               (``analysis.plancheck``) — raising ``PlanInvariantError``
+               before anything launches; "off" skips the check.  Runs
+               once per plan-cache build (amortizes to zero across cache
+               hits) and is counted in ``.stats.plans_verified``.
     trace:     record wall-clock spans + metrics for every plan/launch/
                decode tick on ``CompiledStack.tracer`` (a
                ``runtime.obs.Tracer`` — Chrome-trace export, latency
@@ -81,6 +95,7 @@ class ExecutionPolicy:
     macs: int = DEFAULT_MACS
     on_fault: str = "raise"
     check_finite: bool = False
+    verify: str = "plan"
     trace: bool = False
 
     def __post_init__(self):
@@ -103,6 +118,8 @@ class ExecutionPolicy:
             raise _bad("on_fault", self.on_fault, ON_FAULT)
         if not isinstance(self.check_finite, bool):
             raise _bad("check_finite", self.check_finite, (True, False))
+        if self.verify not in VERIFY:
+            raise _bad("verify", self.verify, VERIFY)
         if not isinstance(self.trace, bool):
             raise _bad("trace", self.trace, (True, False))
 
@@ -112,4 +129,5 @@ class ExecutionPolicy:
                 f"interpret={self.interpret}, dtype={self.dtype or 'keep'}, "
                 f"packing={self.packing}, macs={self.macs}, "
                 f"on_fault={self.on_fault}, "
-                f"check_finite={self.check_finite}, trace={self.trace})")
+                f"check_finite={self.check_finite}, "
+                f"verify={self.verify}, trace={self.trace})")

@@ -1,9 +1,9 @@
 from repro.runtime.errors import (  # noqa: F401
     FALLBACK_LEVELS, ExecutionReport, FaultInjector, LaunchError,
-    NonFiniteStateError, PlanRejected, QueueFull, RequestTimeout,
-    ServingFault)
+    NonFiniteStateError, PlanInvariantError, PlanRejected, QueueFull,
+    RequestTimeout, ServingFault)
 from repro.runtime.ft import FTConfig, StragglerWatchdog, TrainLoop  # noqa: F401
 from repro.runtime.obs import (  # noqa: F401
     LAUNCH_COSTS_PATH, Counter, Histogram, LaunchCostTable, MetricsRegistry,
-    NULL_TRACER, NullTracer, Span, Tracer, as_tracer, measure_us,
-    slot_signature)
+    NULL_TRACER, NullTracer, Span, Tracer, as_tracer, fence, measure_us,
+    monotonic_s, slot_signature)

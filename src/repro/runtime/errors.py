@@ -17,6 +17,15 @@ work instead of unwinding the whole engine:
   * ``PlanRejected``       — a request's shape/configuration cannot be
                              served by the planned path (also a
                              ``ValueError``: rejection is an input error).
+  * ``PlanInvariantError`` — a ``DispatchPlan`` failed static verification
+                             (``analysis.plancheck``): a dispatch invariant
+                             — coverage, wavefront readiness, packing
+                             legality, resource budget — does not hold.
+                             Carries the violated ``rule`` name, the slot
+                             index, and the offending cell, so a CI failure
+                             or a serving-side rejection names the exact
+                             broken theorem instead of a launch-time
+                             mystery.
   * ``RequestTimeout``     — a deadline expired; carries the uids still in
                              flight and, from the engine's
                              ``run_to_completion``, the completions already
@@ -83,6 +92,24 @@ class PlanRejected(ServingFault, ValueError):
     """The planned path cannot serve this request/configuration (shape,
     family, or state-surface mismatch).  Also a ValueError: rejection is
     a property of the input, not a runtime failure."""
+
+
+class PlanInvariantError(ServingFault):
+    """A ``DispatchPlan`` failed static verification.
+
+    Raised by ``analysis.plancheck`` (and by planner-internal consistency
+    checks) with no execution involved: ``rule`` names the violated
+    invariant (one of ``analysis.plancheck.RULES`` plus the planner's
+    "decode-cost-model" and the engine's "decode-active-rows"), ``slot``
+    the plan slot it anchors to (None for plan-level rules), and ``cell``
+    the offending ``(uid, layer, chunk, direction)`` cell when one exists.
+    """
+
+    def __init__(self, msg: str, *, rule: str, uids: Sequence[int] = (),
+                 slot: Optional[int] = None, cell=None):
+        super().__init__(msg, uids=uids, slot=slot)
+        self.rule = rule
+        self.cell = cell
 
 
 class RequestTimeout(ServingFault):
@@ -176,5 +203,6 @@ class ExecutionReport:
 
 
 __all__ = ["ServingFault", "LaunchError", "NonFiniteStateError",
-           "PlanRejected", "RequestTimeout", "QueueFull",
-           "FaultInjector", "ExecutionReport", "FALLBACK_LEVELS"]
+           "PlanRejected", "PlanInvariantError", "RequestTimeout",
+           "QueueFull", "FaultInjector", "ExecutionReport",
+           "FALLBACK_LEVELS"]

@@ -20,13 +20,12 @@ from __future__ import annotations
 
 import dataclasses
 import logging
-import time
 from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence
 
-import jax
 import numpy as np
 
 from repro.checkpoint import Checkpointer
+from repro.runtime import obs
 
 log = logging.getLogger("repro.runtime")
 
@@ -101,13 +100,13 @@ class TrainLoop:
             if step in self.failure_at_steps:
                 self.failure_at_steps.discard(step)
                 raise RuntimeError(f"injected fault at step {step}")
-            t0 = time.time()
+            t0 = obs.monotonic_s()
             batch = self.batch_fn(step)
             params, opt, metrics = self.train_step(state["params"],
                                                    state["opt"], batch)
-            jax.block_until_ready(params)
+            obs.fence(params)
             state = {"params": params, "opt": opt}
-            dt = time.time() - t0
+            dt = obs.monotonic_s() - t0
             self.watchdog.observe(step, dt)
             self.metrics_history.append(
                 {"step": step, "time_s": dt,

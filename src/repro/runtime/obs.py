@@ -486,8 +486,26 @@ def as_tracer(tracer: Optional[Tracer]) -> Tracer:
 
 
 # ---------------------------------------------------------------------------
-# the one benchmark timer
+# the one benchmark timer (and the serving path's one clock)
 # ---------------------------------------------------------------------------
+
+
+def monotonic_s() -> float:
+    """Monotonic seconds — the serving/runtime layers' one wall-clock for
+    deadlines and tick durations.  ``analysis.repolint`` (rule
+    timing-outside-obs) bans direct ``time.*`` calls on those paths so
+    every measurement funnels through this module's discipline; interval
+    consumers call this instead."""
+    return time.monotonic()
+
+
+def fence(value):
+    """``jax.block_until_ready`` as a function, for callers that time
+    around device work without holding a ``Tracer`` (the tracer's
+    ``fence`` method is the traced-path equivalent)."""
+    import jax
+
+    return jax.block_until_ready(value)
 
 
 def measure_us(fn: Callable, *args, repeats: int = 3, warmup: int = 1,
@@ -527,4 +545,5 @@ def slot_signature(family: str, H: int, G: int, B: int, chunk_len: int,
 
 __all__ = ["Tracer", "NullTracer", "NULL_TRACER", "as_tracer", "Span",
            "Counter", "Histogram", "MetricsRegistry", "LaunchCostTable",
-           "LAUNCH_COSTS_PATH", "measure_us", "slot_signature"]
+           "LAUNCH_COSTS_PATH", "measure_us", "monotonic_s", "fence",
+           "slot_signature"]

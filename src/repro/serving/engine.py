@@ -33,6 +33,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import transformer as tf
+from repro.runtime.errors import PlanRejected, RequestTimeout
 
 
 @dataclasses.dataclass
@@ -53,7 +54,10 @@ class Completion:
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, max_batch: int = 4,
                  max_seq: int = 256, temperature: float = 0.0, seed: int = 0):
-        assert not cfg.embed_stub, "stub-frontend archs serve via embeds API"
+        if cfg.embed_stub:
+            raise PlanRejected(
+                "stub-frontend archs serve via the embeds API, not the "
+                "token engine")
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -182,5 +186,9 @@ class ServingEngine:
         while (self.queue or any(s is not None for s in self.slots)):
             self.step()
             if self.steps > max_ticks:
-                raise RuntimeError("engine did not drain")
+                in_flight = [s.uid for s in self.slots if s is not None]
+                raise RequestTimeout(
+                    f"engine did not drain within {max_ticks} ticks "
+                    f"({len(self.queue)} queued, uids {in_flight} in "
+                    "flight)", uids=in_flight, done=self.done)
         return self.done

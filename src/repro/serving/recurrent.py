@@ -65,15 +65,16 @@ path provable in CPU tests.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Dict, List, Optional, Set
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.plancheck import check_decode_tick
 from repro.configs.base import ModelConfig
 from repro.dispatch.planner import DispatchPlan
 from repro.rnn import CompiledStack, ExecutionPolicy, compile as rnn_compile
+from repro.runtime import obs
 from repro.runtime.errors import (LaunchError, NonFiniteStateError,
                                   PlanRejected, QueueFull, RequestTimeout)
 from repro.runtime.ft import StragglerWatchdog
@@ -362,7 +363,7 @@ class RecurrentServingEngine:
         self.slots[slot] = req
         self.generated[slot] = []
         self.slot_ticks[slot] = 0
-        self.admitted_at[slot] = time.monotonic()
+        self.admitted_at[slot] = obs.monotonic_s()
         if self.tracer.enabled:
             self._admit_us[slot] = self.tracer.now_us()
 
@@ -390,14 +391,12 @@ class RecurrentServingEngine:
         state = {"h": self.h[:, idx]}
         if self.c is not None:
             state["c"] = self.c[:, idx]
-        t0 = time.perf_counter()
+        t0 = obs.monotonic_s()
         y, st = self.compiled.decode(self.last_y[idx], state)
         p = self.compiled.last_decode_plan
-        # the dispatch claim, asserted every tick: k active slots plan
+        # the dispatch claim, verified every tick: k active slots plan
         # exactly k-row cells — empty slots are never computed
-        assert all(s.B == len(active) and all(b == len(active)
-                                              for b in s.group_b)
-                   for s in p.slots), p.describe()
+        check_decode_tick(p, len(active))
         self.decode_ticks += 1
         self.decode_launches += p.launches
         self.last_decode_plan = p
@@ -409,7 +408,7 @@ class RecurrentServingEngine:
             self.tracer.metrics.histogram("queue_depth").observe(
                 len(self.queue))
         if self.watchdog is not None and self.watchdog.observe(
-                self.decode_ticks, time.perf_counter() - t0):
+                self.decode_ticks, obs.monotonic_s() - t0):
             self.straggler_ticks.append(self.decode_ticks)
             if self.tracer.enabled:
                 self.tracer.instant("straggler", tick=self.decode_ticks)
@@ -471,7 +470,7 @@ class RecurrentServingEngine:
         decode-tick deadline (``max_ticks``), and wall-time deadline
         (``deadline_s``, measured from admission) — expired requests
         retire as ``status="timeout"`` carrying their partial output."""
-        now = time.monotonic()
+        now = obs.monotonic_s()
         for slot, req in enumerate(self.slots):
             if req is None:
                 continue

@@ -1,0 +1,138 @@
+"""analysis.repolint: the AST lint over the repo's own contracts.
+
+Each rule is exercised on a minimal source snippet (both the violating
+and the compliant form, and both in- and out-of-scope paths), and the
+acceptance criterion — the lint runs clean over the real ``src/repro``
+tree — is itself a test, so a future PR that reintroduces a bare assert
+on the serving path or an ad-hoc ``time.time()`` fails here before CI's
+``make lint-repro`` ever runs.
+"""
+import subprocess
+import sys
+from pathlib import Path
+
+from repro.analysis.repolint import (collect, lint_source, main)
+
+SRC = Path(__file__).resolve().parents[2] / "src" / "repro"
+
+
+def _rules(src, relpath):
+    return [v.rule for v in lint_source(src, relpath)]
+
+
+# ---------------------------------------------------------------------------
+# RL001: deprecated shims
+# ---------------------------------------------------------------------------
+
+
+def test_rl001_flags_deprecated_shim_calls_anywhere():
+    src = "from repro.core import schedules\nschedules.run_stack(p, x)\n"
+    assert _rules(src, "src/repro/models/foo.py") == ["RL001"]
+    assert _rules("run_layer(p, x)\n", "src/repro/serving/bar.py") \
+        == ["RL001"]
+
+
+def test_rl001_allows_suffixed_entry_points_and_defining_modules():
+    ok = "from repro.core import schedules\nschedules.run_layer_fused(p, x)\n"
+    assert "RL001" not in _rules(ok, "src/repro/dispatch/executor.py")
+    # the defining modules may reference their own shims
+    assert "RL001" not in _rules("run_layer(p, x)\n",
+                                 "src/repro/core/schedules.py")
+    assert "RL001" not in _rules("run_layer(p, x)\n",
+                                 "src/repro/core/gru.py")
+
+
+# ---------------------------------------------------------------------------
+# RL002: bare assert / RuntimeError on the serving path
+# ---------------------------------------------------------------------------
+
+
+def test_rl002_flags_assert_and_runtime_error_on_serving_path():
+    assert _rules("assert x > 0\n", "src/repro/serving/x.py") == ["RL002"]
+    assert _rules("raise RuntimeError('boom')\n",
+                  "src/repro/dispatch/x.py") == ["RL002"]
+    assert _rules("raise AssertionError('unreachable')\n",
+                  "src/repro/rnn/x.py") == ["RL002"]
+
+
+def test_rl002_allows_taxonomy_and_out_of_scope_asserts():
+    ok = ("from repro.runtime.errors import LaunchError\n"
+          "raise LaunchError('x', uids=(1,), slot=0)\n")
+    assert _rules(ok, "src/repro/serving/x.py") == []
+    assert _rules("raise ValueError('bad input')\n",
+                  "src/repro/rnn/x.py") == []
+    # tests and non-serving layers keep their asserts
+    assert _rules("assert x\n", "src/repro/core/lstm.py") == []
+    assert _rules("assert x\n", "tests/test_foo.py") == []
+
+
+# ---------------------------------------------------------------------------
+# RL003: timing / fencing outside runtime/obs.py
+# ---------------------------------------------------------------------------
+
+
+def test_rl003_flags_timing_and_fencing_in_scope():
+    assert _rules("import time\nt0 = time.perf_counter()\n",
+                  "src/repro/serving/x.py") == ["RL003"]
+    assert _rules("import jax\njax.block_until_ready(y)\n",
+                  "src/repro/dispatch/x.py") == ["RL003"]
+    assert _rules("import time\ntime.time()\n",
+                  "src/repro/runtime/ft.py") == ["RL003"]
+
+
+def test_rl003_exempts_obs_and_non_runtime_layers():
+    assert _rules("import time\ntime.perf_counter()\n",
+                  "src/repro/runtime/obs.py") == []
+    # launch/checkpoint legitimately stamp wall-clock metadata
+    assert _rules("import time\ntime.time()\n",
+                  "src/repro/launch/submit.py") == []
+    ok = "from repro.runtime import obs\nt0 = obs.monotonic_s()\n"
+    assert _rules(ok, "src/repro/serving/x.py") == []
+
+
+# ---------------------------------------------------------------------------
+# RL004: Slot packing-field reads outside planner/executor/analysis
+# ---------------------------------------------------------------------------
+
+
+def test_rl004_flags_slot_internals_outside_owners():
+    assert _rules("w = slot.wave\n", "src/repro/serving/x.py") == ["RL004"]
+    assert _rules("bs = [s.group_b for s in p.slots]\n",
+                  "src/repro/models/x.py") == ["RL004"]
+
+
+def test_rl004_exempts_owners_and_self_access():
+    assert _rules("w = slot.wave\n", "src/repro/dispatch/planner.py") == []
+    assert _rules("w = slot.tile_k\n", "src/repro/dispatch/executor.py") == []
+    assert _rules("w = slot.chained\n", "src/repro/analysis/plancheck.py") == []
+    # a dataclass using a same-named field on itself is not a read of
+    # someone else's Slot
+    assert _rules("class A:\n  def f(self):\n    return self.wave\n",
+                  "src/repro/serving/x.py") == []
+
+
+# ---------------------------------------------------------------------------
+# the acceptance criterion: the real tree is clean, and the CLI agrees
+# ---------------------------------------------------------------------------
+
+
+def test_src_repro_is_lint_clean():
+    violations = collect(SRC)
+    assert violations == [], "\n".join(str(v) for v in violations)
+
+
+def test_cli_exit_codes(tmp_path):
+    assert main([str(SRC)]) == 0
+    bad = tmp_path / "repro" / "serving"
+    bad.mkdir(parents=True)
+    (bad / "x.py").write_text("assert broken\n")
+    assert main([str(tmp_path)]) == 1
+    assert main([str(tmp_path / "nope")]) == 2
+
+
+def test_module_entry_point_runs():
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.repolint", str(SRC)],
+        capture_output=True, text=True)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "clean" in out.stdout

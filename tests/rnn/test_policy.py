@@ -32,6 +32,7 @@ def test_unknown_schedule_names_field_and_values():
     ("macs", 0), ("macs", -5), ("macs", 2.5), ("macs", False),
     ("on_fault", "retry"), ("on_fault", True),
     ("check_finite", "yes"), ("check_finite", 1),
+    ("verify", "bogus"), ("verify", True), ("verify", None),
 ])
 def test_bad_fields_name_themselves(field, value):
     with pytest.raises(ValueError, match=f"ExecutionPolicy.{field}"):
@@ -59,6 +60,18 @@ def test_fault_knobs_default_fail_fast():
         assert ExecutionPolicy(on_fault=mode).on_fault == mode
     assert "check_finite=True" in \
         ExecutionPolicy(check_finite=True).describe()
+
+
+def test_verify_defaults_on_and_validates():
+    """ISSUE-8: static plan verification is on by default ("plan"); the
+    knob validates like every other field and shows up in describe()."""
+    from repro.rnn import VERIFY
+
+    pol = ExecutionPolicy()
+    assert pol.verify == "plan"
+    assert "verify=plan" in pol.describe()
+    for mode in VERIFY:
+        assert ExecutionPolicy(verify=mode).verify == mode
 
 
 def test_policy_is_frozen_and_hashable():

@@ -98,3 +98,14 @@ def test_dispatch_suite_writes_json(tmp_path):
                                    derived).group(1))
         assert overhead < 5.0, (kind, derived)
         assert rows[f"dispatch/obs_untraced_{kind}"]["us_per_call"] > 0
+    # the static-analysis claim (ISSUE-8), measured: verify="plan" (the
+    # default) costs < 5% on the steady-state forward — verification runs
+    # once per plan-cache miss, so the amortized cost is noise (bit-
+    # identity gated inside the bench) — and the one-time plancheck proof
+    # itself was timed over the mixed-batch plan with all rules proven
+    derived = rows["dispatch/verify_on_forward"]["derived"]
+    overhead = float(re.search(r"overhead=([+-][\d.]+)%",
+                               derived).group(1))
+    assert overhead < 5.0, derived
+    assert rows["dispatch/verify_off_forward"]["us_per_call"] > 0
+    assert "rules proven" in rows["dispatch/verify_plancheck"]["derived"]
