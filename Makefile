@@ -3,7 +3,7 @@ PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
 .PHONY: test ci chaos deprecations lint-repro verify-plans api-demo \
-        trace-demo bench-kernels bench-dispatch bench
+        trace-demo calibrate bench-kernels bench-dispatch bench
 
 test:
 	$(PY) -m pytest -x -q
@@ -47,6 +47,17 @@ api-demo:
 # CI runs this and uploads the trace as a build artifact.
 trace-demo:
 	$(PY) examples/trace_demo.py --out-dir artifacts
+
+# Compile-and-replay calibration (repro.calib): replay the smoke grid of
+# launch shapes through the shared obs clock into
+# artifacts/measured_costs.json (merged across runs, backend-tagged), then
+# re-replay every signature and exit nonzero if any fresh measurement
+# disagrees with the stored median beyond 25x — the unit/lowering sanity
+# gate (generous: it catches a broken replay, not scheduler jitter).  CI
+# runs this and uploads the table as a build artifact; plan against it
+# with ExecutionPolicy(cost_model="measured").
+calibrate:
+	$(PY) -m repro.calib --grid smoke --repeats 3 --check 25
 
 # What CI runs (.github/workflows/ci.yml): the static lint first (no test
 # execution needed), then the tier-1 suite (which already includes the

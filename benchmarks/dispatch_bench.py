@@ -21,6 +21,13 @@ records a bidirectional admission wave through the interleaved fwd/bwd
 wavefront vs the retired per-layer fused fallback (per request, per layer,
 per direction — no packing), bit-equal gated.
 
+The cost-model sub-suite (ISSUE-9) proves the measured cost model flips a
+real planner decision: after an in-process calibration of both competing
+plans' launch signatures, ``cost_model="measured"`` schedules the
+canonical forward fused where ``"analytic"`` picks the G-merged
+wavefront — bit-equal gated, and the flipped plan must win the wall
+clock before its row is emitted.
+
 The verify sub-suite (ISSUE-8) prices static plan verification:
 ``verify="plan"`` (the default) vs ``verify="off"`` on the steady-state
 forward — bit-identity gated, smoke-checked < 5% — plus the one-time
@@ -121,6 +128,7 @@ def dispatch(emit, repeats: int = 3) -> None:
     _fault_rows(emit, repeats)
     _obs_rows(emit, repeats)
     _verify_rows(emit, repeats)
+    _cost_model_rows(emit, repeats)
 
 
 def _decode_rows(emit, repeats: int = 3) -> None:
@@ -368,6 +376,74 @@ def _fault_rows(emit, repeats: int = 3) -> None:
          _time(reference.forward, xs, repeat=repeats),
          f"{shapes} slots={n_slots} fallback=reference "
          f"degraded={n_slots}/call")
+
+
+def _cost_model_rows(emit, repeats: int = 3) -> None:
+    """ISSUE-9: the measured cost model, proved against the clock.  The
+    suite's canonical forward (H64 L3 T24 B1) is planned both ways after
+    an in-process calibration: ``repro.calib`` replays the launch
+    signatures of BOTH competing plans — the fused per-layer slots and
+    the wavefront's stripes including its G2-merged middle slots —
+    through the shared obs clock into a throwaway table.  The analytic
+    perfmodel picks the wavefront (its G-merge term assumes MXU rows run
+    merged cells in parallel, so merging is nearly free); the measured
+    table knows that under the interpreter a G2 launch costs ~2x a G1
+    launch — the merge does NOT pay — and flips the schedule to fused,
+    which wall-clocks ~2x faster.  Bit-equal gated, and both the flip
+    and the wall-clock win are asserted before emission (the smoke test
+    re-asserts them from the recorded rows)."""
+    import os
+    import tempfile
+
+    from repro.calib import Candidate, calibrate
+
+    H, L, T, B = 64, 3, 24, 1
+    cfg = lstm_config(H, layers=L)
+    stack = init_lstm_stack(jax.random.PRNGKey(0), cfg, jnp.float32)
+    xs = jax.random.normal(jax.random.PRNGKey(600), (B, T, H)) * 0.5
+
+    # every signature either competing plan would launch, so the measured
+    # scorer resolves each candidate by exact hit (no interpolation)
+    cands = [Candidate(family="lstm", H=H, G=1, B=B, block_t=T),
+             Candidate(family="lstm", H=H, G=1, B=B, block_t=T // 2),
+             Candidate(family="lstm", H=H, G=2, B=B, block_t=T // 2),
+             Candidate(family="lstm", H=H, G=1, B=B, block_t=1)]
+    table = calibrate(cands, interpret=True, repeats=max(repeats, 3),
+                      warmup=1)
+
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "measured_costs.json")
+        table.save(path)
+        analytic = rnn.compile(stack, rnn.ExecutionPolicy(interpret=True))
+        measured = rnn.compile(stack, rnn.ExecutionPolicy(
+            interpret=True, cost_model="measured", cost_table=path))
+
+        p_a, p_m = analytic.lower(B, T), measured.lower(B, T)
+        sched_a, bt_a = p_a.items[0].schedule, p_a.items[0].block_t
+        sched_m, bt_m = p_m.items[0].schedule, p_m.items[0].block_t
+        assert (sched_a, bt_a) == ("wavefront", T // 2), (sched_a, bt_a)
+        assert (sched_m, bt_m) == ("fused", T), (sched_m, bt_m)  # the flip
+        assert p_m.launches < p_a.launches
+        assert measured.stats.measured_hits > 0
+        assert measured.stats.analytic_fallbacks == 0  # all exact hits
+
+        # -- identity gate: the flipped plan computes the same forward ----
+        np.testing.assert_array_equal(np.asarray(analytic.forward(xs)),
+                                      np.asarray(measured.forward(xs)))
+
+        t_a = _time(analytic.forward, xs, repeat=max(repeats, 5))
+        t_m = _time(measured.forward, xs, repeat=max(repeats, 5))
+        assert t_m <= t_a, (t_m, t_a)              # ...and won the clock
+
+        shapes = f"H{H}L{L}T{T}B{B}"
+        emit("dispatch/costmodel_analytic_forward", t_a,
+             f"{shapes} schedule={sched_a} bt={bt_a} launches={p_a.launches}"
+             " (analytic: the G-merge term prices merged cells as "
+             "parallel)")
+        emit("dispatch/costmodel_measured_forward", t_m,
+             f"{shapes} schedule={sched_m} bt={bt_m} launches={p_m.launches}"
+             f" (measured table flipped wavefront->fused; "
+             f"hits={measured.stats.measured_hits} fallbacks=0)")
 
 
 def _overhead(fn_off, fn_on, pairs: int = 11, trials: int = 3):

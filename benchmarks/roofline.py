@@ -4,8 +4,8 @@
     memory     = HLO_bytes_per_chip / HBM_bw             (819e9 B/s)
     collective = collective_bytes_per_chip / link_bw     (50e9 B/s)
 
-The HLO walker (hlo_cost.py) parses the post-SPMD, per-device optimized
-module, so its numbers are already per-chip.  Caveat recorded in
+The HLO walker (repro.calib.hlo) parses the post-SPMD, per-device
+optimized module, so its numbers are already per-chip.  Caveat recorded in
 EXPERIMENTS.md: the CPU backend legalizes bf16 by upcasting to f32, which
 inflates the bytes term ~2x vs a real TPU lowering; flops and collective
 bytes are dtype-exact from shapes.
@@ -18,13 +18,10 @@ from __future__ import annotations
 
 import json
 import os
-import sys
 from typing import Dict, Optional
 
+from repro.calib.hlo import analyze_file
 from repro.configs import SHAPES, get_config, V5E
-
-sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
-from hlo_cost import analyze_file  # noqa: E402
 
 
 def model_flops(arch: str, shape_name: str) -> float:

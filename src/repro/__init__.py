@@ -10,7 +10,7 @@ Submodules load lazily (``repro.kernels``, ``repro.dispatch``, ...) so
 """
 from importlib import import_module
 
-_SUBMODULES = ("checkpoint", "configs", "core", "data", "dispatch",
+_SUBMODULES = ("calib", "checkpoint", "configs", "core", "data", "dispatch",
                "kernels", "launch", "models", "optim", "rnn", "runtime",
                "serving", "sharding")
 

@@ -25,21 +25,25 @@ the build before any test runs:
 
 ``RL003`` timing-outside-obs
     No ``time.*`` calls and no ``jax.block_until_ready`` outside
-    ``runtime/obs.py`` (scope: ``dispatch/``, ``rnn/``, ``serving/``,
-    ``runtime/``).  Timing and fencing go through the obs module's
-    ``measure_us`` / ``monotonic_s`` / ``fence`` so every measurement in
-    the repo shares one fenced clock (the PR-4 "one benchmark timer"
-    rule, now machine-checked).  Launch-side modules (``launch/``,
-    ``checkpoint/``) legitimately stamp wall-clock epoch metadata and are
-    out of scope.
+    ``runtime/obs.py`` (scope: ``calib/``, ``dispatch/``, ``rnn/``,
+    ``serving/``, ``runtime/``).  Timing and fencing go through the obs
+    module's ``measure_samples`` / ``measure_us`` / ``monotonic_s`` /
+    ``fence`` so every measurement in the repo shares one fenced clock
+    (the PR-4 "one benchmark timer" rule, now machine-checked) — the
+    calibration replay harness included: its measured tables are only
+    comparable to the tracer's launch costs because both come off the
+    same clock.  Launch-side modules (``launch/``, ``checkpoint/``)
+    legitimately stamp wall-clock epoch metadata and are out of scope.
 
 ``RL004`` slot-field-read
     ``Slot.signature()``-relevant fields (``wave``, ``chunk_len``,
     ``group_b``, ``chained``, ``tile_k``, ``mvm_block``) are read only by
-    the planner, the executor, the verifier (``analysis/``), and
-    ``runtime/obs.py``.  Any other module pattern-matching on slot
-    internals is coupling to the packing layout, which the planner is
-    free to change under the same ``signature()``; such code must go
+    the planner, the executor, the verifier (``analysis/``),
+    ``runtime/obs.py``, and the calibration subsystem (``calib/`` replays
+    exactly the launches those fields describe — it is the measurement
+    side of the same contract).  Any other module pattern-matching on
+    slot internals is coupling to the packing layout, which the planner
+    is free to change under the same ``signature()``; such code must go
     through ``DispatchPlan``'s public accessors or the verifier.
 
 Usage::
@@ -76,10 +80,10 @@ SLOT_FIELDS = frozenset(
 _SCOPES = {
     "RL001": (("",), ("core/schedules.py", "core/gru.py")),
     "RL002": (("dispatch/", "rnn/", "serving/"), ()),
-    "RL003": (("dispatch/", "rnn/", "serving/", "runtime/"),
+    "RL003": (("calib/", "dispatch/", "rnn/", "serving/", "runtime/"),
               ("runtime/obs.py",)),
     "RL004": (("",), ("dispatch/planner.py", "dispatch/executor.py",
-                      "runtime/obs.py", "analysis/")),
+                      "runtime/obs.py", "analysis/", "calib/")),
 }
 
 

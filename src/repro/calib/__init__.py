@@ -1,0 +1,36 @@
+"""repro.calib: the compile-and-replay calibration subsystem.
+
+The planner's analytic ``perfmodel`` ranks launch shapes by hand-written
+cycle formulas; this package measures the same shapes on the real backend
+and gives the planner ground truth to score against
+(``ExecutionPolicy(cost_model="measured")``):
+
+``candidates``  enumerate candidate slot shapes — from a model through
+                the real planner, or an explicit grid — deduped by
+                ``Slot.signature()``
+``replay``      lower each candidate to the executor's exact kernel call
+                and time it through ``runtime.obs.measure_samples``
+``table``       ``MeasuredCostTable`` (persisted, backend-tagged,
+                merge-across-runs, staleness-versioned) and
+                ``MeasuredCostModel`` (exact hit -> interpolated neighbor
+                -> analytic fallback, the planner's measured scorer)
+``hlo``         the static optimized-HLO cost walker (roofline input)
+
+CLI: ``python -m repro.calib`` replays the smoke grid into
+``artifacts/measured_costs.json`` (see ``make calibrate``).
+"""
+from repro.calib.candidates import (Candidate, SMOKE_GRID, candidates_for,
+                                    dedupe, sweep_grid)
+from repro.calib.replay import calibrate, check_table, replay_candidate
+from repro.calib.table import (MEASURED_COSTS_PATH, MeasuredCostModel,
+                               MeasuredCostTable, TABLE_VERSION,
+                               analytic_shape_cycles, current_backend,
+                               parse_signature)
+
+__all__ = [
+    "Candidate", "SMOKE_GRID", "candidates_for", "dedupe", "sweep_grid",
+    "calibrate", "check_table", "replay_candidate",
+    "MEASURED_COSTS_PATH", "TABLE_VERSION", "MeasuredCostModel",
+    "MeasuredCostTable", "analytic_shape_cycles", "current_backend",
+    "parse_signature",
+]

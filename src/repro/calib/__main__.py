@@ -1,0 +1,65 @@
+"""CLI: replay a calibration grid into artifacts/measured_costs.json.
+
+    python -m repro.calib [--grid smoke|small] [--repeats N] [--warmup N]
+                          [--out PATH] [--check TOL] [--no-save]
+
+``--check TOL`` re-replays every calibrated signature once after the
+table is built and exits nonzero if any fresh measurement disagrees with
+the stored median by more than TOL x either way — the `make calibrate`
+gate (generous default: it catches unit/lowering errors, not scheduler
+jitter; 0 disables).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.calib.candidates import SMOKE_GRID, sweep_grid
+from repro.calib.replay import calibrate, check_table
+from repro.calib.table import MEASURED_COSTS_PATH, current_backend
+
+#: --grid small: the smoke axes widened one notch per dim (still minutes,
+#: not hours, under the interpreter)
+SMALL_GRID = dict(families=("lstm", "gru"), Hs=(64, 128), Gs=(1, 2, 3),
+                  Bs=(1, 3, 8), block_ts=(1, 8), dtypes=("float32",),
+                  chained_Ls=(2, 3))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.calib",
+        description="compile-and-replay calibration -> measured cost table")
+    ap.add_argument("--grid", choices=("smoke", "small"), default="smoke")
+    ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--warmup", type=int, default=1)
+    ap.add_argument("--out", default=MEASURED_COSTS_PATH)
+    ap.add_argument("--check", type=float, default=0.0, metavar="TOL",
+                    help="re-replay each signature and fail beyond TOLx "
+                         "disagreement (0 = skip)")
+    ap.add_argument("--no-save", action="store_true",
+                    help="replay and report without touching --out")
+    args = ap.parse_args(argv)
+
+    grid = SMOKE_GRID if args.grid == "smoke" else SMALL_GRID
+    cands = sweep_grid(**grid)
+    print(f"calibrating {len(cands)} candidate shapes "
+          f"[{current_backend()}] ({args.grid} grid, "
+          f"repeats={args.repeats})")
+    table = calibrate(cands, repeats=args.repeats, warmup=args.warmup,
+                      progress=print)
+    if not args.no_save:
+        path = table.save(args.out)
+        print(f"saved -> {path}")
+    if args.check > 0:
+        print(f"verifying replay vs table (tolerance {args.check:g}x):")
+        bad = check_table(table, tolerance=args.check, progress=print)
+        if bad:
+            print(f"FAIL: {len(bad)} signature(s) disagree beyond "
+                  f"{args.check:g}x: {', '.join(bad)}")
+            return 1
+        print("ok: replay and table agree within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,4 +1,10 @@
-"""Optimized-HLO cost analyzer for the roofline (§Roofline of EXPERIMENTS.md).
+"""Optimized-HLO cost analyzer (static side of the calibration subsystem).
+
+Part of ``repro.calib``: where replay.py MEASURES a candidate launch on
+the live backend, this walker statically prices a dumped optimized-HLO
+module (flops/bytes/collectives) — the roofline's input (§Roofline of
+EXPERIMENTS.md, benchmarks/roofline.py).  CLI:
+``python -m repro.calib.hlo <module.txt[.gz]>``.
 
 Why not ``compiled.cost_analysis()``: XLA's analysis counts a while-loop
 body ONCE, so anything under ``lax.scan`` (our layer stacks, microbatch

@@ -288,8 +288,27 @@ def _slot_config(family: str, H: int, macs: int) -> Tuple[int, Tuple[int, int]]:
     return tile_k, mvm_block
 
 
+def _active_cost_model(cost_model):
+    """Normalize the planner's ``cost_model`` kwarg: the model itself when
+    it can actually score (a populated table for this backend), else None
+    — an EMPTY table must leave every decision on the analytic path, so
+    cold-start measured mode is bit-identical to analytic mode."""
+    return cost_model if (cost_model is not None
+                          and cost_model.active) else None
+
+
+def _slots_us(slots: Sequence[Slot], cm) -> float:
+    """Measured µs of a slot timeline: the sum of each launch's cost under
+    the measured cost model (exact hit -> interpolated neighbor ->
+    analytic-converted fallback; see ``calib.MeasuredCostModel``)."""
+    return sum(
+        cm.slot_us(s.family, s.H, s.g, s.B, s.chunk_len, s.dtype,
+                   dirs=[c.direction for c in s.cells], chained=s.chained)
+        for s in slots)
+
+
 def _pack(item_plans: Sequence[ItemPlan], macs: int, *,
-          cross_b: bool = True) -> Tuple[Slot, ...]:
+          cross_b: bool = True, cost_model=None) -> Tuple[Slot, ...]:
     """Merge items' wavefront cells into one slot timeline.
 
     Every slot is one G-batched launch; cells group by launch signature
@@ -301,12 +320,15 @@ def _pack(item_plans: Sequence[ItemPlan], macs: int, *,
         recurrent MVM is identical (one U), so the rows simply widen;
       * rows of different widths may share a slot by padding to the widest
         row with in-kernel ragged-B masking — adopted only when the
-        perfmodel says the padded walk beats the extra launch
-        (``slot_launch_cycles``: B-widened vs G-batched).
+        cost model says the padded walk beats the extra launch: analytic
+        ``slot_launch_cycles`` (B-widened vs G-batched) by default, or
+        measured µs for the same two shapes when ``cost_model`` is an
+        active ``calib.MeasuredCostModel``.
 
     Deterministic: slots ordered by (wave, signature), rows by the lead
     cell's item order_key then layer, cells within a row likewise.
     """
+    cm = _active_cost_model(cost_model)
     design = Design(macs=macs or DEFAULT_MACS, schedule="unfolded")
     by_item = [(ip, _item_cells(ip)) for ip in item_plans]
     n_waves = max((max(w) + 1 for _, w in by_item if w), default=0)
@@ -370,11 +392,21 @@ def _pack(item_plans: Sequence[ItemPlan], macs: int, *,
             if len(classes) > 1:
                 # B-widened (one padded launch) vs G-batched by width
                 # (exact rows, one launch per width class) — scored
-                merged = slot_launch_cycles(family, H, chunk_len, widths,
-                                            design)
-                split = sum(slot_launch_cycles(
-                    family, H, chunk_len, [w for w in widths if w == cls],
-                    design) for cls in classes)
+                if cm is not None:
+                    dirs = sorted({c.direction for _, cells, _ in rows
+                                   for c in cells})
+                    merged = cm.slot_us(family, H, len(rows), max(widths),
+                                        chunk_len, dtype, dirs=dirs)
+                    split = sum(cm.slot_us(
+                        family, H, sum(1 for w in widths if w == cls), cls,
+                        chunk_len, dtype, dirs=dirs) for cls in classes)
+                else:
+                    merged = slot_launch_cycles(family, H, chunk_len,
+                                                widths, design)
+                    split = sum(slot_launch_cycles(
+                        family, H, chunk_len,
+                        [w for w in widths if w == cls],
+                        design) for cls in classes)
                 buckets = ([rows] if merged <= split else
                            [[r for r in rows if r[2] == cls]
                             for cls in classes])
@@ -492,10 +524,36 @@ def _forced_plan(it: WorkItem, design: Design, force: str, force_bt: int,
     return _with_naive(ip)
 
 
+def _per_step_us(it: WorkItem, cm, design: Design) -> float:
+    """Measured µs of the per_step candidate: its lstm launches priced by
+    the cost model (one cell-kernel launch per (layer, step): the G=1,
+    bt=1 signature at the item's B), plus any zero-launch gru scan compute
+    converted from the analytic estimate — per_step must not look free
+    just because pure-jnp work never hits the launch table."""
+    n_lstm = sum(1 for f in it.families if f == "lstm")
+    other = it.dirs * sum(
+        per_step_plan_cycles(f, it.H, it.X, it.T, n, design,
+                             launch_cycles=0)
+        for f, n in sorted(Counter(it.families).items()) if f != "lstm")
+    launches_us = (it.dirs * n_lstm * it.T *
+                   cm.slot_us("lstm", it.H, 1, it.B, 1, it.dtype)
+                   if n_lstm else 0.0)
+    return launches_us + (cm.cycles_to_us(other) if other else 0.0)
+
+
 def _schedule_item(it: WorkItem, macs: int, design: Design,
                    force: Optional[str] = None,
-                   force_bt: int = 0, tracer=NULL_TRACER) -> ItemPlan:
-    """Tile + score one item: pick fused/wavefront striping or fallback."""
+                   force_bt: int = 0, tracer=NULL_TRACER,
+                   cost_model=None) -> ItemPlan:
+    """Tile + score one item: pick fused/wavefront striping or fallback.
+
+    With an active measured ``cost_model``, the CHOICE among candidates is
+    made on measured µs — each wavefront/fused candidate is solo-packed
+    into its slot timeline and priced launch by launch, per_step through
+    ``_per_step_us`` — while ``est_cycles`` stays the analytic estimate of
+    whatever won (one unit for all downstream cycle accounting).  The
+    ``plan_candidates`` instant then records BOTH scores per candidate, so
+    analytic-vs-measured divergence stays observable in traces."""
     tile_k = table().tile(it.gates * it.H, max(it.H, it.X), macs).k
     mvm_block = table().block(it.H, it.H, vmem_budget=2 * 2**20)
 
@@ -542,16 +600,41 @@ def _schedule_item(it: WorkItem, macs: int, design: Design,
         scored.append((est, -bt, bt, nk, "wavefront" if nk > 1 else "fused"))
     ps = _per_step_plan(it, design, tile_k, mvm_block, dirs=it.dirs)
     scored.append((ps.est_cycles, 0, 0, it.T, "per_step"))
-    est, _, bt, nk, sched = min(scored)
+
+    cm = _active_cost_model(cost_model)
+    measured_us: Dict[Tuple[str, int], float] = {}
+    if cm is not None:
+        # re-rank on measured µs: price each candidate's actual launches
+        for e, _, b, n, s in scored:
+            if s == "per_step":
+                measured_us[(s, b)] = _per_step_us(it, cm, design)
+                continue
+            trial = ItemPlan(item=it, schedule=s, block_t=b, nk=n,
+                             tile_k=tile_k, mvm_block=mvm_block,
+                             naive_launches=0, est_cycles=e)
+            measured_us[(s, b)] = _slots_us(
+                _pack([trial], macs, cost_model=cm), cm)
+        mu, _, bt, nk, sched = min(
+            (measured_us[(s, b)], negb, b, n, s)
+            for _, negb, b, n, s in scored)
+        est = next(e for e, _, b, n, s in scored
+                   if (s, b) == (sched, bt))
+    else:
+        est, _, bt, nk, sched = min(scored)
 
     if tracer.enabled:
         # chosen-vs-rejected: every candidate the scorer weighed, so a
-        # trace shows WHY a shape won (and by how little)
+        # trace shows WHY a shape won (and by how little); under an active
+        # measured cost model each candidate carries both scores
         tracer.instant(
             "plan_candidates", uid=it.uid, chosen=f"{sched}@bt{bt}",
-            candidates=[{"schedule": s, "block_t": b, "nk": n,
-                         "est_cycles": e}
-                        for e, _, b, n, s in sorted(scored)])
+            cost_model="measured" if cm is not None else "analytic",
+            candidates=[
+                dict({"schedule": s, "block_t": b, "nk": n,
+                      "est_cycles": e},
+                     **({"est_us": measured_us[(s, b)]}
+                        if cm is not None else {}))
+                for e, _, b, n, s in sorted(scored)])
 
     if sched == "per_step":
         return ps
@@ -587,7 +670,7 @@ def validate_unique_uids(items: Sequence[WorkItem]) -> None:
 def plan(items: Iterable[WorkItem], *, macs: int = DEFAULT_MACS,
          align_stripes: bool = True, cross_b: bool = True,
          schedule: Optional[str] = None, block_t: int = 0,
-         tracer=None) -> DispatchPlan:
+         tracer=None, cost_model=None) -> DispatchPlan:
     """Plan a batch of WorkItems into an explicit DispatchPlan.
 
     ``align_stripes``: items that could share launches (same family/H/
@@ -611,6 +694,14 @@ def plan(items: Iterable[WorkItem], *, macs: int = DEFAULT_MACS,
     ``plan`` span tagged with the outcome (slots/launches/est_cycles) and
     each auto-scored item emits a ``plan_candidates`` instant with its
     chosen-vs-rejected schedule scores.
+
+    ``cost_model``: an optional ``calib.MeasuredCostModel`` — when active
+    (non-empty table for this backend), schedule/block_t choice and
+    ``_pack``'s merge-vs-split are decided on measured µs instead of
+    analytic cycles (``plan_candidates`` records both); when None or
+    cold (empty table) every decision is exactly the analytic one.
+    Stripe alignment stays analytic either way (a launch-credit
+    heuristic, not a launch-shape choice).
     """
     tracer = as_tracer(tracer)
     if schedule is not None and schedule not in FORCED_SCHEDULES:
@@ -619,11 +710,15 @@ def plan(items: Iterable[WorkItem], *, macs: int = DEFAULT_MACS,
     items = sorted(items, key=WorkItem.order_key)
     validate_unique_uids(items)
     design = Design(macs=macs, schedule="unfolded")
+    cm = _active_cost_model(cost_model)
 
     with tracer.span("plan", n_items=len(items),
-                     schedule=schedule or "auto") as sp:
+                     schedule=schedule or "auto",
+                     cost_model="measured" if cm is not None
+                     else "analytic") as sp:
         plans = {it.uid: _schedule_item(it, macs, design, force=schedule,
-                                        force_bt=block_t, tracer=tracer)
+                                        force_bt=block_t, tracer=tracer,
+                                        cost_model=cm)
                  for it in items}
 
         # a pinned block_t is a contract — alignment must not re-stripe it
@@ -639,7 +734,7 @@ def plan(items: Iterable[WorkItem], *, macs: int = DEFAULT_MACS,
             else:
                 external.append(ip.uid)
 
-        slots = _pack(packable, macs, cross_b=cross_b)
+        slots = _pack(packable, macs, cross_b=cross_b, cost_model=cm)
         out = DispatchPlan(items=tuple(plans[it.uid] for it in items),
                            slots=slots, external=tuple(external), macs=macs)
         sp.tag(slots=len(out.slots), launches=out.launches,
@@ -648,7 +743,7 @@ def plan(items: Iterable[WorkItem], *, macs: int = DEFAULT_MACS,
 
 
 def plan_decode(items: Iterable[WorkItem], *, macs: int = DEFAULT_MACS,
-                tracer=None) -> DispatchPlan:
+                tracer=None, cost_model=None) -> DispatchPlan:
     """Plan one serving decode tick: each item is a T=1 evaluation of the
     SAME parameter stack (all items must carry one non-None ``share`` key)
     for some batch rows — one active request each, in the serving engine.
@@ -661,7 +756,17 @@ def plan_decode(items: Iterable[WorkItem], *, macs: int = DEFAULT_MACS,
     items' rows concatenate on B (cross-B packing, trivially un-ragged:
     every layer carries the same rows).  The choice is scored, not
     assumed: ``decode_plan_cycles`` (1 launch) vs ``stack_plan_cycles``
-    at nk=1 (L launches); the chain wins whenever LAUNCH_CYCLES > 0.
+    at nk=1 (L launches); analytically the chain wins whenever
+    LAUNCH_CYCLES > 0.
+
+    With an active measured ``cost_model``, chained-vs-loop becomes a REAL
+    decision: the chained signature's measured µs against the per-layer
+    timeline's (the generic planner at schedule="wavefront", block_t=1 —
+    the exact plan shape ``repro.rnn`` already executes for mixed-stack
+    decode, so the executor, plancheck, and the serving engine all handle
+    it unchanged).  On backends where one chained launch wall-clocks worse
+    than L small launches (every interpret backend we measure), the
+    measured table flips this tick to the per-layer plan.
     """
     tracer = as_tracer(tracer)
     items = sorted(items, key=WorkItem.order_key)
@@ -715,12 +820,39 @@ def plan_decode(items: Iterable[WorkItem], *, macs: int = DEFAULT_MACS,
             f"but they differ only by the (L-1)·LAUNCH_CYCLES term "
             f"({head.family} H{head.H} L{head.L}) — the perfmodel broke",
             rule="decode-cost-model", uids=[it.uid for it in items])
+    B_total = sum(it.B for it in items)
+
+    # measured mode: chained-vs-loop is a real decision, scored in µs.
+    # The per-layer alternative is the generic planner's own plan (the
+    # shape repro.rnn already executes for mixed stacks) so returning it
+    # changes nothing downstream but the launch count.
+    cm = _active_cost_model(cost_model)
+    chosen = "chained"
+    alt = None
+    est_chain_us = est_layers_us = None
+    if cm is not None:
+        est_chain_us = cm.slot_us(head.family, head.H, head.L, B_total, 1,
+                                  head.dtype, chained=True)
+        alt = plan(items, macs=macs, cross_b=True, schedule="wavefront",
+                   block_t=1, tracer=None, cost_model=cost_model)
+        est_layers_us = _slots_us(alt.slots, cm)
+        if est_layers_us < est_chain_us:
+            chosen = "per_layer"
+
     if tracer.enabled:
+        cands = [{"schedule": "chained", "est_cycles": est_chain},
+                 {"schedule": "per_layer", "est_cycles": est_layers}]
+        if cm is not None:
+            cands[0]["est_us"] = est_chain_us
+            cands[1]["est_us"] = est_layers_us
         tracer.instant(
             "plan_candidates", uids=[it.uid for it in items],
-            chosen="chained",
-            candidates=[{"schedule": "chained", "est_cycles": est_chain},
-                        {"schedule": "per_layer", "est_cycles": est_layers}])
+            chosen=chosen,
+            cost_model="measured" if cm is not None else "analytic",
+            candidates=cands)
+
+    if chosen == "per_layer":
+        return alt
 
     with tracer.span("plan", n_items=len(items), schedule="decode",
                      est_cycles=est_chain):
@@ -730,7 +862,6 @@ def plan_decode(items: Iterable[WorkItem], *, macs: int = DEFAULT_MACS,
                      naive_launches=it.L,
                      est_cycles=est_chain / len(items))
             for it in items)
-        B_total = sum(it.B for it in items)
         slot = Slot(index=0, wave=0, family=head.family, H=head.H,
                     B=B_total, chunk_len=1, dtype=head.dtype, tile_k=tile_k,
                     mvm_block=mvm_block,

@@ -16,15 +16,16 @@ directory for the API tour and the migration table from the deprecated
     print(cs.plan.describe(), cs.stats)
 """
 from repro.rnn.compiled import CompiledStack, StackStats, compile  # noqa: F401
-from repro.rnn.policy import (DTYPES, ON_FAULT, SCHEDULES,  # noqa: F401
-                              VERIFY, ExecutionPolicy)
+from repro.rnn.policy import (COST_MODELS, DTYPES, ON_FAULT,  # noqa: F401
+                              SCHEDULES, VERIFY, ExecutionPolicy)
 from repro.runtime.errors import (FALLBACK_LEVELS, FaultInjector,  # noqa: F401
                                   LaunchError, NonFiniteStateError,
                                   PlanInvariantError, PlanRejected,
                                   QueueFull, RequestTimeout, ServingFault)
 
 __all__ = ["compile", "CompiledStack", "StackStats", "ExecutionPolicy",
-           "SCHEDULES", "DTYPES", "ON_FAULT", "VERIFY", "FALLBACK_LEVELS",
+           "SCHEDULES", "DTYPES", "ON_FAULT", "VERIFY", "COST_MODELS",
+           "FALLBACK_LEVELS",
            "ServingFault", "LaunchError", "NonFiniteStateError",
            "PlanRejected", "PlanInvariantError", "QueueFull",
            "RequestTimeout", "FaultInjector"]

@@ -64,7 +64,14 @@ class StackStats:
     (``faults_total`` counts every fault ever, so a long-lived serving
     stack under chronic degradation holds bounded memory without losing
     the signal).  All of these stay zero/empty on a healthy stack — they
-    are the degradation signal the serving layer watches."""
+    are the degradation signal the serving layer watches.
+
+    ``measured_hits``/``analytic_fallbacks`` (policy
+    ``cost_model="measured"``) count the measured cost model's lookup
+    resolutions across every plan this stack built: hits include
+    interpolated neighbors; fallbacks are shapes the calibration table
+    could not price (scored analytically instead).  Both stay zero under
+    ``cost_model="analytic"``."""
 
     #: ring-buffer bound on ``faults`` — the trail keeps this many most
     #: recent entries; ``faults_total`` keeps the true count
@@ -82,6 +89,8 @@ class StackStats:
     fallback_level: int = 0
     faults: List[str] = dataclasses.field(default_factory=list)
     faults_total: int = 0
+    measured_hits: int = 0
+    analytic_fallbacks: int = 0
 
     def record_faults(self, entries: Sequence[str]) -> None:
         """Append to the fault trail, keeping only the last
@@ -195,6 +204,19 @@ class CompiledStack:
         #: test/chaos hook: arm with plan slot indices to make launches
         #: raise (see runtime.errors.FaultInjector); disarmed = no-op
         self.fault = FaultInjector()
+        #: the planner's cost scorer (policy ``cost_model="measured"``): a
+        #: repro.calib.MeasuredCostModel over the persisted calibration
+        #: table for THIS backend; None under "analytic".  A missing or
+        #: empty table leaves the model inactive — the planner then takes
+        #: the analytic paths untouched (cold-start bit-identity).
+        self.cost_model = None
+        if policy.cost_model == "measured":
+            from repro.calib import (MEASURED_COSTS_PATH, MeasuredCostModel,
+                                     MeasuredCostTable, current_backend)
+            path = policy.cost_table or MEASURED_COSTS_PATH
+            table = MeasuredCostTable.load(
+                path, backend=current_backend(policy.interpret))
+            self.cost_model = MeasuredCostModel(table, macs=policy.macs)
         self.last_decode_plan: Optional[DispatchPlan] = None
         self._last_plan: Optional[DispatchPlan] = None
         self._plans: Dict[tuple, DispatchPlan] = {}
@@ -251,6 +273,10 @@ class CompiledStack:
             self.stats.plans_built += 1
             if key[0] == "dec":
                 self.stats.decode_plans_built += 1
+            if self.cost_model is not None:
+                cm = self.cost_model
+                self.stats.measured_hits = cm.hits + cm.interpolated
+                self.stats.analytic_fallbacks = cm.fallbacks
         else:
             self._plans[key] = self._plans.pop(key)  # LRU refresh
         return p
@@ -274,7 +300,8 @@ class CompiledStack:
             [self._item(i, b, t, dt, priority=p)
              for i, ((b, t, dt), p) in enumerate(zip(shapes, prios))],
             macs=pol.macs, cross_b=pol.packing, align_stripes=pol.packing,
-            schedule=force, block_t=pol.block_t, tracer=self.tracer))
+            schedule=force, block_t=pol.block_t, tracer=self.tracer,
+            cost_model=self.cost_model))
 
     # ------------------------------------------------------------------
     def _prep(self, xs, name: str):
@@ -433,11 +460,18 @@ class CompiledStack:
                 key = ("dec", B, dtype)
                 p = self._cached(key, lambda: plan_decode(
                     [self._item(0, B, 1, dtype)], macs=self.policy.macs,
-                    tracer=tr))
-                if self._prepared is None:
-                    self._prepared = prepare_decode_stack(self.params,
-                                                          self.families[0])
-                prepared = {0: self._prepared}
+                    tracer=tr, cost_model=self.cost_model))
+                if p.items[0].schedule == "decode":
+                    if self._prepared is None:
+                        self._prepared = prepare_decode_stack(
+                            self.params, self.families[0])
+                    prepared = {0: self._prepared}
+                else:
+                    # measured cost model flipped this tick to the
+                    # per-layer plan (L small launches beat one chained
+                    # launch on this backend) — the mixed-stack path,
+                    # which needs no hoisted decode operands
+                    prepared = None
             else:
                 # mixed stacks: per-layer T=1 plan — FORCED onto the packed
                 # timeline (schedule="wavefront" at bt=1 collapses to
@@ -450,7 +484,7 @@ class CompiledStack:
                 p = self._cached(key, lambda: plan(
                     [self._item(0, B, 1, dtype)], macs=self.policy.macs,
                     cross_b=self.policy.packing, schedule="wavefront",
-                    block_t=1, tracer=tr))
+                    block_t=1, tracer=tr, cost_model=self.cost_model))
                 prepared = None
             rep, guard = self._guard()
             outs, states = execute(p, {0: self.params}, {0: x_t},
@@ -472,9 +506,13 @@ class CompiledStack:
             else self.families[0]
         bi = " bidirectional" if self.bidirectional else ""
         s = self.stats
+        cm_line = ("analytic (perfmodel cycle formulas)"
+                   if self.cost_model is None
+                   else self.cost_model.describe())
         lines = [
             f"CompiledStack: {fams} L{self.L} H{self.H} X{self.X}{bi}",
             f"  {self.policy.describe()}",
+            f"  cost model: {cm_line}",
             f"  stats: {s.forward_calls} forward / {s.decode_calls} decode "
             f"calls, {s.launches} launches ({s.decode_launches} decode), "
             f"{s.plans_built} plans built ({s.decode_plans_built} decode, "

@@ -40,6 +40,14 @@ ON_FAULT = ("raise", "fallback")
 #: ``verify`` span.  "off" skips verification (the benchmark baseline).
 VERIFY = ("off", "plan")
 
+#: "analytic" scores plans with the perfmodel's cycle formulas (the
+#: default, zero-IO).  "measured" loads the replay-calibrated table
+#: (``repro.calib``, ``artifacts/measured_costs.json``) for the bound
+#: backend and scores merge/schedule/chained decisions in measured µs,
+#: falling back to analytic scaling for unmeasured shapes; an empty or
+#: missing table degrades to plans bit-identical to "analytic".
+COST_MODELS = ("analytic", "measured")
+
 
 def _bad(field: str, value, allowed) -> ValueError:
     return ValueError(
@@ -78,6 +86,16 @@ class ExecutionPolicy:
                before anything launches; "off" skips the check.  Runs
                once per plan-cache build (amortizes to zero across cache
                hits) and is counted in ``.stats.plans_verified``.
+    cost_model: "analytic" (perfmodel cycle formulas, the default) or
+               "measured" (score planner decisions — merge-vs-split,
+               schedule choice, chained-vs-loop decode — against the
+               replay-calibrated ``repro.calib`` table for this backend;
+               unmeasured shapes interpolate from the nearest measured
+               neighbor or fall back to analytic, and an empty table
+               plans bit-identically to "analytic").
+    cost_table: path to the measured-cost JSON; None = the default
+               ``artifacts/measured_costs.json``.  Only read when
+               ``cost_model="measured"``.
     trace:     record wall-clock spans + metrics for every plan/launch/
                decode tick on ``CompiledStack.tracer`` (a
                ``runtime.obs.Tracer`` — Chrome-trace export, latency
@@ -96,6 +114,8 @@ class ExecutionPolicy:
     on_fault: str = "raise"
     check_finite: bool = False
     verify: str = "plan"
+    cost_model: str = "analytic"
+    cost_table: Optional[str] = None
     trace: bool = False
 
     def __post_init__(self):
@@ -120,6 +140,11 @@ class ExecutionPolicy:
             raise _bad("check_finite", self.check_finite, (True, False))
         if self.verify not in VERIFY:
             raise _bad("verify", self.verify, VERIFY)
+        if self.cost_model not in COST_MODELS:
+            raise _bad("cost_model", self.cost_model, COST_MODELS)
+        if not (self.cost_table is None or isinstance(self.cost_table, str)):
+            raise _bad("cost_table", self.cost_table,
+                       (None, "a path to a measured-cost JSON"))
         if not isinstance(self.trace, bool):
             raise _bad("trace", self.trace, (True, False))
 
@@ -130,4 +155,5 @@ class ExecutionPolicy:
                 f"packing={self.packing}, macs={self.macs}, "
                 f"on_fault={self.on_fault}, "
                 f"check_finite={self.check_finite}, "
-                f"verify={self.verify}, trace={self.trace})")
+                f"verify={self.verify}, cost_model={self.cost_model}, "
+                f"trace={self.trace})")

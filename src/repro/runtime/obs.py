@@ -508,6 +508,26 @@ def fence(value):
     return jax.block_until_ready(value)
 
 
+def measure_samples(fn: Callable, *args, repeats: int = 3, warmup: int = 1,
+                    **kwargs) -> List[float]:
+    """The raw samples behind ``measure_us``: ``warmup`` untimed calls
+    (compile/plan-cache exclusion), then ``repeats`` calls each fenced with
+    ``jax.block_until_ready``, returned as a list of µs.  Callers that need
+    more than one summary statistic (the calibration replay harness records
+    median AND p90 per signature) consume this directly so every timed
+    number in the repo still originates from this one code path."""
+    import jax
+
+    for _ in range(max(0, warmup)):
+        fn(*args, **kwargs)
+    ts = []
+    for _ in range(max(1, repeats)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kwargs))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return ts
+
+
 def measure_us(fn: Callable, *args, repeats: int = 3, warmup: int = 1,
                reduce: str = "median", **kwargs) -> float:
     """Time ``fn(*args)``: ``warmup`` untimed calls (compile/plan-cache
@@ -519,17 +539,9 @@ def measure_us(fn: Callable, *args, repeats: int = 3, warmup: int = 1,
     if reduce not in ("median", "min"):
         raise ValueError(f"measure_us: reduce={reduce!r} invalid; "
                          "allowed: median, min")
-    import jax
-
-    for _ in range(max(0, warmup)):
-        fn(*args, **kwargs)
-    ts = []
-    for _ in range(max(1, repeats)):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args, **kwargs))
-        ts.append(time.perf_counter() - t0)
+    ts = measure_samples(fn, *args, repeats=repeats, warmup=warmup, **kwargs)
     red = statistics.median if reduce == "median" else min
-    return red(ts) * 1e6
+    return red(ts)
 
 
 def slot_signature(family: str, H: int, G: int, B: int, chunk_len: int,
@@ -545,5 +557,5 @@ def slot_signature(family: str, H: int, G: int, B: int, chunk_len: int,
 
 __all__ = ["Tracer", "NullTracer", "NULL_TRACER", "as_tracer", "Span",
            "Counter", "Histogram", "MetricsRegistry", "LaunchCostTable",
-           "LAUNCH_COSTS_PATH", "measure_us", "monotonic_s", "fence",
-           "slot_signature"]
+           "LAUNCH_COSTS_PATH", "measure_us", "measure_samples",
+           "monotonic_s", "fence", "slot_signature"]

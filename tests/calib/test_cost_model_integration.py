@@ -1,0 +1,161 @@
+"""ExecutionPolicy(cost_model="measured") through the planner and facade:
+cold-start bit-identity with analytic mode, the chained-vs-loop decode
+flip under a table that contradicts the perfmodel, counter surfacing in
+CompiledStack.stats/describe, and dual-score plan_candidates tracing."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import rnn
+from repro.calib import (MeasuredCostTable, analytic_shape_cycles,
+                         current_backend)
+from repro.configs.sharp_lstm import lstm_config
+from repro.core.perfmodel import Design
+from repro.models.layers.lstm import init_lstm_stack
+from repro.runtime.obs import slot_signature
+
+H, L, B = 64, 3, 2
+DESIGN = Design(macs=16384, schedule="unfolded")
+
+
+@pytest.fixture(scope="module")
+def stack():
+    return init_lstm_stack(jax.random.PRNGKey(0), lstm_config(H, layers=L),
+                           jnp.float32)
+
+
+@pytest.fixture(scope="module")
+def xs():
+    return jax.random.normal(jax.random.PRNGKey(1), (B, 8, H)) * 0.5
+
+
+def _flip_table_path(tmp_path, chained_us=12000.0, layer_us=100.0):
+    """A table for THIS backend claiming one chained decode launch costs
+    ``chained_us`` while a single per-layer launch costs ``layer_us`` —
+    the interpreter reality the analytic launch-count term contradicts."""
+    t = MeasuredCostTable(current_backend(True))
+    t.record(slot_signature("lstm", H, L, B, 1, "float32", ("fwd",), True),
+             chained_us, chained_us * 1.1, 5,
+             analytic_shape_cycles("lstm", H, L, B, 1, DESIGN, chained=True))
+    t.record(slot_signature("lstm", H, 1, B, 1, "float32"),
+             layer_us, layer_us * 1.2, 5,
+             analytic_shape_cycles("lstm", H, 1, B, 1, DESIGN))
+    path = str(tmp_path / "measured_costs.json")
+    t.save(path)
+    return path
+
+
+def test_policy_validates_cost_model_fields():
+    pol = rnn.ExecutionPolicy(cost_model="measured", cost_table="x.json")
+    assert "cost_model=measured" in pol.describe()
+    with pytest.raises(ValueError, match="cost_model"):
+        rnn.ExecutionPolicy(cost_model="vibes")
+    with pytest.raises(ValueError, match="cost_table"):
+        rnn.ExecutionPolicy(cost_table=7)
+    assert rnn.COST_MODELS == ("analytic", "measured")
+
+
+def test_cold_start_measured_is_bit_identical_to_analytic(stack, xs):
+    analytic = rnn.compile(stack, rnn.ExecutionPolicy(interpret=True))
+    cold = rnn.compile(stack, rnn.ExecutionPolicy(
+        interpret=True, cost_model="measured",
+        cost_table=os.path.join("definitely", "missing.json")))
+    assert cold.cost_model is not None and not cold.cost_model.active
+    assert analytic.lower(B, 8).describe() == cold.lower(B, 8).describe()
+    np.testing.assert_array_equal(np.asarray(analytic.forward(xs)),
+                                  np.asarray(cold.forward(xs)))
+    assert cold.stats.measured_hits == 0
+    assert cold.stats.analytic_fallbacks == 0
+    # decode stays the chained single launch too
+    _, st = cold.prefill(xs)
+    cold.decode(xs[:, :1], st)
+    assert cold.last_decode_plan.launches == 1
+
+
+def test_measured_table_flips_decode_to_per_layer(tmp_path, stack, xs):
+    path = _flip_table_path(tmp_path)
+    analytic = rnn.compile(stack, rnn.ExecutionPolicy(interpret=True))
+    measured = rnn.compile(stack, rnn.ExecutionPolicy(
+        interpret=True, cost_model="measured", cost_table=path))
+
+    _, st_a = analytic.prefill(xs)
+    _, st_m = measured.prefill(xs)
+    y_a, new_a = analytic.decode(xs[:, :1], st_a)
+    y_m, new_m = measured.decode(xs[:, :1], st_m)
+
+    assert analytic.last_decode_plan.launches == 1
+    assert measured.last_decode_plan.launches == L  # the flip
+    assert all(ip.schedule != "decode"
+               for ip in measured.last_decode_plan.items)
+    # the flipped plan computes the identical tick
+    np.testing.assert_array_equal(np.asarray(y_a), np.asarray(y_m))
+    np.testing.assert_array_equal(np.asarray(new_a["h"]),
+                                  np.asarray(new_m["h"]))
+    assert measured.stats.measured_hits > 0
+
+
+def test_measured_table_can_also_confirm_chained(tmp_path, stack, xs):
+    # a table agreeing with the perfmodel (chained cheap) keeps the chain
+    path = _flip_table_path(tmp_path, chained_us=10.0, layer_us=1000.0)
+    measured = rnn.compile(stack, rnn.ExecutionPolicy(
+        interpret=True, cost_model="measured", cost_table=path))
+    _, st = measured.prefill(xs)
+    measured.decode(xs[:, :1], st)
+    assert measured.last_decode_plan.launches == 1
+    assert measured.last_decode_plan.items[0].schedule == "decode"
+
+
+def test_describe_and_stats_surface_cost_model(tmp_path, stack, xs):
+    analytic = rnn.compile(stack, rnn.ExecutionPolicy(interpret=True))
+    assert "cost model: analytic" in analytic.describe()
+
+    path = _flip_table_path(tmp_path)
+    measured = rnn.compile(stack, rnn.ExecutionPolicy(
+        interpret=True, cost_model="measured", cost_table=path))
+    measured.forward(xs)
+    d = measured.describe()
+    assert "cost model: measured" in d and "table entries" in d
+    # every lookup resolved somehow, and the counters reached .stats
+    cm = measured.cost_model
+    assert (measured.stats.measured_hits
+            == cm.hits + cm.interpolated)
+    assert measured.stats.analytic_fallbacks == cm.fallbacks
+    assert (measured.stats.measured_hits
+            + measured.stats.analytic_fallbacks) > 0
+
+
+def test_plan_candidates_trace_carries_both_scores(tmp_path, stack, xs):
+    path = _flip_table_path(tmp_path)
+    measured = rnn.compile(stack, rnn.ExecutionPolicy(
+        interpret=True, cost_model="measured", cost_table=path,
+        trace=True))
+    _, st = measured.prefill(xs)
+    measured.decode(xs[:, :1], st)
+    inst = [e for e in measured.tracer.events
+            if e.name == "plan_candidates"
+            and e.tags.get("cost_model") == "measured"]
+    assert inst, "no measured plan_candidates instant traced"
+    decode_inst = [e for e in inst
+                   if {c["schedule"] for c in e.tags["candidates"]}
+                   == {"chained", "per_layer"}]
+    assert decode_inst
+    for c in decode_inst[0].tags["candidates"]:
+        assert c["est_cycles"] > 0   # the analytic score, always present
+        assert c["est_us"] > 0       # ...and the measured score beside it
+    assert decode_inst[0].tags["chosen"] == "per_layer"
+
+
+def test_analytic_plan_candidates_untouched(stack, xs):
+    analytic = rnn.compile(stack, rnn.ExecutionPolicy(interpret=True,
+                                                      trace=True))
+    _, st = analytic.prefill(xs)
+    analytic.decode(xs[:, :1], st)
+    inst = [e for e in analytic.tracer.events
+            if e.name == "plan_candidates"
+            and "chained" in {c["schedule"]
+                              for c in e.tags.get("candidates", ())}]
+    assert inst and inst[0].tags["chosen"] == "chained"
+    assert all("est_us" not in c for c in inst[0].tags["candidates"])

@@ -1,0 +1,142 @@
+"""MeasuredCostTable / MeasuredCostModel contracts: persistence round-trip,
+cross-run merge (newer wins, counts accumulate), backend isolation, schema
+staleness, and the scorer's resolution ladder (exact hit -> interpolated
+neighbor -> analytic fallback)."""
+import json
+
+import pytest
+
+from repro.calib import (MeasuredCostModel, MeasuredCostTable, TABLE_VERSION,
+                         analytic_shape_cycles, parse_signature)
+from repro.core.perfmodel import Design
+from repro.runtime.obs import slot_signature
+
+SIG = slot_signature("lstm", 64, 3, 1, 1, "float32")
+DESIGN = Design(macs=16384, schedule="unfolded")
+
+
+def _table(backend="testbe", med=100.0, n=5, sig=SIG):
+    t = MeasuredCostTable(backend)
+    t.record(sig, med, med * 1.2, n,
+             analytic_shape_cycles("lstm", 64, 3, 1, 1, DESIGN))
+    return t
+
+
+def test_round_trip(tmp_path):
+    path = str(tmp_path / "t.json")
+    t = _table()
+    t.save(path)
+    back = MeasuredCostTable.load(path, backend="testbe")
+    e = back.lookup(SIG)
+    assert e is not None
+    assert e["med_us"] == pytest.approx(100.0)
+    assert e["p90_us"] == pytest.approx(120.0)
+    assert e["n"] == 5 and e["runs"] == 1
+    assert e["stamp"] is not None  # persisted records carry a real stamp
+    assert back.signatures() == [SIG]
+    assert len(back) == 1
+
+
+def test_merge_newer_wins_counts_accumulate(tmp_path):
+    path = str(tmp_path / "t.json")
+    _table(med=100.0, n=5).save(path)
+    # a second, later run re-measures the same signature
+    _table(med=200.0, n=3).save(path)
+    e = MeasuredCostTable.load(path, backend="testbe").lookup(SIG)
+    assert e["med_us"] == pytest.approx(200.0)  # newer run's summary
+    assert e["n"] == 8                          # sample history accumulates
+    assert e["runs"] == 2
+
+
+def test_resave_of_loaded_table_does_not_double_count(tmp_path):
+    path = str(tmp_path / "t.json")
+    _table(med=100.0, n=5).save(path)
+    loaded = MeasuredCostTable.load(path, backend="testbe")
+    loaded.save(path)  # no new records: same lineage, no accumulation
+    e = MeasuredCostTable.load(path, backend="testbe").lookup(SIG)
+    assert e["n"] == 5 and e["runs"] == 1
+
+
+def test_backend_mismatch_is_invisible_but_preserved(tmp_path):
+    path = str(tmp_path / "t.json")
+    _table(backend="interpret(cpu)").save(path)
+    other = MeasuredCostTable.load(path, backend="tpu")
+    assert len(other) == 0 and other.lookup(SIG) is None
+    # ...and saving under the other backend keeps the first one's entries
+    other.record(SIG, 1.0, 1.1, 2, 10.0)
+    other.save(path)
+    orig = MeasuredCostTable.load(path, backend="interpret(cpu)")
+    assert orig.lookup(SIG)["med_us"] == pytest.approx(100.0)
+
+
+def test_stale_schema_version_loads_empty(tmp_path):
+    path = str(tmp_path / "t.json")
+    _table().save(path)
+    raw = json.loads(open(path).read())
+    raw["version"] = TABLE_VERSION + 1
+    open(path, "w").write(json.dumps(raw))
+    assert len(MeasuredCostTable.load(path, backend="testbe")) == 0
+
+
+def test_missing_file_loads_empty(tmp_path):
+    t = MeasuredCostTable.load(str(tmp_path / "nope.json"), backend="x")
+    assert len(t) == 0 and t.mean_cycles_per_us() == 0.0
+
+
+def test_parse_signature_inverts_slot_signature():
+    assert parse_signature("lstm|H64|G3|B1|bt1|float32|fwd|chained") == {
+        "family": "lstm", "H": 64, "G": 3, "B": 1, "chunk_len": 1,
+        "dtype": "float32", "dirs": "fwd", "chained": True}
+    assert parse_signature(SIG)["chained"] is False
+    assert parse_signature("garbage") is None
+    assert parse_signature("a|b|c|d|e|f|g") is None  # malformed ints
+
+
+# -- the scorer's resolution ladder -------------------------------------
+
+
+def test_exact_hit_returns_median():
+    m = MeasuredCostModel(_table())
+    assert m.active
+    assert m.slot_us("lstm", 64, 3, 1, 1, "float32") == pytest.approx(100.0)
+    assert (m.hits, m.interpolated, m.fallbacks) == (1, 0, 0)
+
+
+def test_near_miss_interpolates_by_analytic_ratio():
+    m = MeasuredCostModel(_table())
+    got = m.slot_us("lstm", 64, 3, 2, 1, "float32")  # B=2: neighbor of B=1
+    ratio = (analytic_shape_cycles("lstm", 64, 3, 2, 1, DESIGN)
+             / analytic_shape_cycles("lstm", 64, 3, 1, 1, DESIGN))
+    assert got == pytest.approx(100.0 * ratio)
+    assert (m.hits, m.interpolated, m.fallbacks) == (0, 1, 0)
+
+
+def test_no_close_neighbor_falls_back_to_analytic_conversion():
+    m = MeasuredCostModel(_table())
+    # H ratio 1024/64 = 16 > NEIGHBOR_MAX_RATIO: not interpolatable
+    got = m.slot_us("lstm", 1024, 3, 1, 1, "float32")
+    est = analytic_shape_cycles("lstm", 1024, 3, 1, 1, DESIGN)
+    assert got == pytest.approx(est / m.table.mean_cycles_per_us())
+    assert (m.hits, m.interpolated, m.fallbacks) == (0, 0, 1)
+
+
+def test_categorical_fields_never_cross():
+    # a chained query must not interpolate from a sequence-slot entry
+    m = MeasuredCostModel(_table())
+    m.slot_us("lstm", 64, 3, 1, 1, "float32", chained=True)
+    assert m.interpolated == 0 and m.fallbacks == 1
+    # nor a gru query from an lstm entry
+    m.slot_us("gru", 64, 3, 1, 1, "float32")
+    assert m.interpolated == 0 and m.fallbacks == 2
+
+
+def test_cold_start_is_inactive():
+    m = MeasuredCostModel(MeasuredCostTable("testbe"))
+    assert not m.active
+    assert "cold start" in m.describe()
+    # the planner's gate: an inactive model is treated as no model at all
+    from repro.dispatch.planner import _active_cost_model
+    assert _active_cost_model(m) is None
+    assert _active_cost_model(None) is None
+    active = MeasuredCostModel(_table())
+    assert _active_cost_model(active) is active
