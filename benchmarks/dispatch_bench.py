@@ -10,8 +10,9 @@ equal against the pure-jnp unfolded oracle before anything is emitted.
 
 The decode sub-suite records the serving steady state: a planned tick (ONE
 chained launch over the k active slots' layer chains, cross-B packed) vs
-the pre-existing hand loop (L per-layer launches over the full slot pool) —
-verified bit-equal before emission.  The cross-B sub-suite records a
+the pre-existing hand loop (L per-layer launches at the SAME k active rows
+— retired pool columns are skipped, so the comparison prices launch
+structure, not stale-column compute) — verified bit-equal before emission.  The cross-B sub-suite records a
 mixed-B prefill mix packed (pad + in-kernel mask) vs the per-B-signature
 plan of the same items.  The facade sub-suite (ISSUE-4) proves
 ``repro.rnn.compile().forward()`` adds ZERO launches over direct
@@ -27,6 +28,12 @@ plans' launch signatures, ``cost_model="measured"`` schedules the
 canonical forward fused where ``"analytic"`` picks the G-merged
 wavefront — bit-equal gated, and the flipped plan must win the wall
 clock before its row is emitted.
+
+The quant sub-suite (ISSUE-10) prices the int8 weight path at a matched
+shape and records the VMEM headroom it buys: at the stripe-bound
+H512/B8/T64 shape the fp32 resident U caps the time block at half of what
+the int8 payload sustains (asserted >= 2x), and the int8 forward is gated
+against its dequantized oracle within the documented rel-err bound.
 
 The verify sub-suite (ISSUE-8) prices static plan verification:
 ``verify="plan"`` (the default) vs ``verify="off"`` on the steady-state
@@ -129,12 +136,16 @@ def dispatch(emit, repeats: int = 3) -> None:
     _obs_rows(emit, repeats)
     _verify_rows(emit, repeats)
     _cost_model_rows(emit, repeats)
+    _quant_rows(emit, repeats)
 
 
 def _decode_rows(emit, repeats: int = 3) -> None:
     """Steady-state serving decode: planned (one chained launch over the k
-    active slots) vs the pre-existing loop (L per-layer launches over the
-    full max_batch pool, stale columns included)."""
+    active slots) vs the per-layer loop at the same k active rows.  The
+    loop used to pad to the full max_batch pool and compute its stale
+    columns too — an unfair baseline that inflated the planned tick's
+    win; it now skips retired rows, so the rows differ only in launch
+    structure (1 chained vs L per-layer)."""
     H, L, k, max_batch = 64, 3, 3, 4
     cfg = lstm_config(H, layers=L)
     params = init_lstm_stack(jax.random.PRNGKey(0), cfg, jnp.float32)
@@ -157,18 +168,16 @@ def _decode_rows(emit, repeats: int = 3) -> None:
                        prepared={i: prep for i in range(k)})
 
     def loop(y, h, c):
-        """The replaced _decode_tick: L launches over all max_batch
-        columns (the stale ones compute too)."""
-        pad = max_batch - k
-        yp = jnp.concatenate([y, jnp.zeros((pad, 1, H))])
-        hp = jnp.concatenate([h, jnp.zeros((L, pad, H))], axis=1)
-        cp = jnp.concatenate([c, jnp.zeros((L, pad, H))], axis=1)
+        """The replaced _decode_tick, made fair: L per-layer launches at
+        the k ACTIVE rows only (retired pool columns skipped, not padded
+        in and computed stale)."""
         h_new, c_new = [], []
+        yp = y
         for l, layer in enumerate(params["layers"]):
             xw = (jnp.einsum("btx,xg->btg", yp, layer["W"])
-                  + layer["b"]).reshape(max_batch, 1, 4, H)
-            hs, h_n, c_n = lstm_seq(layer["U"].reshape(H, 4, H), xw, hp[l],
-                                    cp[l], block_t=1, interpret=True)
+                  + layer["b"]).reshape(k, 1, 4, H)
+            hs, h_n, c_n = lstm_seq(layer["U"].reshape(H, 4, H), xw, h[l],
+                                    c[l], block_t=1, interpret=True)
             h_new.append(h_n)
             c_new.append(c_n)
             yp = hs.astype(jnp.float32)
@@ -195,8 +204,8 @@ def _decode_rows(emit, repeats: int = 3) -> None:
          f"rows={sum(it.B for it in items)} chained")
     emit("dispatch/decode_loop_tick",
          _time(loop, y, h, c, repeat=repeats),
-         f"H{H}L{L} launches_per_tick={n_loop} rows={max_batch} "
-         "(stale columns computed)")
+         f"H{H}L{L} launches_per_tick={n_loop} rows={k} "
+         "(retired rows skipped)")
 
 
 def _cross_b_rows(emit, repeats: int = 3) -> None:
@@ -566,3 +575,49 @@ def _verify_rows(emit, repeats: int = 3) -> None:
          _time(check_plan, p, repeat=max(repeats, 5)),
          f"mixed batch: {rep.items} items {rep.slots} slots "
          f"{rep.cells} cells, {len(rep.rules)} rules proven")
+
+
+def _quant_rows(emit, repeats: int = 3) -> None:
+    """ISSUE-10: the int8 weight path, priced at a matched shape.  The
+    stripe claim first: at H512/B8/T64 the fp32 resident U (4 MB of the
+    8 MB sequence budget) caps ``select_time_block`` at bt=32, while the
+    int8 payload (1 MB + per-gate scales) sustains the full bt=64 stripe
+    — asserted >= 2x here (and in the autotune test) before anything is
+    emitted.  The timed rows run the suite's canonical stack (H64 L3 T24
+    B8, interpreter-friendly) compiled fp32 vs int8 through the SAME
+    facade; the int8 output is gated against its dequantized oracle
+    (pure-jnp reference over the fake-quant param view) within the
+    documented rel-err bound, and that max rel-err rides in the row."""
+    from repro.core.tiling import select_time_block
+    from repro.kernels.quant import fake_quant_stack
+
+    # -- the VMEM-headroom claim at the stripe-bound shape ----------------
+    bt_fp32 = select_time_block(64, 8, 512)
+    bt_int8 = select_time_block(64, 8, 512, precision="int8")
+    assert bt_int8 >= 2 * bt_fp32, (bt_int8, bt_fp32)
+
+    cfg, T, B = lstm_config(64, layers=3), 24, 8
+    stack = init_lstm_stack(jax.random.PRNGKey(0), cfg, jnp.float32)
+    xs = jax.random.normal(jax.random.PRNGKey(700), (B, T, 64)) * 0.5
+
+    fp = rnn.compile(stack, rnn.ExecutionPolicy(interpret=True))
+    q8 = rnn.compile(stack, rnn.ExecutionPolicy(interpret=True,
+                                                precision="int8"))
+
+    # -- oracle gates: fp32 vs exact reference, int8 vs dequantized -------
+    err_fp = float(jnp.max(jnp.abs(fp.forward(xs)
+                                   - sch.reference_stack(stack, xs))))
+    assert err_fp < 1e-4, err_fp
+    oracle = sch.reference_stack(fake_quant_stack(stack, "int8"), xs)
+    rel = float(jnp.max(jnp.abs(q8.forward(xs) - oracle))
+                / jnp.max(jnp.abs(oracle)))
+    assert rel < 1e-5, rel  # L=3 depths of the ~2e-7/step distributivity gap
+
+    shapes = f"H{cfg.lstm_hidden}L{cfg.n_layers}T{T}B{B}"
+    emit("dispatch/quant_fp32_forward",
+         _time(fp.forward, xs, repeat=repeats),
+         f"{shapes} precision=fp32 stripe@H512B8T64: bt={bt_fp32}")
+    emit("dispatch/quant_int8_forward",
+         _time(q8.forward, xs, repeat=repeats),
+         f"{shapes} precision=int8 stripe@H512B8T64: bt={bt_int8} "
+         f"({bt_int8 // bt_fp32}x fp32) max_rel_err={rel:.1e}")

@@ -61,7 +61,10 @@ Resource budget (``vmem-budget``)
     The per-slot VMEM footprint from tile shapes × dtype — the sequence
     kernels' working set for packed slots, the per-layer resident set for
     chained decode slots — fits a configurable budget (default: the
-    autotune table's own ``SEQ_VMEM_BUDGET``).
+    autotune table's own ``SEQ_VMEM_BUDGET``).  Precision-aware: an int8
+    slot is budgeted at its 1-byte resident payload plus per-gate scales
+    (bf16 at 2 bytes), and a block-sparse slot at its densest member
+    layer's occupied row-tiles plus the gather index.
 
 Any violation raises a structured ``runtime.errors.PlanInvariantError``
 naming the rule, slot, and cell; a clean pass returns a
@@ -170,17 +173,30 @@ def _decode_footprint(slot: Slot) -> int:
     return weights + rows
 
 
-def _check_slot_budget(slot: Slot, budget: int) -> None:
+def _check_slot_budget(slot: Slot, budget: int,
+                       covered: Dict[int, ItemPlan]) -> None:
+    """The footprint is precision-aware (an int8 slot's resident U is the
+    1-byte payload + per-gate scales) and sparsity-aware: a row-compacted
+    launch keeps only the densest member layer's occupied row-tiles
+    resident (slot-uniform Ha), so that density bounds the true set.
+    Unknown uids fall back dense — ``coverage-unknown`` fires right after.
+    """
     if slot.chained:
         used = _decode_footprint(slot)
     else:
+        dens = max((covered[grp[0].uid].item.layer_density(grp[0].layer)
+                    for grp in slot.groups
+                    if grp and grp[0].uid in covered), default=1.0)
         used = seq_block_footprint(slot.chunk_len, slot.B, slot.H,
-                                   gates=GATES[slot.family])
+                                   gates=GATES[slot.family],
+                                   precision=slot.precision,
+                                   density=dens)
     if used > budget:
         raise _fail("vmem-budget",
                     f"footprint {used}B exceeds budget {budget}B "
                     f"({slot.family} H{slot.H} B{slot.B} "
-                    f"bt{slot.chunk_len} {slot.dtype})", slot=slot)
+                    f"bt{slot.chunk_len} {slot.dtype} "
+                    f"p{slot.precision})", slot=slot)
 
 
 def _check_slot_tiling(slot: Slot, macs: int) -> None:
@@ -337,7 +353,7 @@ def check_plan(plan: DispatchPlan, *,
     cell_wave: Dict[tuple, int] = {}
     chained = 0
     for slot in plan.slots:
-        _check_slot_budget(slot, budget)
+        _check_slot_budget(slot, budget, covered)
         _check_slot_tiling(slot, plan.macs)
         _check_slot_rows(slot, covered)
         if slot.chained:

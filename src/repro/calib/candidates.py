@@ -45,18 +45,22 @@ class Candidate:
     dtype: str = "float32"
     dirs: Tuple[str, ...] = ("fwd",)
     chained: bool = False
+    precision: str = "fp32"  # replayed with the matching kernel operands
+    #                          (int8 payload + per-gate scales), so the
+    #                          measured µs prices the quantized launch
 
     def signature(self) -> str:
         return slot_signature(self.family, self.H, self.G, self.B,
                               self.block_t, self.dtype,
-                              directions=self.dirs, chained=self.chained)
+                              directions=self.dirs, chained=self.chained,
+                              precision=self.precision)
 
 
 def _from_plan(p: DispatchPlan) -> List[Candidate]:
     return [Candidate(family=s.family, H=s.H, G=s.g, B=s.B,
                       block_t=s.chunk_len, dtype=s.dtype,
                       dirs=tuple(c.direction for c in s.cells),
-                      chained=s.chained)
+                      chained=s.chained, precision=s.precision)
             for s in p.slots]
 
 
@@ -75,10 +79,13 @@ def candidates_for(model: Union[ModelConfig, "object"], *,
                    shapes: Sequence[Tuple[int, int]] = ((1, 32),),
                    dtype: str = "float32",
                    macs: int = 16384,
-                   decode: bool = True) -> List[Candidate]:
+                   decode: bool = True,
+                   precision: str = "fp32") -> List[Candidate]:
     """Candidates a model would actually launch: plan it at each (B, T)
     shape and harvest the slots; for homogeneous lstm/gru stacks add the
     decode tick's chained AND per-layer alternatives at each B.
+    ``precision`` plans (and therefore prices) the quantized-weight
+    variant of the same stack.
 
     ``model`` is a ModelConfig (family "rnn") or any object with the
     CompiledStack shape surface (``families``/``H``/``X``/``L``/
@@ -96,7 +103,7 @@ def candidates_for(model: Union[ModelConfig, "object"], *,
     def item(uid: int, B: int, T: int, share=None) -> WorkItem:
         return WorkItem(uid=uid, family=fams[0], B=B, T=T, H=H, L=L, X=X,
                         dtype=dtype, bidirectional=bidir, share=share,
-                        families=fams)
+                        families=fams, precision=precision)
 
     out: List[Candidate] = []
     for B, T in shapes:
@@ -118,13 +125,16 @@ def sweep_grid(*, families: Sequence[str] = ("lstm", "gru"),
                Bs: Sequence[int] = (1, 3),
                block_ts: Sequence[int] = (1,),
                dtypes: Sequence[str] = ("float32",),
-               chained_Ls: Sequence[int] = (3,)) -> List[Candidate]:
+               chained_Ls: Sequence[int] = (3,),
+               precisions: Sequence[str] = ("fp32",)) -> List[Candidate]:
     """The cartesian grid: sequence-slot shapes over family x H x G x B x
-    block_t x dtype, plus chained decode shapes (one per family x H x B x
-    dtype x L in ``chained_Ls``)."""
-    out = [Candidate(family=f, H=h, G=g, B=b, block_t=bt, dtype=dt)
-           for f, h, g, b, bt, dt in itertools.product(
-               families, Hs, Gs, Bs, block_ts, dtypes)]
+    block_t x dtype x precision, plus chained decode shapes (one per
+    family x H x B x dtype x L in ``chained_Ls`` — decode ticks run the
+    dense dequantized weights, so they carry no precision axis)."""
+    out = [Candidate(family=f, H=h, G=g, B=b, block_t=bt, dtype=dt,
+                     precision=p)
+           for f, h, g, b, bt, dt, p in itertools.product(
+               families, Hs, Gs, Bs, block_ts, dtypes, precisions)]
     out += [Candidate(family=f, H=h, G=l, B=b, block_t=1, dtype=dt,
                       chained=True)
             for f, h, b, dt, l in itertools.product(
@@ -134,7 +144,9 @@ def sweep_grid(*, families: Sequence[str] = ("lstm", "gru"),
 
 #: the `make calibrate` / CI smoke grid: small enough to replay in
 #: seconds under the interpreter, yet covering both sides of the
-#: chained-vs-loop decode decision at the benchmarked H64/L3 shape
+#: chained-vs-loop decode decision at the benchmarked H64/L3 shape AND
+#: both sides of the int8-vs-fp32 pricing split (precision-tagged
+#: signatures keep the two populations separate in the table)
 SMOKE_GRID = dict(families=("lstm", "gru"), Hs=(64,), Gs=(1, 3),
                   Bs=(1, 3), block_ts=(1,), dtypes=("float32",),
-                  chained_Ls=(3,))
+                  chained_Ls=(3,), precisions=("fp32", "int8"))

@@ -71,11 +71,25 @@ def _operands(cand: Candidate, interpret: Optional[bool]):
     U = filled((G, H, gates, H))
     xw = filled((G, B, bt, gates, H))
     h0 = filled((G, B, H))
+    u_scales = None
+    if cand.precision == "int8":
+        # the executor's quantized hoist: int8 payload + per-gate scales,
+        # so the measured µs is the quantized launch's, not the fp32 one's
+        from repro.kernels.quant import quantize_per_gate
+
+        qs = [quantize_per_gate(U[g]) for g in range(G)]
+        U = jnp.stack([q for q, _ in qs])
+        u_scales = jnp.stack([s for _, s in qs])
+    elif cand.precision == "bf16":
+        from repro.kernels.quant import bf16_roundtrip
+
+        U = bf16_roundtrip(U)
     if lstm:
         c0 = filled((G, B, H), jnp.float32)
-        return lambda: lstm_seq(U, xw, h0, c0, block_t=bt,
-                                interpret=interpret)
-    return lambda: gru_seq(U, xw, h0, block_t=bt, interpret=interpret)
+        return lambda: lstm_seq(U, xw, h0, c0, u_scales=u_scales,
+                                block_t=bt, interpret=interpret)
+    return lambda: gru_seq(U, xw, h0, u_scales=u_scales, block_t=bt,
+                           interpret=interpret)
 
 
 def replay_candidate(cand: Candidate, *, interpret: Optional[bool] = None,
@@ -106,7 +120,8 @@ def calibrate(cands: Iterable[Candidate], *,
                              warmup=warmup)
         est = analytic_shape_cycles(cand.family, cand.H, cand.G, cand.B,
                                     cand.block_t, design,
-                                    chained=cand.chained)
+                                    chained=cand.chained,
+                                    precision=cand.precision)
         table.record(cand.signature(), r["med_us"], r["p90_us"], r["n"],
                      est)
         if progress is not None:
@@ -134,7 +149,7 @@ def check_table(table: MeasuredCostTable, *,
         cand = Candidate(family=f["family"], H=f["H"], G=f["G"], B=f["B"],
                          block_t=f["chunk_len"], dtype=f["dtype"],
                          dirs=tuple(f["dirs"].split("+")),
-                         chained=f["chained"])
+                         chained=f["chained"], precision=f["precision"])
         fresh = replay_candidate(cand, interpret=interpret,
                                  repeats=repeats)["med_us"]
         stored = table.lookup(sig)["med_us"]

@@ -73,28 +73,42 @@ def current_backend(interpret: Optional[bool] = None) -> str:
 def parse_signature(sig: str) -> Optional[dict]:
     """Invert ``runtime.obs.slot_signature``: ``"lstm|H64|G3|B1|bt1|
     float32|fwd|chained"`` -> field dict, or None for a malformed string
-    (foreign keys in a hand-edited table are skipped, not fatal)."""
+    (foreign keys in a hand-edited table are skipped, not fatal).  The
+    optional trailing tokens — ``p<precision>`` (absent = fp32, so
+    pre-precision tables parse unchanged) then ``chained`` — land in the
+    ``precision`` / ``chained`` fields."""
     parts = sig.split("|")
     if len(parts) < 7:
         return None
     try:
-        return {"family": parts[0], "H": int(parts[1][1:]),
-                "G": int(parts[2][1:]), "B": int(parts[3][1:]),
-                "chunk_len": int(parts[4][2:]), "dtype": parts[5],
-                "dirs": parts[6], "chained": parts[-1] == "chained"}
+        out = {"family": parts[0], "H": int(parts[1][1:]),
+               "G": int(parts[2][1:]), "B": int(parts[3][1:]),
+               "chunk_len": int(parts[4][2:]), "dtype": parts[5],
+               "dirs": parts[6], "precision": "fp32", "chained": False}
+        for tok in parts[7:]:
+            if tok == "chained":
+                out["chained"] = True
+            elif tok.startswith("p"):
+                out["precision"] = tok[1:]
+            else:
+                return None
+        return out
     except (ValueError, IndexError):
         return None
 
 
 def analytic_shape_cycles(family: str, H: int, G: int, B: int,
                           chunk_len: int, design: Design, *,
-                          chained: bool = False) -> float:
+                          chained: bool = False,
+                          precision: str = "fp32") -> float:
     """The perfmodel's estimate for one launch of this shape — the same
     formulas the executor's launch-cost table records as its predicted
-    half (chained slots: G is the layer count L)."""
+    half (chained slots: G is the layer count L; decode ignores precision
+    — its ticks run the dense dequantized weights)."""
     if chained:
         return decode_plan_cycles(family, H, H, G, design)
-    return slot_launch_cycles(family, H, chunk_len, [B] * G, design)
+    return slot_launch_cycles(family, H, chunk_len, [B] * G, design,
+                              precision=precision)
 
 
 class MeasuredCostTable:
@@ -254,38 +268,46 @@ class MeasuredCostModel:
 
     def slot_us(self, family: str, H: int, G: int, B: int, chunk_len: int,
                 dtype: str, dirs: Sequence[str] = ("fwd",),
-                chained: bool = False) -> float:
+                chained: bool = False, precision: str = "fp32") -> float:
         """Measured µs for one candidate launch shape (resolution ladder
-        in the module doc)."""
+        in the module doc).  ``precision`` is categorical: an int8 query
+        only ever resolves against int8 entries (exact or neighbor) — a
+        quantized launch's µs says nothing about the fp32 one's."""
         sig = slot_signature(family, H, G, B, chunk_len, dtype,
-                             directions=dirs, chained=chained)
+                             directions=dirs, chained=chained,
+                             precision=precision)
         hit = self.table.lookup(sig)
         if hit is not None:
             self.hits += 1
             return hit["med_us"]
         est = analytic_shape_cycles(family, H, G, B, chunk_len, self.design,
-                                    chained=chained)
-        nb = self._nearest(family, dtype, dirs, chained, H, G, B, chunk_len)
+                                    chained=chained, precision=precision)
+        nb = self._nearest(family, dtype, dirs, chained, precision,
+                           H, G, B, chunk_len)
         if nb is not None:
             n, e = nb
             self.interpolated += 1
             n_est = analytic_shape_cycles(
                 n["family"], n["H"], n["G"], n["B"], n["chunk_len"],
-                self.design, chained=n["chained"])
+                self.design, chained=n["chained"],
+                precision=n["precision"])
             return e["med_us"] * (est / n_est) if n_est > 0 else e["med_us"]
         self.fallbacks += 1
         return self.cycles_to_us(est)
 
-    def _nearest(self, family, dtype, dirs, chained, H, G, B, chunk_len):
-        """The closest measured shape sharing the categorical fields, by
-        summed |log ratio| over (H, G, B, chunk_len); None when no entry
-        is within ``NEIGHBOR_MAX_RATIO`` on every dim."""
+    def _nearest(self, family, dtype, dirs, chained, precision,
+                 H, G, B, chunk_len):
+        """The closest measured shape sharing the categorical fields
+        (family, dtype, dirs, chained, precision), by summed |log ratio|
+        over (H, G, B, chunk_len); None when no entry is within
+        ``NEIGHBOR_MAX_RATIO`` on every dim."""
         want_dirs = "+".join(sorted(set(dirs)))
         best = None
         for sig in self.table.signatures():
             n = parse_signature(sig)
             if n is None or n["family"] != family or n["dtype"] != dtype \
-                    or n["dirs"] != want_dirs or n["chained"] != chained:
+                    or n["dirs"] != want_dirs or n["chained"] != chained \
+                    or n["precision"] != precision:
                 continue
             ratios = [max(a, b) / min(a, b) for a, b in
                       ((n["H"], H), (n["G"], G), (n["B"], B),

@@ -45,14 +45,22 @@ class ConfigTable:
             self._blocks[key] = select_block_shape(m, n, **kw)
         return self._blocks[key]
 
-    def seq_block(self, T: int, B: int, H: int, *, gates: int = 4, **kw) -> int:
+    def seq_block(self, T: int, B: int, H: int, *, gates: int = 4,
+                  precision: str = "fp32", density: float = 1.0, **kw) -> int:
         """T-block for the sequence-fused recurrent kernels (LSTM: gates=4,
-        GRU: gates=3).  Keys for gates=4 stay unsuffixed so persisted PR-1
-        tables remain valid."""
+        GRU: gates=3).  Keys for gates=4 / fp32 / dense stay unsuffixed so
+        persisted PR-1 tables remain valid; quantized (``p{precision}``)
+        and block-sparse (``d{density}``) variants key separately — the
+        narrowed resident-U footprint re-tunes them to larger stripes."""
         key = f"{T}x{B}x{H}" if gates == 4 else f"{T}x{B}x{H}g{gates}"
+        if precision != "fp32":
+            key += f"p{precision}"
+        if density != 1.0:
+            key += f"d{round(density, 4):g}"
         if key not in self._seq_blocks:
-            self._seq_blocks[key] = select_time_block(T, B, H, gates=gates,
-                                                      **kw)
+            self._seq_blocks[key] = select_time_block(
+                T, B, H, gates=gates, precision=precision, density=density,
+                **kw)
         return self._seq_blocks[key]
 
     def save(self):

@@ -223,10 +223,20 @@ def per_step_plan_cycles(family: str, H: int, X: int, T: int, L: int,
 # extra same-signature launch.
 MXU_ROWS = 8
 
+#: Relative per-step MAC cost under each recurrent-weight precision.
+#: fp32 is the unit; bf16 narrows the weight operand (half the weight
+#: bandwidth feeding the MXU); int8 halves it again plus the dequantize
+#: ride-along on the accumulate.  These are planner-scoring ratios, not
+#: silicon truth — ``cost_model="measured"`` replaces them with replayed
+#: reality (calib signatures carry the precision tag).
+PRECISION_MAC_FACTOR = {"fp32": 1.0, "bf16": 0.75, "int8": 0.5}
+
 
 def slot_launch_cycles(family: str, H: int, chunk_len: int,
                        widths: Sequence[int], design: Design, *,
-                       launch_cycles: float = LAUNCH_CYCLES) -> float:
+                       launch_cycles: float = LAUNCH_CYCLES,
+                       precision: str = "fp32",
+                       density: float = 1.0) -> float:
     """Cycle cost of ONE G-batched sequence-kernel launch whose g-rows are
     the given batch widths, padded to max(widths).
 
@@ -234,8 +244,14 @@ def slot_launch_cycles(family: str, H: int, chunk_len: int,
     with its padded B-row-tile count.  The planner uses this to score a
     B-widened slot (pad ragged widths to one launch, mask the dead rows)
     against splitting by width (exact rows, one more launch each) — the
-    "B-widened vs G-batched" decision of cross-B packing."""
+    "B-widened vs G-batched" decision of cross-B packing.
+
+    ``precision`` applies the PRECISION_MAC_FACTOR discount and
+    ``density`` the block-sparse skipped-row-tile discount (the recurrent
+    MVM only visits occupied input-row tiles) — both scale the per-step
+    MAC term, never the launch overhead."""
     per = recurrent_step_cycles(family, H, H, design)
+    per *= PRECISION_MAC_FACTOR[precision] * density
     row_tiles = math.ceil(max(widths) / MXU_ROWS)
     return len(widths) * chunk_len * per * row_tiles + launch_cycles
 

@@ -134,20 +134,41 @@ def select_block_shape(m: int, n: int, *, vmem_budget: int = 4 * 2**20,
 
 SEQ_VMEM_BUDGET = 8 * 2**20  # working-set bound for the sequence kernels
 
+# bytes per element of the RESIDENT recurrent weight U under each weight
+# precision (activations/state keep the launch dtype's width); int8 adds
+# the per-gate f32 scale vector on top, accounted separately below
+PRECISION_WEIGHT_BYTES = {"fp32": 4, "bf16": 2, "int8": 1}
+
 
 def seq_block_footprint(bt: int, B: int, H: int, *, gates: int = 4,
-                        bytes_per_el: int = 4) -> int:
+                        bytes_per_el: int = 4, precision: str = "fp32",
+                        density: float = 1.0) -> int:
     """VMEM working set of one sequence-kernel grid step at T-stripe ``bt``:
     resident U (gates·H²) + streamed xw stripe (B·bt·gates·H) + hs stripe
-    (B·bt·H) + state/seed tiles (≤4·B·H)."""
-    return bytes_per_el * (gates * H * H + B * bt * (gates + 1) * H
-                           + 4 * B * H)
+    (B·bt·H) + state/seed tiles (≤4·B·H).
+
+    ``precision`` narrows the resident U term only (int8 is 1 byte/weight
+    + a gates-wide f32 scale vector; bf16 is 2; fp32 keeps ``bytes_per_el``
+    so the formula is byte-identical to the historical one), and
+    ``density`` scales it for the block-sparse row-compacted payload
+    (Ha ≈ density·H surviving rows + a 4-byte int32 row index each)."""
+    if precision == "fp32":
+        w_bytes = bytes_per_el * gates * H * H
+    else:
+        w_bytes = PRECISION_WEIGHT_BYTES[precision] * gates * H * H
+        if precision == "int8":
+            w_bytes += 4 * gates  # the per-gate f32 scale vector
+    if density < 1.0:
+        # Ha compacted weight rows + the (Ha,) int32 row-index operand
+        w_bytes = int(w_bytes * density) + 4 * int(density * H)
+    return w_bytes + bytes_per_el * (B * bt * (gates + 1) * H + 4 * B * H)
 
 
 @functools.lru_cache(maxsize=None)
 def select_time_block(T: int, B: int, H: int, *,
                       vmem_budget: int = SEQ_VMEM_BUDGET,
                       bytes_per_el: int = 4, gates: int = 4,
+                      precision: str = "fp32", density: float = 1.0,
                       bt_choices: Sequence[int] = (1, 2, 4, 8, 16, 32, 64,
                                                    128, 256),
                       ) -> int:
@@ -161,7 +182,9 @@ def select_time_block(T: int, B: int, H: int, *,
     the bt minimizing the T-edge ceil-padding waste, then the largest such
     bt (fewest grid steps / launch amortization), under the budget — the
     time-axis analogue of ``select_block_shape``.  ``gates`` is 4 for the
-    LSTM, 3 for GRU."""
+    LSTM, 3 for GRU.  ``precision``/``density`` narrow the resident weight
+    term (see seq_block_footprint), so quantized/sparse launches re-tune
+    to larger time stripes at the same budget."""
     if T <= 0:
         return 1
 
@@ -169,7 +192,8 @@ def select_time_block(T: int, B: int, H: int, *,
     for bt in bt_choices:
         bt = min(bt, T)
         if bt > 1 and seq_block_footprint(
-                bt, B, H, gates=gates, bytes_per_el=bytes_per_el) > vmem_budget:
+                bt, B, H, gates=gates, bytes_per_el=bytes_per_el,
+                precision=precision, density=density) > vmem_budget:
             continue
         waste = math.ceil(T / bt) * bt - T
         key = (round(waste / T, 6), -bt)

@@ -53,8 +53,12 @@ from typing import Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 
+from repro.core.perfmodel import MXU_ROWS
 from repro.dispatch.planner import DispatchPlan, ItemPlan
 from repro.dispatch.workitem import GATES
+from repro.kernels.quant import (bf16_roundtrip, compact_rows,
+                                 active_row_indices, expand_rows,
+                                 quantize_per_gate)
 from repro.runtime.errors import (FALLBACK_LEVELS, ExecutionReport,
                                   FaultInjector, LaunchError,
                                   NonFiniteStateError)
@@ -76,6 +80,7 @@ def execute(plan: DispatchPlan, params: Dict[int, dict],
             collect_state: bool = False,
             init_state: Optional[Dict[int, dict]] = None,
             prepared: Optional[Dict[int, dict]] = None,
+            quant_cache: Optional[dict] = None,
             on_fault: str = "raise",
             check_finite: bool = False,
             inject: Optional[FaultInjector] = None,
@@ -105,6 +110,14 @@ def execute(plan: DispatchPlan, params: Dict[int, dict],
     ``prepared`` optionally carries pre-stacked decode weights per uid
     (see ``prepare_decode_stack``) so steady-state decode ticks don't
     restack unchanged parameters every tick.
+
+    ``quant_cache`` memoizes per-(item, layer, direction) quantized /
+    row-compacted recurrent-weight operands across slots (and across
+    calls, when the caller owns the dict — ``CompiledStack`` keeps one per
+    plan, valid while the bound parameters don't change).  None builds a
+    per-call cache, so each layer is still transformed at most once per
+    execute().  Only consulted for slots whose ``precision != "fp32"`` or
+    whose items carry a block-sparsity ``tile_map``.
 
     ``collect_state`` reroutes unpacked (external) unidirectional items
     through the per-layer fused path — the only surface that returns exact
@@ -155,6 +168,8 @@ def execute(plan: DispatchPlan, params: Dict[int, dict],
 
     outputs: Dict[int, jnp.ndarray] = {}
     states: Dict[int, dict] = {}
+    if quant_cache is None:
+        quant_cache = {}  # per-call memo: each layer transforms at most once
 
     # ---- external fallbacks (reference schedules / per-step / rglru /
     # T=0) — bidirectional items land here only under a forced stateless
@@ -234,7 +249,7 @@ def execute(plan: DispatchPlan, params: Dict[int, dict],
             continue
         gates = GATES[slot.family]
         with tracer.span("hoist", slot=slot.index):
-            xws, us, hs, cs = [], [], [], []
+            xws, hs, cs = [], [], []
             for grp, b in zip(slot.groups, slot.group_b):
                 xw_rows, h_rows, c_rows = [], [], []
                 for cell in grp:
@@ -251,16 +266,14 @@ def execute(plan: DispatchPlan, params: Dict[int, dict],
                 # rows narrower than the slot's width pad with zeros,
                 # masked in-kernel to exact no-ops
                 xw_g = _cat_pad(xw_rows, slot.B)
-                us.append(_cell_layer_params(params, live[grp[0].uid],
-                                             grp[0])
-                          ["U"].reshape(slot.H, gates, slot.H))
                 xws.append(xw_g)
                 hs.append(_cat_pad(h_rows, slot.B))
                 if slot.family == "lstm":
                     cs.append(_cat_pad(c_rows, slot.B))
 
             xw = jnp.stack(xws)          # (G, B, bt, gates, H)
-            U = jnp.stack(us)            # (G, H, gates, H)
+            U, u_scales, u_rows = _slot_weights(slot, params, live,
+                                                quant_cache)
             h0 = jnp.stack(hs)           # (G, B, H)
             c0 = jnp.stack(cs) if slot.family == "lstm" else None
         b_valid = (jnp.asarray(slot.group_b, jnp.int32)
@@ -272,6 +285,7 @@ def execute(plan: DispatchPlan, params: Dict[int, dict],
             out, h_n, c_n = _guarded_launch(
                 slot.index, uids,
                 _seq_ladder(slot, U, xw, h0, c0, b_valid,
+                            u_scales=u_scales, u_rows=u_rows,
                             interpret=interpret),
                 on_fault=on_fault, inject=inject, report=report,
                 tracer=tracer)
@@ -339,7 +353,65 @@ def _slot_est_cycles(slot, macs: int, X: int = 0) -> float:
         return decode_plan_cycles(slot.family, slot.H, X or slot.H,
                                   len(slot.groups), design)
     return slot_launch_cycles(slot.family, slot.H, slot.chunk_len,
-                              list(slot.group_b), design)
+                              list(slot.group_b), design,
+                              precision=slot.precision)
+
+
+def _slot_weights(slot, params, live, cache: dict):
+    """Stack one sequence slot's per-group recurrent-weight operands under
+    the slot's precision and its items' block-sparsity tile maps.
+
+    Returns ``(U, u_scales, u_rows)``: dense fp32 ``(G, H, gates, H)`` with
+    None markers for a plain fp32 slot; bf16 round-trips the values in
+    place (still f32 storage — exact); int8 swaps in the per-gate quantized
+    payload plus ``u_scales (G, gates)``; a tile_map row-compacts to the
+    slot-uniform ``Ha`` active-row count plus ``u_rows (G, Ha)``.  Groups
+    without a tile_map in a sparse slot ride along dense (all-ones bitmap).
+    Per-(item, layer, direction) transforms memoize in ``cache`` so the
+    chunk slots of one layer quantize/compact the weights ONCE per plan.
+    """
+    gates = GATES[slot.family]
+    leads = [grp[0] for grp in slot.groups]
+    quant = slot.precision == "int8"
+
+    def _bitmap(cell):
+        tm = live[cell.uid]["plan"].item.tile_map
+        if tm is None:
+            return (1,) * (-(-slot.H // MXU_ROWS))
+        return tm[cell.layer]
+
+    sparse = any(live[c.uid]["plan"].item.tile_map is not None
+                 for c in leads)
+    Ha = 0
+    if sparse:
+        # slot-uniform padded row count: the stacked (G, Ha) gather index
+        # needs one Ha; padding rows are exact no-ops (kernels.quant)
+        Ha = max(max(len(active_row_indices(_bitmap(c), slot.H))
+                     for c in leads), 1)
+
+    us, scales, rows = [], [], []
+    for cell in leads:
+        key = (cell.uid, cell.layer, cell.direction, slot.precision,
+               Ha if sparse else -1)
+        entry = cache.get(key)
+        if entry is None:
+            U = _cell_layer_params(params, live[cell.uid], cell)["U"] \
+                .reshape(slot.H, gates, slot.H)
+            if slot.precision == "bf16":
+                U = bf16_roundtrip(U)
+            s = None
+            if quant:
+                U, s = quantize_per_gate(U)
+            r = None
+            if sparse:
+                U, r = compact_rows(U, _bitmap(cell), pad_to=Ha)
+            entry = cache[key] = (U, s, r)
+        us.append(entry[0])
+        scales.append(entry[1])
+        rows.append(entry[2])
+    return (jnp.stack(us),
+            jnp.stack(scales) if quant else None,
+            jnp.stack(rows) if sparse else None)
 
 
 # ---------------------------------------------------------------------------
@@ -401,13 +473,18 @@ def _guarded_launch(slot_index: int, uids, ladder, *, on_fault: str,
         uids=uids, slot=slot_index, level=FALLBACK_LEVELS[last])
 
 
-def _seq_ladder(slot, U, xw, h0, c0, b_valid, *, interpret):
+def _seq_ladder(slot, U, xw, h0, c0, b_valid, *, u_scales=None, u_rows=None,
+                interpret):
     """The three launch strategies for a packed sequence slot, shallowest
     first: the planned fused launch; per-step — the same kernels at
     block_t=1, one launch per timestep; and the pure-jnp reference scan.
     All three consume the identical pre-hoisted ``xw`` (bwd cells arrive
     pre-flipped), so their outputs agree to the kernel's own tolerance and
-    the scatter below is rung-agnostic."""
+    the scatter below is rung-agnostic.  Quantized / row-compacted slots
+    pass their operands down the kernel rungs unchanged; the reference
+    rung reconstructs the dense dequantized matrix (value-identical to
+    what the kernel computes with, see kernels.quant), so every rung
+    satisfies the same oracle bound."""
     from repro.kernels.gru_cell.ops import gru_seq
     from repro.kernels.gru_cell.ref import gru_seq_ref
     from repro.kernels.lstm_cell.ops import lstm_seq
@@ -418,8 +495,10 @@ def _seq_ladder(slot, U, xw, h0, c0, b_valid, *, interpret):
     def fused():
         if lstm:
             return lstm_seq(U, xw, h0, c0, b_valid=b_valid,
+                            u_scales=u_scales, u_rows=u_rows,
                             block_t=slot.chunk_len, interpret=interpret)
         out, h_n = gru_seq(U, xw, h0, b_valid=b_valid,
+                           u_scales=u_scales, u_rows=u_rows,
                            block_t=slot.chunk_len, interpret=interpret)
         return out, h_n, None
 
@@ -429,17 +508,25 @@ def _seq_ladder(slot, U, xw, h0, c0, b_valid, *, interpret):
             xw_t = xw[:, :, t:t + 1]
             if lstm:
                 o, h, c = lstm_seq(U, xw_t, h, c, b_valid=b_valid,
+                                   u_scales=u_scales, u_rows=u_rows,
                                    block_t=1, interpret=interpret)
             else:
-                o, h = gru_seq(U, xw_t, h, b_valid=b_valid, block_t=1,
-                               interpret=interpret)
+                o, h = gru_seq(U, xw_t, h, b_valid=b_valid,
+                               u_scales=u_scales, u_rows=u_rows,
+                               block_t=1, interpret=interpret)
             outs.append(o)
         return jnp.concatenate(outs, axis=2), h, (c if lstm else None)
 
     def reference():
+        Ud = U
+        if u_scales is not None:  # dequantize the int8 payload
+            Ud = Ud.astype(jnp.float32) * u_scales[:, None, :, None]
+        if u_rows is not None:    # scatter compacted rows back to dense
+            Ud = jnp.stack([expand_rows(Ud[g], u_rows[g], slot.H)
+                            for g in range(Ud.shape[0])])
         if lstm:
-            return lstm_seq_ref(U, xw, h0, c0)
-        out, h_n = gru_seq_ref(U, xw, h0)
+            return lstm_seq_ref(Ud, xw, h0, c0)
+        out, h_n = gru_seq_ref(Ud, xw, h0)
         return out, h_n, None
 
     return [fused, per_step, reference]
@@ -512,7 +599,8 @@ def _cat_pad(rows, B: int):
     return jnp.pad(cat, pad)
 
 
-def prepare_decode_stack(stack_params: dict, family: str) -> dict:
+def prepare_decode_stack(stack_params: dict, family: str,
+                         precision: str = "fp32") -> dict:
     """Stack a parameter stack into the decode kernels' (L, ...) weight
     layout: {"Ws", "bs", "Us"}.  Steady-state callers (the serving engine)
     compute this ONCE per stack and pass it to ``execute(prepared=...)`` —
@@ -521,8 +609,18 @@ def prepare_decode_stack(stack_params: dict, family: str) -> dict:
 
     Ws[0] is a zero placeholder when layer 0's input width differs from H;
     the kernel never reads it (layer 0's input half arrives pre-hoisted).
+
+    ``precision`` != "fp32" round-trips each layer's recurrent matrix
+    through the precision's fake-quant (``kernels.quant.fake_quant_stack``,
+    U only — W/b stay full precision) before stacking: decode ticks run
+    the dense dequantized values, so a quantized stack's decode output
+    matches its dequantized oracle EXACTLY — the bounded-error contract
+    only ever spends its budget in the sequence kernels' scaled dot.
     """
     gates = GATES[family]
+    if precision != "fp32":
+        from repro.kernels.quant import fake_quant_stack
+        stack_params = fake_quant_stack(stack_params, precision)
     stack = stack_params["layers"]
     H = stack[0]["U"].shape[0]
     L = len(stack)
@@ -568,7 +666,8 @@ def _run_chained_slot(slot, params, inputs, live, *, interpret=None,
         xw0 = _cat_pad([_hoist(stack[0], inputs[c.uid], gates)[:, 0]
                         for c in row_cells], slot.B)    # (B, gates, H)
         prep = ((prepared or {}).get(lead_uid)
-                or prepare_decode_stack(params[lead_uid], slot.family))
+                or prepare_decode_stack(params[lead_uid], slot.family,
+                                        precision=slot.precision))
         Ws, bs, Us = prep["Ws"], prep["bs"], prep["Us"]
         h0 = jnp.stack([_cat_pad([live[c.uid]["h"][(l, "fwd")]
                                   for c in row_cells],

@@ -102,6 +102,10 @@ class Slot:
     groups: Tuple[Tuple[Cell, ...], ...]
     group_b: Tuple[int, ...]    # valid batch rows per group (<= B)
     chained: bool = False
+    precision: str = "fp32"     # recurrent-weight precision of every cell
+    #                             in this launch (part of the signature —
+    #                             int8 and fp32 launches never share a
+    #                             slot or a measured-cost entry)
 
     @property
     def g(self) -> int:
@@ -114,11 +118,11 @@ class Slot:
     def signature(self) -> str:
         """The launch signature string traces and the measured-launch cost
         table key on (family, G, padded B, H, T-stripe, dtype, direction
-        mix, chained) — see ``runtime.obs.slot_signature``."""
+        mix, precision, chained) — see ``runtime.obs.slot_signature``."""
         return slot_signature(self.family, self.H, self.g, self.B,
                               self.chunk_len, self.dtype,
                               directions=[c.direction for c in self.cells],
-                              chained=self.chained)
+                              chained=self.chained, precision=self.precision)
 
     def describe(self) -> str:
         grps = " ".join(
@@ -303,7 +307,8 @@ def _slots_us(slots: Sequence[Slot], cm) -> float:
     analytic-converted fallback; see ``calib.MeasuredCostModel``)."""
     return sum(
         cm.slot_us(s.family, s.H, s.g, s.B, s.chunk_len, s.dtype,
-                   dirs=[c.direction for c in s.cells], chained=s.chained)
+                   dirs=[c.direction for c in s.cells], chained=s.chained,
+                   precision=s.precision)
         for s in slots)
 
 
@@ -331,6 +336,7 @@ def _pack(item_plans: Sequence[ItemPlan], macs: int, *,
     cm = _active_cost_model(cost_model)
     design = Design(macs=macs or DEFAULT_MACS, schedule="unfolded")
     by_item = [(ip, _item_cells(ip)) for ip in item_plans]
+    items_by_uid = {ip.uid: ip.item for ip in item_plans}
     n_waves = max((max(w) + 1 for _, w in by_item if w), default=0)
     slots: List[Slot] = []
     for s in range(n_waves):
@@ -346,14 +352,18 @@ def _pack(item_plans: Sequence[ItemPlan], macs: int, *,
                 # shares ONE recurrent matrix U, and a bidirectional
                 # layer's fwd/bwd halves are distinct parameters (they may
                 # still share the LAUNCH — different g rows of one slot)
+                # precision joins every launch signature: an int8 cell can
+                # never share a launch (or a measured-cost entry) with an
+                # fp32 one — the U operands have different dtypes/shapes
                 if cross_b:
-                    sig = (fam, it.H, chunk_len, it.dtype)
+                    sig = (fam, it.H, chunk_len, it.dtype, it.precision)
                     gkey = (("share", it.share, cell.layer, cell.direction)
                             if it.share is not None else
                             ("solo", it.uid, cell.layer, cell.chunk,
                              cell.direction))
                 else:
-                    sig = (fam, it.H, it.B, chunk_len, it.dtype)
+                    sig = (fam, it.H, it.B, chunk_len, it.dtype,
+                           it.precision)
                     gkey = ("solo", it.uid, cell.layer, cell.chunk,
                             cell.direction)
                 sigs.setdefault(sig, {}).setdefault(gkey, []).append(
@@ -361,18 +371,21 @@ def _pack(item_plans: Sequence[ItemPlan], macs: int, *,
                      it.B))
         for sig in sorted(sigs, key=str):
             if cross_b:
-                family, H, chunk_len, dtype = sig
+                family, H, chunk_len, dtype, precision = sig
             else:
-                family, H, _, chunk_len, dtype = sig
+                family, H, _, chunk_len, dtype, precision = sig
             gates = GATES.get(family, 1)
 
             def fits(width: int) -> bool:
                 # every item validated its block_t at its OWN B; a concat
                 # row is wider, so re-check the sequence kernels' VMEM
                 # working-set bound before widening (a singleton row always
-                # fits by the per-item validation)
-                return seq_block_footprint(chunk_len, width, H,
-                                           gates=gates) <= SEQ_VMEM_BUDGET
+                # fits by the per-item validation).  The precision-narrowed
+                # weight term applies; density stays conservative at 1.0 —
+                # widening never ASSUMES sparsity
+                return seq_block_footprint(chunk_len, width, H, gates=gates,
+                                           precision=precision) \
+                    <= SEQ_VMEM_BUDGET
 
             rows = []  # (lead order key, cells, valid B)
             for members in sigs[sig].values():
@@ -391,22 +404,32 @@ def _pack(item_plans: Sequence[ItemPlan], macs: int, *,
             classes = sorted(set(widths))
             if len(classes) > 1:
                 # B-widened (one padded launch) vs G-batched by width
-                # (exact rows, one launch per width class) — scored
+                # (exact rows, one launch per width class) — scored under
+                # the slot's precision discount and the cells' mean
+                # skipped-tile density
+                cell_dens = [items_by_uid[c.uid].layer_density(c.layer)
+                             for _, cells, _ in rows for c in cells]
+                dens = sum(cell_dens) / len(cell_dens)
                 if cm is not None:
                     dirs = sorted({c.direction for _, cells, _ in rows
                                    for c in cells})
                     merged = cm.slot_us(family, H, len(rows), max(widths),
-                                        chunk_len, dtype, dirs=dirs)
+                                        chunk_len, dtype, dirs=dirs,
+                                        precision=precision)
                     split = sum(cm.slot_us(
                         family, H, sum(1 for w in widths if w == cls), cls,
-                        chunk_len, dtype, dirs=dirs) for cls in classes)
+                        chunk_len, dtype, dirs=dirs, precision=precision)
+                        for cls in classes)
                 else:
                     merged = slot_launch_cycles(family, H, chunk_len,
-                                                widths, design)
+                                                widths, design,
+                                                precision=precision,
+                                                density=dens)
                     split = sum(slot_launch_cycles(
                         family, H, chunk_len,
                         [w for w in widths if w == cls],
-                        design) for cls in classes)
+                        design, precision=precision, density=dens)
+                        for cls in classes)
                 buckets = ([rows] if merged <= split else
                            [[r for r in rows if r[2] == cls]
                             for cls in classes])
@@ -419,7 +442,8 @@ def _pack(item_plans: Sequence[ItemPlan], macs: int, *,
                     B=max(b for _, _, b in bucket), chunk_len=chunk_len,
                     dtype=dtype, tile_k=tile_k, mvm_block=mvm_block,
                     groups=tuple(cells for _, cells, _ in bucket),
-                    group_b=tuple(b for _, _, b in bucket)))
+                    group_b=tuple(b for _, _, b in bucket),
+                    precision=precision))
     return tuple(slots)
 
 
@@ -427,11 +451,15 @@ REFERENCE_SCHEDULES = ("sequential", "batch", "intergate", "unfolded")
 FORCED_SCHEDULES = REFERENCE_SCHEDULES + ("wavefront", "fused", "per_step")
 
 
-def _fit_stripe(bt: int, B: int, H: int, gates: int) -> int:
+def _fit_stripe(bt: int, B: int, H: int, gates: int,
+                precision: str = "fp32", density: float = 1.0) -> int:
     """Halve a requested T-stripe until its sequence-kernel working set
-    fits the VMEM budget (shared by the forced and auto paths)."""
-    while bt > 1 and seq_block_footprint(bt, B, H,
-                                         gates=gates) > SEQ_VMEM_BUDGET:
+    fits the VMEM budget (shared by the forced and auto paths).  The
+    precision/density-narrowed weight residency applies — an int8 item
+    keeps stripes an fp32 one would have to halve."""
+    while bt > 1 and seq_block_footprint(
+            bt, B, H, gates=gates, precision=precision,
+            density=density) > SEQ_VMEM_BUDGET:
         bt //= 2
     return bt
 
@@ -514,8 +542,10 @@ def _forced_plan(it: WorkItem, design: Design, force: str, force_bt: int,
     # wavefront: forced stripe if given (VMEM-checked), else the autotuned
     # one — nk may collapse to 1, which IS the packable fused shape
     bt = _fit_stripe(min(it.T, force_bt) if force_bt else
-                     table().seq_block(it.T, it.B, it.H, gates=it.gates),
-                     it.B, it.H, it.gates)
+                     table().seq_block(it.T, it.B, it.H, gates=it.gates,
+                                       precision=it.precision,
+                                       density=it.max_density),
+                     it.B, it.H, it.gates, it.precision, it.max_density)
     nk = cdiv(it.T, bt)
     est = _wave_est(it, design, nk=nk)
     ip = ItemPlan(item=it, schedule="wavefront" if nk > 1 else "fused",
@@ -536,7 +566,8 @@ def _per_step_us(it: WorkItem, cm, design: Design) -> float:
                              launch_cycles=0)
         for f, n in sorted(Counter(it.families).items()) if f != "lstm")
     launches_us = (it.dirs * n_lstm * it.T *
-                   cm.slot_us("lstm", it.H, 1, it.B, 1, it.dtype)
+                   cm.slot_us("lstm", it.H, 1, it.B, 1, it.dtype,
+                              precision=it.precision)
                    if n_lstm else 0.0)
     return launches_us + (cm.cycles_to_us(other) if other else 0.0)
 
@@ -582,16 +613,20 @@ def _schedule_item(it: WorkItem, macs: int, design: Design,
         # an explicit stripe override (ExecutionPolicy.block_t) pins the
         # wavefront candidate even under "auto" — the scorer still weighs
         # it against per_step, but never re-stripes it
-        cands = [_fit_stripe(min(it.T, force_bt), it.B, it.H, it.gates)]
+        cands = [_fit_stripe(min(it.T, force_bt), it.B, it.H, it.gates,
+                             it.precision, it.max_density)]
     else:
-        bt0 = table().seq_block(it.T, it.B, it.H, gates=it.gates)
+        bt0 = table().seq_block(it.T, it.B, it.H, gates=it.gates,
+                                precision=it.precision,
+                                density=it.max_density)
         cands = sorted({min(it.T, bt0), min(it.T, max(1, bt0 // 2)),
                         min(it.T, bt0 * 2), it.T})
         # wider-than-bt0 candidates must still respect the sequence
         # kernels' VMEM working-set bound the autotune table enforces
         cands = [bt for bt in cands
-                 if bt <= 1 or seq_block_footprint(bt, it.B, it.H,
-                                                   gates=it.gates)
+                 if bt <= 1 or seq_block_footprint(
+                     bt, it.B, it.H, gates=it.gates,
+                     precision=it.precision, density=it.max_density)
                  <= SEQ_VMEM_BUDGET] or [min(it.T, bt0)]
     scored = []
     for bt in cands:
@@ -794,11 +829,11 @@ def plan_decode(items: Iterable[WorkItem], *, macs: int = DEFAULT_MACS,
                 "consumes the FULL sequence, so a T=1 tick cannot exist; "
                 "run whole sequences through forward()/prefill() (the "
                 "interleaved-wavefront prefill path) instead")
-        key = (it.family, it.H, it.L, it.X, it.dtype, it.share)
+        key = (it.family, it.H, it.L, it.X, it.dtype, it.share, it.precision)
         if key != (head.family, head.H, head.L, head.X, head.dtype,
-                   head.share):
+                   head.share, head.precision):
             raise ValueError(f"item {it.uid}: decode tick items must share "
-                             f"(family, H, L, X, dtype, share); "
+                             f"(family, H, L, X, dtype, share, precision); "
                              f"{key} != first item's")
 
     design = Design(macs=macs, schedule="unfolded")
@@ -832,7 +867,8 @@ def plan_decode(items: Iterable[WorkItem], *, macs: int = DEFAULT_MACS,
     est_chain_us = est_layers_us = None
     if cm is not None:
         est_chain_us = cm.slot_us(head.family, head.H, head.L, B_total, 1,
-                                  head.dtype, chained=True)
+                                  head.dtype, chained=True,
+                                  precision=head.precision)
         alt = plan(items, macs=macs, cross_b=True, schedule="wavefront",
                    block_t=1, tracer=None, cost_model=cost_model)
         est_layers_us = _slots_us(alt.slots, cm)
@@ -868,7 +904,8 @@ def plan_decode(items: Iterable[WorkItem], *, macs: int = DEFAULT_MACS,
                     groups=tuple(tuple(Cell(uid=it.uid, layer=l, chunk=0)
                                        for it in items)
                                  for l in range(head.L)),
-                    group_b=(B_total,) * head.L, chained=True)
+                    group_b=(B_total,) * head.L, chained=True,
+                    precision=head.precision)
     return DispatchPlan(items=item_plans, slots=(slot,), external=(),
                         macs=macs)
 
@@ -896,8 +933,8 @@ def _align_group_stripes(items: Sequence[WorkItem],
             # bidirectional items likewise — their interleaved timeline is
             # costed by bidir_stack_plan_cycles, and their cells still
             # pack with any same-signature wave through _pack
-            sig = ((it.family, it.H, it.dtype) if cross_b
-                   else (it.family, it.H, it.B, it.dtype))
+            sig = ((it.family, it.H, it.dtype, it.precision) if cross_b
+                   else (it.family, it.H, it.B, it.dtype, it.precision))
             groups.setdefault(sig, []).append(it)
 
     def trial_plans(members, bt):
@@ -908,9 +945,9 @@ def _align_group_stripes(items: Sequence[WorkItem],
             # respect the VMEM working-set bound at each member's OWN B
             # (its original block_t was only validated there) — members the
             # stripe doesn't fit keep their own validated choice
-            if mbt > 1 and seq_block_footprint(mbt, m.B, m.H,
-                                               gates=m.gates) \
-                    > SEQ_VMEM_BUDGET:
+            if mbt > 1 and seq_block_footprint(
+                    mbt, m.B, m.H, gates=m.gates, precision=m.precision,
+                    density=m.max_density) > SEQ_VMEM_BUDGET:
                 mbt = plans[m.uid].block_t
             nk = cdiv(m.T, mbt)
             est = stack_plan_cycles(m.family, m.H, m.X, m.T, m.L, design,

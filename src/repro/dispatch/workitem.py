@@ -30,6 +30,20 @@ from repro.configs.base import ModelConfig
 FAMILIES = ("lstm", "gru", "rglru")
 GATES = {"lstm": 4, "gru": 3, "rglru": 1}
 
+#: Weight precisions the fused sequence kernels execute: "fp32" is the
+#: bit-exact default; "bf16" round-trips the recurrent matrix through
+#: bfloat16 (exact vs its dequantized oracle); "int8" stores U as a
+#: per-gate absmax int8 payload (4x smaller VMEM residency, fp32
+#: accumulate) — bounded-error vs the dequantized oracle, not bit-equal
+#: (see kernels.quant).
+PRECISIONS = ("fp32", "bf16", "int8")
+
+#: "none" runs dense; "block" row-compacts each layer's recurrent matrix
+#: to its occupied MXU row-tiles (the ``tile_map`` bitmap) and the kernel
+#: gathers h to the surviving rows — value-exact up to dot reduction
+#: order.
+SPARSITIES = ("none", "block")
+
 
 @dataclass(frozen=True)
 class WorkItem:
@@ -60,6 +74,15 @@ class WorkItem:
     #                              heterogeneous stacks (rglru layers have
     #                              no (h, c)-state sequence kernel and
     #                              cannot appear in a mixed stack)
+    precision: str = "fp32"  # recurrent-weight precision (PRECISIONS); the
+    #                              executor hoists the quantized payload and
+    #                              the planner prices the narrowed VMEM
+    #                              residency + MAC discount
+    tile_map: Optional[tuple] = None  # block-sparsity occupancy: one
+    #                              length-cdiv(H, MXU_ROWS) tuple of 0/1
+    #                              per layer (bidirectional layers OR-union
+    #                              their halves); None = dense.  Hashable,
+    #                              so shape-keyed plan caching still works
 
     def __post_init__(self):
         if self.family not in FAMILIES:
@@ -94,6 +117,25 @@ class WorkItem:
                     raise ValueError(
                         f"item {self.uid}: mixed-family stacks cannot be "
                         "bidirectional")
+        if self.precision not in PRECISIONS:
+            raise ValueError(
+                f"item {self.uid}: unknown precision {self.precision!r}; "
+                f"{PRECISIONS}")
+        if self.tile_map is not None:
+            from repro.core.perfmodel import MXU_ROWS
+            tm = tuple(tuple(int(b) for b in layer) for layer in self.tile_map)
+            object.__setattr__(self, "tile_map", tm)
+            n_tiles = -(-self.H // MXU_ROWS)
+            if len(tm) != self.L:
+                raise ValueError(
+                    f"item {self.uid}: tile_map has {len(tm)} layers for "
+                    f"L={self.L}")
+            for li, layer in enumerate(tm):
+                if len(layer) != n_tiles or not set(layer) <= {0, 1}:
+                    raise ValueError(
+                        f"item {self.uid}: tile_map[{li}] must be "
+                        f"{n_tiles} 0/1 tile bits for H={self.H}, got "
+                        f"{layer}")
 
     @property
     def gates(self) -> int:
@@ -112,6 +154,32 @@ class WorkItem:
     @property
     def heterogeneous(self) -> bool:
         return len(set(self.families)) > 1
+
+    @property
+    def density(self) -> float:
+        """Mean occupied-tile fraction of the recurrent matrices (1.0 when
+        dense) — the planner's skipped-tile discount."""
+        if self.tile_map is None:
+            return 1.0
+        return (sum(sum(layer) for layer in self.tile_map)
+                / sum(len(layer) for layer in self.tile_map))
+
+    def layer_density(self, layer: int) -> float:
+        """Occupied-tile fraction of one layer's recurrent matrix."""
+        if self.tile_map is None:
+            return 1.0
+        bits = self.tile_map[layer]
+        return sum(bits) / len(bits)
+
+    @property
+    def max_density(self) -> float:
+        """Densest layer's occupied-tile fraction — what VMEM stripe
+        selection must budget for (``block_t`` is item-uniform, so the
+        densest layer's resident set is the binding constraint; ``density``
+        is the mean, for launch-cost pricing)."""
+        if self.tile_map is None:
+            return 1.0
+        return max(self.layer_density(l) for l in range(self.L))
 
     def order_key(self):
         """Admission / intra-slot ordering: priority, then deadline, then

@@ -28,7 +28,8 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.common import cdiv
 
 
-def _seq_kernel(*refs, block_t: int, T: int, masked: bool):
+def _seq_kernel(*refs, block_t: int, T: int, masked: bool,
+                quant: bool = False, sparse: bool = False):
     """One grid step = one T-block of one recurrence ``g``.
 
     Grid is (G, n_t) with t innermost; h persists in VMEM scratch across
@@ -37,21 +38,40 @@ def _seq_kernel(*refs, block_t: int, T: int, masked: bool):
     ``masked``: a per-row validity mask (ragged-B packing) rides along as
     an extra input; padded rows freeze their state exactly like the T-edge
     mask, so they are exact no-ops.
+
+    ``quant`` / ``sparse``: the int8 per-gate and row-compacted U paths —
+    see the LSTM twin in kernels.lstm_cell.kernel.  The GRU subtlety: the
+    per-gate scale must multiply the full (B, 3, H) recurrent accumulate
+    BEFORE the reset gate couples ``r * hu[:, 2]`` into the candidate, so
+    the dequantized value the gates see matches the oracle's
+    ``h @ (Uq * s)`` up to dot/scale distributivity.
     """
+    refs = list(refs)
+    xw_ref, u_ref = refs[:2]
+    pos = 2
+    s_ref = rows_ref = m_ref = None
+    if quant:
+        s_ref, pos = refs[pos], pos + 1
+    if sparse:
+        rows_ref, pos = refs[pos], pos + 1
+    h0_ref = refs[pos]
+    pos += 1
     if masked:
-        xw_ref, u_ref, h0_ref, m_ref, hs_ref, hn_ref, h_scr = refs
-    else:
-        xw_ref, u_ref, h0_ref, hs_ref, hn_ref, h_scr = refs
-        m_ref = None
+        m_ref, pos = refs[pos], pos + 1
+    hs_ref, hn_ref, h_scr = refs[pos:]
     t = pl.program_id(1)
 
     @pl.when(t == 0)
     def _seed():
         h_scr[...] = h0_ref[0].astype(jnp.float32)
 
-    U = u_ref[0]                      # (H, 3, H) — resident across the walk
-    H = U.shape[0]
-    U2 = U.reshape(H, 3 * H)
+    U = u_ref[0]                 # (Hr, 3, H) — resident across the walk
+    Hr, H = U.shape[0], U.shape[2]
+    U2 = U.reshape(Hr, 3 * H)
+    if quant:
+        # scale-free int8 -> f32 upcast ONCE per grid step, outside the
+        # t loop; the per-gate scale rides on the accumulate below
+        U2 = U2.astype(jnp.float32)
     xw_blk = xw_ref[0]                # (B, block_t, 3, H) — streamed stripe
     B = xw_blk.shape[0]
     base = t * block_t
@@ -60,10 +80,13 @@ def _seq_kernel(*refs, block_t: int, T: int, masked: bool):
         h, ys = carry
         xw_t = jax.lax.dynamic_index_in_dim(xw_blk, i, axis=1,
                                             keepdims=False)  # (B, 3, H)
+        h_in = h if not sparse else jnp.take(h, rows_ref[0], axis=1)
         hu = jax.lax.dot_general(
-            h, U2, (((1,), (0,)), ((), ())),
+            h_in, U2, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,
         ).reshape(B, 3, H)
+        if quant:
+            hu = hu * s_ref[0][None, :, None]
         xw32 = xw_t.astype(jnp.float32)
         z = jax.nn.sigmoid(xw32[:, 0] + hu[:, 0])
         r = jax.nn.sigmoid(xw32[:, 1] + hu[:, 1])
@@ -86,7 +109,7 @@ def _seq_kernel(*refs, block_t: int, T: int, masked: bool):
 
 
 def gru_seq_pallas(U3, xw, h0, *, block_t: int, interpret: bool = True,
-                   b_mask=None):
+                   b_mask=None, u_scales=None, u_rows=None):
     """Sequence-fused GRU recurrence — ONE kernel launch for all T steps.
 
     U3 (G,H,3,H); xw (G,B,T,3,H) precomputed input half (+bias);
@@ -94,19 +117,34 @@ def gru_seq_pallas(U3, xw, h0, *, block_t: int, interpret: bool = True,
     independent recurrences (e.g. the GRU cells of one wavefront slot);
     pass G=1 for a single layer.  ``b_mask`` (G,B) int32 marks valid batch
     rows under ragged-B packing: zero rows are exact no-ops.
+
+    ``u_scales`` (G,3) f32: U3 is int8 per-gate quantized; ``u_rows``
+    (G,Ha) int32: U3 is row-compacted to (G,Ha,3,H) (see kernels.quant).
     """
     G, B, T, _, H = xw.shape
+    Hr = U3.shape[1]
     bt = max(1, min(block_t, T))
     n_t = cdiv(T, bt)
 
     masked = b_mask is not None
-    kernel = functools.partial(_seq_kernel, block_t=bt, T=T, masked=masked)
+    quant = u_scales is not None
+    sparse = u_rows is not None
+    kernel = functools.partial(_seq_kernel, block_t=bt, T=T, masked=masked,
+                               quant=quant, sparse=sparse)
     in_specs = [
         pl.BlockSpec((1, B, bt, 3, H), lambda g, t: (g, 0, t, 0, 0)),  # xw
-        pl.BlockSpec((1, H, 3, H), lambda g, t: (g, 0, 0, 0)),         # U3
-        pl.BlockSpec((1, B, H), lambda g, t: (g, 0, 0)),               # h0
+        pl.BlockSpec((1, Hr, 3, H), lambda g, t: (g, 0, 0, 0)),        # U3
     ]
-    args = (xw, U3, h0)
+    args = (xw, U3)
+    if quant:
+        in_specs.append(pl.BlockSpec((1, 3), lambda g, t: (g, 0)))     # scales
+        args += (u_scales,)
+    if sparse:
+        Ha = u_rows.shape[1]
+        in_specs.append(pl.BlockSpec((1, Ha), lambda g, t: (g, 0)))    # rows
+        args += (u_rows,)
+    in_specs.append(pl.BlockSpec((1, B, H), lambda g, t: (g, 0, 0)))   # h0
+    args += (h0,)
     if masked:
         in_specs.append(pl.BlockSpec((1, B), lambda g, t: (g, 0)))     # mask
         args += (b_mask,)

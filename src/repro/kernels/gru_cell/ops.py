@@ -13,8 +13,8 @@ from repro.kernels.gru_cell.ref import gru_seq_ref, gru_step_ref
 
 
 @functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
-def gru_seq(U3, xw, h0=None, *, b_valid=None, block_t: int = 0,
-            interpret: bool | None = None):
+def gru_seq(U3, xw, h0=None, *, b_valid=None, u_scales=None, u_rows=None,
+            block_t: int = 0, interpret: bool | None = None):
     """Sequence-fused GRU recurrence: ONE pallas_call for the whole T walk.
 
     U3 (H,3,H) or, for a batch of G independent cells, (G,H,3,H); xw
@@ -31,7 +31,11 @@ def gru_seq(U3, xw, h0=None, *, b_valid=None, block_t: int = 0,
     the time axis and flip ``hs`` back — exact for any T (the T-edge mask
     only pads beyond T), with ``h_T`` then the state after the t=0 step
     (see kernels.lstm_cell.lstm_seq and
-    tests/kernels/test_seq_reversed.py)."""
+    tests/kernels/test_seq_reversed.py).
+
+    ``u_scales`` (…3) f32 marks U3 as int8 per-gate quantized payload;
+    ``u_rows`` (…Ha) int32 marks U3 as row-compacted (block-sparse) —
+    see kernels.quant for both transforms and their exactness story."""
     stacked = xw.ndim == 5
     if not stacked:
         if b_valid is not None:
@@ -39,6 +43,10 @@ def gru_seq(U3, xw, h0=None, *, b_valid=None, block_t: int = 0,
         U3, xw = U3[None], xw[None]
         if h0 is not None:
             h0 = h0[None]
+        if u_scales is not None:
+            u_scales = u_scales[None]
+        if u_rows is not None:
+            u_rows = u_rows[None]
     G, B, T, _, H = xw.shape
     if h0 is None:
         h0 = jnp.zeros((G, B, H), xw.dtype)
@@ -46,12 +54,15 @@ def gru_seq(U3, xw, h0=None, *, b_valid=None, block_t: int = 0,
         hs = jnp.zeros((G, B, 0, H), h0.dtype)
         return (hs, h0) if stacked else (hs[0], h0[0])
     if not block_t:
-        block_t = table().seq_block(T, B, H, gates=3)
+        precision = "int8" if u_scales is not None else "fp32"
+        dens = 1.0 if u_rows is None else u_rows.shape[-1] / H
+        block_t = table().seq_block(T, B, H, gates=3, precision=precision,
+                                    density=dens)
     if interpret is None:
         interpret = default_interpret()
     b_mask = None if b_valid is None else ragged_b_mask(G, B, b_valid)
     hs, h_n = gru_seq_pallas(U3, xw, h0, block_t=block_t, interpret=interpret,
-                             b_mask=b_mask)
+                             b_mask=b_mask, u_scales=u_scales, u_rows=u_rows)
     if not stacked:
         hs, h_n = hs[0], h_n[0]
     return hs, h_n

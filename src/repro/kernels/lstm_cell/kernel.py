@@ -110,7 +110,8 @@ def lstm_cell_pallas(U4, xw_t, h_prev, c_prev, *, block_h: int, block_k: int,
 # ===========================================================================
 
 
-def _seq_kernel(*refs, block_t: int, T: int, masked: bool):
+def _seq_kernel(*refs, block_t: int, T: int, masked: bool,
+                quant: bool = False, sparse: bool = False):
     """One grid step = one T-block of one recurrence ``g``.
 
     Grid is (G, n_t) with t innermost; (h, c) persist in VMEM scratch across
@@ -120,14 +121,31 @@ def _seq_kernel(*refs, block_t: int, T: int, masked: bool):
     different batch widths padded to a common B) rides along as an extra
     input; padded rows freeze their state exactly like the T-edge mask, so
     they are exact no-ops and h_T/c_T of valid rows are bit-exact.
+
+    ``quant``: U arrives int8 with a (4,) per-gate scale operand; the int8
+    payload is what sits resident in VMEM (4x smaller), the dot
+    accumulates in fp32 over the scale-free upcast, and the scale is
+    applied to the (B, 4, H) accumulate after the dot — so the only error
+    vs the dequantized oracle is the distributivity of ``(h @ Uq) * s``.
+
+    ``sparse``: U arrives row-compacted (Ha <= H input rows) with an
+    (Ha,) int32 row-index operand; h is gathered to the surviving rows
+    before the dot.  Padding rows are zero U rows at index 0 — exact
+    no-ops (see kernels.quant.compact_rows).
     """
+    refs = list(refs)
+    xw_ref, u_ref = refs[:2]
+    pos = 2
+    s_ref = rows_ref = m_ref = None
+    if quant:
+        s_ref, pos = refs[pos], pos + 1
+    if sparse:
+        rows_ref, pos = refs[pos], pos + 1
+    h0_ref, c0_ref = refs[pos:pos + 2]
+    pos += 2
     if masked:
-        (xw_ref, u_ref, h0_ref, c0_ref, m_ref,
-         hs_ref, hn_ref, cn_ref, h_scr, c_scr) = refs
-    else:
-        (xw_ref, u_ref, h0_ref, c0_ref,
-         hs_ref, hn_ref, cn_ref, h_scr, c_scr) = refs
-        m_ref = None
+        m_ref, pos = refs[pos], pos + 1
+    hs_ref, hn_ref, cn_ref, h_scr, c_scr = refs[pos:]
     t = pl.program_id(1)
 
     @pl.when(t == 0)
@@ -135,9 +153,13 @@ def _seq_kernel(*refs, block_t: int, T: int, masked: bool):
         h_scr[...] = h0_ref[0].astype(jnp.float32)
         c_scr[...] = c0_ref[0].astype(jnp.float32)
 
-    U = u_ref[0]                      # (H, 4, H) — resident across the walk
-    H = U.shape[0]
-    U2 = U.reshape(H, 4 * H)
+    U = u_ref[0]                 # (Hr, 4, H) — resident across the walk
+    Hr, H = U.shape[0], U.shape[2]
+    U2 = U.reshape(Hr, 4 * H)
+    if quant:
+        # scale-free int8 -> f32 upcast ONCE per grid step, outside the
+        # t loop; the per-gate scale rides on the accumulate below
+        U2 = U2.astype(jnp.float32)
     xw_blk = xw_ref[0]                # (B, block_t, 4, H) — streamed stripe
     B = xw_blk.shape[0]
     base = t * block_t
@@ -146,10 +168,14 @@ def _seq_kernel(*refs, block_t: int, T: int, masked: bool):
         h, c, ys = carry
         xw_t = jax.lax.dynamic_index_in_dim(xw_blk, i, axis=1,
                                             keepdims=False)  # (B, 4, H)
-        gates = xw_t.astype(jnp.float32) + jax.lax.dot_general(
-            h, U2, (((1,), (0,)), ((), ())),
+        h_in = h if not sparse else jnp.take(h, rows_ref[0], axis=1)
+        acc = jax.lax.dot_general(
+            h_in, U2, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,
         ).reshape(B, 4, H)
+        if quant:
+            acc = acc * s_ref[0][None, :, None]
+        gates = xw_t.astype(jnp.float32) + acc
         ig = jax.nn.sigmoid(gates[:, 0])
         fg = jax.nn.sigmoid(gates[:, 1])
         gg = jnp.tanh(gates[:, 2])
@@ -177,7 +203,7 @@ def _seq_kernel(*refs, block_t: int, T: int, masked: bool):
 
 
 def lstm_seq_pallas(U4, xw, h0, c0, *, block_t: int, interpret: bool = True,
-                    b_mask=None):
+                    b_mask=None, u_scales=None, u_rows=None):
     """Sequence-fused LSTM recurrence — ONE kernel launch for all T steps.
 
     U4 (G,H,4,H); xw (G,B,T,4,H) precomputed input half (+bias);
@@ -186,20 +212,39 @@ def lstm_seq_pallas(U4, xw, h0, c0, *, block_t: int, interpret: bool = True,
     one wavefront slot); pass G=1 for a single layer.  ``b_mask`` (G,B)
     int32 marks valid batch rows when cells of different B were padded to a
     common width (ragged-B packing): zero rows are exact no-ops.
+
+    ``u_scales`` (G,4) f32: U4 is int8 per-gate quantized; fp32
+    accumulate, scale applied post-dot (see kernels.quant).  ``u_rows``
+    (G,Ha) int32: U4 is row-compacted to (G,Ha,4,H) — the kernel gathers
+    h to the surviving rows (block-sparse row tiles).
     """
     G, B, T, _, H = xw.shape
+    Hr = U4.shape[1]
     bt = max(1, min(block_t, T))
     n_t = cdiv(T, bt)
 
     masked = b_mask is not None
-    kernel = functools.partial(_seq_kernel, block_t=bt, T=T, masked=masked)
+    quant = u_scales is not None
+    sparse = u_rows is not None
+    kernel = functools.partial(_seq_kernel, block_t=bt, T=T, masked=masked,
+                               quant=quant, sparse=sparse)
     in_specs = [
         pl.BlockSpec((1, B, bt, 4, H), lambda g, t: (g, 0, t, 0, 0)),  # xw
-        pl.BlockSpec((1, H, 4, H), lambda g, t: (g, 0, 0, 0)),         # U4
+        pl.BlockSpec((1, Hr, 4, H), lambda g, t: (g, 0, 0, 0)),        # U4
+    ]
+    args = (xw, U4)
+    if quant:
+        in_specs.append(pl.BlockSpec((1, 4), lambda g, t: (g, 0)))     # scales
+        args += (u_scales,)
+    if sparse:
+        Ha = u_rows.shape[1]
+        in_specs.append(pl.BlockSpec((1, Ha), lambda g, t: (g, 0)))    # rows
+        args += (u_rows,)
+    in_specs += [
         pl.BlockSpec((1, B, H), lambda g, t: (g, 0, 0)),               # h0
         pl.BlockSpec((1, B, H), lambda g, t: (g, 0, 0)),               # c0
     ]
-    args = (xw, U4, h0, c0)
+    args += (h0, c0)
     if masked:
         in_specs.append(pl.BlockSpec((1, B), lambda g, t: (g, 0)))     # mask
         args += (b_mask,)

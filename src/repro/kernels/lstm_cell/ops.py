@@ -45,8 +45,8 @@ def as_cell_kernel(interpret: bool | None = None):
 
 
 @functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
-def lstm_seq(U4, xw, h0=None, c0=None, *, b_valid=None, block_t: int = 0,
-             interpret: bool | None = None):
+def lstm_seq(U4, xw, h0=None, c0=None, *, b_valid=None, u_scales=None,
+             u_rows=None, block_t: int = 0, interpret: bool | None = None):
     """Sequence-fused recurrence: ONE pallas_call for the whole T walk.
 
     U4 (H,4,H) or, for a batch of G independent cells, (G,H,4,H); xw
@@ -68,7 +68,11 @@ def lstm_seq(U4, xw, h0=None, c0=None, *, b_valid=None, block_t: int = 0,
     state after the t=0 step (the end of the reversed walk).  The dispatch
     executor flips per cell, so one G-batched launch can mix fwd and bwd
     cells (tests/kernels/test_seq_reversed.py property-tests the
-    contract)."""
+    contract).
+
+    ``u_scales`` (…4) f32 marks U4 as int8 per-gate quantized payload;
+    ``u_rows`` (…Ha) int32 marks U4 as row-compacted (block-sparse) —
+    see kernels.quant for both transforms and their exactness story."""
     stacked = xw.ndim == 5
     if not stacked:
         if b_valid is not None:
@@ -78,6 +82,10 @@ def lstm_seq(U4, xw, h0=None, c0=None, *, b_valid=None, block_t: int = 0,
             h0 = h0[None]
         if c0 is not None:
             c0 = c0[None]
+        if u_scales is not None:
+            u_scales = u_scales[None]
+        if u_rows is not None:
+            u_rows = u_rows[None]
     G, B, T, _, H = xw.shape
     if h0 is None:
         h0 = jnp.zeros((G, B, H), xw.dtype)
@@ -88,12 +96,16 @@ def lstm_seq(U4, xw, h0=None, c0=None, *, b_valid=None, block_t: int = 0,
         return (hs, h0, c0.astype(jnp.float32)) if stacked else \
             (hs[0], h0[0], c0[0].astype(jnp.float32))
     if not block_t:
-        block_t = table().seq_block(T, B, H)
+        precision = "int8" if u_scales is not None else "fp32"
+        dens = 1.0 if u_rows is None else u_rows.shape[-1] / H
+        block_t = table().seq_block(T, B, H, precision=precision,
+                                    density=dens)
     if interpret is None:
         interpret = default_interpret()
     b_mask = None if b_valid is None else ragged_b_mask(G, B, b_valid)
     hs, h_n, c_n = lstm_seq_pallas(U4, xw, h0, c0, block_t=block_t,
-                                   interpret=interpret, b_mask=b_mask)
+                                   interpret=interpret, b_mask=b_mask,
+                                   u_scales=u_scales, u_rows=u_rows)
     if not stacked:
         hs, h_n, c_n = hs[0], h_n[0], c_n[0]
     return hs, h_n, c_n

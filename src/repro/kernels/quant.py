@@ -1,0 +1,215 @@
+"""Shared quantization + structured-sparsity utilities for the cell kernels.
+
+THE absmax int8 quantizer lives here — `optim.compression` (gradient
+round-trip on the cross-pod axis) and the kernel-side per-gate weight
+quantizer both import it, so there is exactly one scale convention in the
+repo: ``scale = absmax / 127``, symmetric, clipped to [-127, 127].
+
+Two weight transforms ride on it, both applied to the *recurrent* matrix U
+only (the hoisted input GEMM keeps full-precision W — it runs once per
+sequence outside the launch, so narrowing it buys no VMEM residency and
+would add a second error term for free):
+
+* **per-gate int8** (`quantize_per_gate` / `dequantize_per_gate`): one
+  scale per gate slab of U (H, gates, H), int8 payload resident in VMEM,
+  fp32 accumulate in-kernel, the (gates,) scale applied after the dot.
+* **block-sparse row tiles** (`tile_bitmap` / `compact_rows`): U's input-row
+  axis is cut into MXU_ROWS-row tiles; all-zero tiles are dropped and the
+  kernel gathers only the surviving rows of h before the dot.  Padding
+  rows (slot-uniform Ha across G cells) carry zero U rows and index 0, so
+  their contribution is exactly 0.0 — the compaction is value-exact up to
+  dot reduction order.
+
+`fake_quant_stack` is the oracle-side twin: it maps a parameter stack to
+the dequantized-f32 stack the kernels effectively compute with, so
+`core.schedules.reference_stack(fake_quant_stack(params, p), xs)` is the
+ground truth for any precision — error bounds then cover only the
+distributivity gap between ``(h @ Uq) * s`` (kernel) and ``h @ (Uq * s)``
+(oracle).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.perfmodel import MXU_ROWS
+from repro.kernels.common import cdiv
+
+
+def absmax_scale(x, axis=None):
+    """Symmetric int8 scale(s): absmax / 127, floored away from zero."""
+    return jnp.maximum(jnp.max(jnp.abs(x), axis=axis), 1e-12) / 127.0
+
+
+def quantize(x, scale):
+    """Round x/scale to int8, clipped to the symmetric [-127, 127] range."""
+    return jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+
+
+def int8_roundtrip(g):
+    """Per-tensor absmax int8 round-trip (quantize then dequantize) —
+    what `optim.compression` ships over the cross-pod axis."""
+    scale = absmax_scale(g)
+    return quantize(g, scale).astype(jnp.float32) * scale
+
+
+def bf16_roundtrip(x):
+    """bf16 fake-quant: round values through bfloat16, stored as f32.
+    bf16 -> f32 is exact, so kernels consuming the round-tripped weights
+    match the dequantized oracle bit-for-bit."""
+    return jnp.asarray(x).astype(jnp.bfloat16).astype(jnp.float32)
+
+
+def quantize_per_gate(U):
+    """Per-gate absmax int8 quantization of a recurrent matrix.
+
+    U (H, gates, H) -> (q int8 (H, gates, H), scales (gates,) f32): one
+    scale per gate slab, the granularity the fused kernels apply after
+    their fp32-accumulated dot (a (gates,) broadcast over (B, gates, H))."""
+    scales = absmax_scale(U, axis=(0, 2))
+    return quantize(U, scales[None, :, None]), scales.astype(jnp.float32)
+
+
+def dequantize_per_gate(q, scales):
+    """Inverse of quantize_per_gate: int8 (H, gates, H) x (gates,) -> f32."""
+    return q.astype(jnp.float32) * scales[None, :, None]
+
+
+# ---------------------------------------------------------------------------
+# structured block sparsity over U's input-row axis (tile = MXU_ROWS)
+# ---------------------------------------------------------------------------
+
+
+def tile_bitmap(U, tile: int = MXU_ROWS):
+    """Occupancy bitmap of U's input-row tiles: a length-cdiv(H, tile)
+    tuple of 0/1, 1 iff any element in rows [t*tile, (t+1)*tile) is
+    nonzero.  U is (H, gates*H) or (H, gates, H); computed once per stack
+    at compile time (host-synced ints — hashable, plan-cache friendly)."""
+    U = jnp.asarray(U)
+    H = U.shape[0]
+    flat = U.reshape(H, -1)
+    n = cdiv(H, tile)
+    occupied = [bool(jnp.any(flat[t * tile:(t + 1) * tile] != 0))
+                for t in range(n)]
+    return tuple(int(b) for b in occupied)
+
+
+def stack_tile_maps(stack_params, tile: int = MXU_ROWS):
+    """Per-layer tile bitmaps for a whole parameter stack (the WorkItem
+    ``tile_map`` payload).  Bidirectional layers take the OR-union of the
+    fwd/bwd halves: both directions share one slot launch, so a tile is
+    skippable only if BOTH halves zero it."""
+    maps = []
+    for layer in stack_params["layers"]:
+        if "fwd" in layer:
+            f = tile_bitmap(layer["fwd"]["U"], tile)
+            b = tile_bitmap(layer["bwd"]["U"], tile)
+            maps.append(tuple(int(x or y) for x, y in zip(f, b)))
+        else:
+            maps.append(tile_bitmap(layer["U"], tile))
+    return tuple(maps)
+
+
+def active_row_indices(bitmap, H: int, tile: int = MXU_ROWS):
+    """The dense row indices covered by the bitmap's occupied tiles
+    (partial last tile clipped to H)."""
+    return [r for t, bit in enumerate(bitmap) if bit
+            for r in range(t * tile, min((t + 1) * tile, H))]
+
+
+def compact_rows(U, bitmap, tile: int = MXU_ROWS, pad_to: int | None = None):
+    """Drop U's zero row-tiles.  U (H, gates, H) + bitmap ->
+    (Uc (Ha, gates, H), rows (Ha,) int32) where Ha = pad_to (slot-uniform
+    across G cells) or the active-row count.  Padding rows are zero U rows
+    pointing at index 0 — the kernel's gather reads a live h value there,
+    but the zero weight row annihilates it exactly."""
+    U = jnp.asarray(U)
+    H = U.shape[0]
+    idx = active_row_indices(bitmap, H, tile)
+    n_active = len(idx)
+    Ha = n_active if pad_to is None else pad_to
+    Ha = max(Ha, 1)  # an all-zero U still needs a non-empty dot operand
+    if Ha < n_active:
+        raise ValueError(f"pad_to={pad_to} < active rows {n_active}")
+    rows = jnp.asarray(idx + [0] * (Ha - n_active), jnp.int32)
+    Uc = jnp.zeros((Ha,) + U.shape[1:], U.dtype)
+    if n_active:
+        Uc = Uc.at[:n_active].set(U[jnp.asarray(idx, jnp.int32)])
+    return Uc, rows
+
+
+def expand_rows(Uc, rows, H: int):
+    """Inverse of compact_rows for the fallback ladder's dense rungs:
+    scatter-ADD the compacted rows back to (H, ...) — padding rows add
+    0.0 to row 0, so duplicates are harmless and the round-trip is exact."""
+    dense = jnp.zeros((H,) + tuple(Uc.shape[1:]), Uc.dtype)
+    return dense.at[rows].add(Uc)
+
+
+def density(bitmap) -> float:
+    """Occupied-tile fraction of a bitmap (1.0 for None/empty — dense)."""
+    if not bitmap:
+        return 1.0
+    return sum(bitmap) / len(bitmap)
+
+
+def stack_density(tile_map) -> float:
+    """Mean per-layer density of a stack tile_map (None -> dense 1.0)."""
+    if not tile_map:
+        return 1.0
+    return sum(density(m) for m in tile_map) / len(tile_map)
+
+
+# ---------------------------------------------------------------------------
+# the oracle-side transform
+# ---------------------------------------------------------------------------
+
+
+def fake_quant_half(half, precision: str):
+    """One layer half with U round-tripped through ``precision`` (W and b
+    untouched — the input GEMM stays full precision by design)."""
+    if precision == "fp32":
+        return half
+    U = jnp.asarray(half["U"])
+    H = U.shape[0]
+    if precision == "bf16":
+        Uq = bf16_roundtrip(U)
+    elif precision == "int8":
+        gates = U.shape[-1] // H if U.ndim == 2 else U.shape[1]
+        q, s = quantize_per_gate(U.reshape(H, gates, H))
+        Uq = dequantize_per_gate(q, s).reshape(U.shape)
+    else:
+        raise ValueError(f"unknown precision {precision!r}")
+    out = dict(half)
+    out["U"] = Uq.astype(U.dtype) if U.dtype == jnp.float32 else Uq
+    return out
+
+
+def fake_quant_stack(stack_params, precision: str):
+    """Dequantized-f32 view of a parameter stack: each layer's recurrent
+    matrix is round-tripped through ``precision`` exactly as the kernels'
+    hoist does it.  ``reference_stack(fake_quant_stack(p, prec), xs)`` is
+    THE oracle for precision != fp32 (bidirectional halves round-trip
+    independently, matching the per-direction hoist)."""
+    if precision == "fp32":
+        return stack_params
+    layers = []
+    for layer in stack_params["layers"]:
+        if "fwd" in layer:
+            out = dict(layer)
+            out["fwd"] = fake_quant_half(layer["fwd"], precision)
+            out["bwd"] = fake_quant_half(layer["bwd"], precision)
+            layers.append(out)
+        else:
+            layers.append(fake_quant_half(layer, precision))
+    out = dict(stack_params)
+    out["layers"] = layers
+    return out
+
+
+__all__ = [
+    "absmax_scale", "quantize", "int8_roundtrip", "bf16_roundtrip",
+    "quantize_per_gate", "dequantize_per_gate",
+    "tile_bitmap", "stack_tile_maps", "active_row_indices", "compact_rows",
+    "expand_rows", "density", "stack_density",
+    "fake_quant_half", "fake_quant_stack",
+]

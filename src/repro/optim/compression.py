@@ -18,6 +18,10 @@ from typing import Any, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+# THE absmax int8 round-trip lives in kernels.quant (shared with the
+# kernel-side per-gate weight quantizer — one scale convention repo-wide)
+from repro.kernels.quant import int8_roundtrip as _int8_roundtrip
+
 
 @dataclasses.dataclass(frozen=True)
 class CompressionConfig:
@@ -27,12 +31,6 @@ class CompressionConfig:
 
 def init_error_state(params):
     return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
-
-
-def _int8_roundtrip(g):
-    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
-    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
-    return q.astype(jnp.float32) * scale
 
 
 def _topk_roundtrip(g, frac: float):

@@ -171,8 +171,17 @@ class CompiledStack:
     def __init__(self, params: dict, policy: ExecutionPolicy):
         if not params.get("layers"):
             raise ValueError("CompiledStack: empty parameter stack")
-        self.params = params
         self.policy = policy
+        if policy.precision != "fp32":
+            # bind the fake-quant view ONCE: every execution surface —
+            # packed kernels (which re-quantize it, an exact idempotent
+            # round-trip), decode ticks, and the external reference
+            # schedules — then computes with the SAME dequantized values,
+            # so one oracle (reference_stack over these params) covers all
+            # of them (see rnn/README.md "Precision & sparsity")
+            from repro.kernels.quant import fake_quant_stack
+            params = fake_quant_stack(params, policy.precision)
+        self.params = params
         self.families: Tuple[str, ...] = stack_families(params)
         self.bidirectional = any("fwd" in l for l in params["layers"])
         if self.bidirectional and not all("fwd" in l
@@ -217,6 +226,19 @@ class CompiledStack:
             table = MeasuredCostTable.load(
                 path, backend=current_backend(policy.interpret))
             self.cost_model = MeasuredCostModel(table, macs=policy.macs)
+        #: block-sparsity occupancy of the bound parameters, derived ONCE
+        #: at compile (policy ``sparsity="block"``): per-layer MXU
+        #: row-tile bitmaps the planner prices and the executor
+        #: row-compacts against.  None = dense.
+        self._tile_map: Optional[tuple] = None
+        if policy.sparsity == "block":
+            from repro.kernels.quant import stack_tile_maps
+            self._tile_map = stack_tile_maps(params)
+        #: per-plan memo of quantized / row-compacted weight operands —
+        #: valid for this stack's lifetime (the bound parameters never
+        #: change), so each layer quantizes at most once across every
+        #: forward/prefill/decode call
+        self._quant_cache: dict = {}
         self.last_decode_plan: Optional[DispatchPlan] = None
         self._last_plan: Optional[DispatchPlan] = None
         self._plans: Dict[tuple, DispatchPlan] = {}
@@ -240,7 +262,9 @@ class CompiledStack:
         return WorkItem(uid=uid, family=self.families[0], B=B, T=T,
                         H=self.H, L=self.L, X=self.X, dtype=dtype,
                         priority=priority, bidirectional=self.bidirectional,
-                        share=0, families=self.families)
+                        share=0, families=self.families,
+                        precision=self.policy.precision,
+                        tile_map=self._tile_map)
 
     @property
     def _dir_key(self) -> str:
@@ -357,7 +381,8 @@ class CompiledStack:
             p = self.lower(B, T, str(xs.dtype))
             rep, guard = self._guard()
             outs = execute(p, {0: self.params}, {0: xs},
-                           interpret=self.policy.interpret, **guard)
+                           interpret=self.policy.interpret,
+                           quant_cache=self._quant_cache, **guard)
             outs = tr.fence(outs)
             if tr.enabled:
                 sp.tag(plan=tr.plan_id(p), launches=p.launches)
@@ -414,7 +439,8 @@ class CompiledStack:
             outs, states = execute(p, {i: self.params for i in inputs},
                                    inputs,
                                    interpret=self.policy.interpret,
-                                   collect_state=True, **guard)
+                                   collect_state=True,
+                                   quant_cache=self._quant_cache, **guard)
             outs, states = tr.fence((outs, states))
             if tr.enabled:
                 sp.tag(plan=tr.plan_id(p), launches=p.launches)
@@ -463,8 +489,13 @@ class CompiledStack:
                     tracer=tr, cost_model=self.cost_model))
                 if p.items[0].schedule == "decode":
                     if self._prepared is None:
+                        # self.params already carries the fake-quant view,
+                        # so the precision round-trip here is an exact
+                        # idempotent no-op — passed anyway to keep the
+                        # surfaces honest about what decode computes with
                         self._prepared = prepare_decode_stack(
-                            self.params, self.families[0])
+                            self.params, self.families[0],
+                            precision=self.policy.precision)
                     prepared = {0: self._prepared}
                 else:
                     # measured cost model flipped this tick to the
@@ -491,7 +522,8 @@ class CompiledStack:
                                    interpret=self.policy.interpret,
                                    collect_state=True,
                                    init_state={0: state},
-                                   prepared=prepared, **guard)
+                                   prepared=prepared,
+                                   quant_cache=self._quant_cache, **guard)
             outs, states = tr.fence((outs, states))
             if tr.enabled:
                 sp.tag(plan=tr.plan_id(p), launches=p.launches)

@@ -16,6 +16,7 @@ from dataclasses import dataclass
 from typing import Optional
 
 from repro.dispatch.planner import DEFAULT_MACS
+from repro.dispatch.workitem import PRECISIONS, SPARSITIES
 
 #: "auto" lets the planner score wavefront/fused/per_step per shape;
 #: the rest force one execution shape (the research schedules
@@ -39,6 +40,14 @@ ON_FAULT = ("raise", "fallback")
 #: before any launch; runs once per plan-cache build, under an obs
 #: ``verify`` span.  "off" skips verification (the benchmark baseline).
 VERIFY = ("off", "plan")
+
+# PRECISIONS / SPARSITIES (imported above, shared with the planner's
+# WorkItems): "fp32" is bit-exact; "bf16" round-trips U through bfloat16
+# (exact vs its dequantized oracle); "int8" quantizes U per-gate (4x
+# smaller VMEM residency, fp32 accumulate) with a BOUNDED-error contract
+# vs the dequantized oracle — the first policy surface that is not
+# bit-equal (see rnn/README.md).  Sparsity: "none" (dense) or "block"
+# (skip zero MXU row-tiles of U, value-exact up to dot reduction order).
 
 #: "analytic" scores plans with the perfmodel's cycle formulas (the
 #: default, zero-IO).  "measured" loads the replay-calibrated table
@@ -67,6 +76,17 @@ class ExecutionPolicy:
     interpret: force Pallas interpret mode (None = auto: interpret
                everywhere but real TPUs).
     dtype:     cast inputs before execution; None = keep the caller's.
+    precision: recurrent-weight precision — "fp32" (bit-exact default),
+               "bf16" (U round-tripped through bfloat16; exact vs its
+               dequantized oracle), or "int8" (per-gate absmax int8
+               payload resident in VMEM, fp32 accumulate; BOUNDED error
+               vs the dequantized oracle, not bit-equality — see
+               rnn/README.md "Precision & sparsity").  The input GEMM
+               (W) always stays full precision.
+    sparsity:  "none" (dense) or "block" — skip all-zero MXU row-tiles
+               of each layer's recurrent matrix (tile bitmap derived from
+               the bound parameters at compile; value-exact up to dot
+               reduction order).
     packing:   cross-B packing + stripe alignment on/off (off = every cell
                its own launch row; the benchmark baseline).
     macs:      planner tile-engine budget (the paper's K-width exploration
@@ -109,6 +129,8 @@ class ExecutionPolicy:
     block_t: int = 0
     interpret: Optional[bool] = None
     dtype: Optional[str] = None
+    precision: str = "fp32"
+    sparsity: str = "none"
     packing: bool = True
     macs: int = DEFAULT_MACS
     on_fault: str = "raise"
@@ -129,6 +151,10 @@ class ExecutionPolicy:
             raise _bad("interpret", self.interpret, (None, True, False))
         if self.dtype is not None and self.dtype not in DTYPES:
             raise _bad("dtype", self.dtype, (None,) + DTYPES)
+        if self.precision not in PRECISIONS:
+            raise _bad("precision", self.precision, PRECISIONS)
+        if self.sparsity not in SPARSITIES:
+            raise _bad("sparsity", self.sparsity, SPARSITIES)
         if not isinstance(self.packing, bool):
             raise _bad("packing", self.packing, (True, False))
         if (not isinstance(self.macs, int) or isinstance(self.macs, bool)
@@ -152,6 +178,7 @@ class ExecutionPolicy:
         return (f"ExecutionPolicy(schedule={self.schedule}, "
                 f"block_t={self.block_t or 'auto'}, "
                 f"interpret={self.interpret}, dtype={self.dtype or 'keep'}, "
+                f"precision={self.precision}, sparsity={self.sparsity}, "
                 f"packing={self.packing}, macs={self.macs}, "
                 f"on_fault={self.on_fault}, "
                 f"check_finite={self.check_finite}, "

@@ -546,12 +546,17 @@ def measure_us(fn: Callable, *args, repeats: int = 3, warmup: int = 1,
 
 def slot_signature(family: str, H: int, G: int, B: int, chunk_len: int,
                    dtype: str, directions: Sequence[str] = ("fwd",),
-                   chained: bool = False) -> str:
+                   chained: bool = False, precision: str = "fp32") -> str:
     """The canonical slot-signature string every layer tags launches with
     (and the launch-cost table keys on): family, G-batch width, padded B,
-    H, T-stripe, dtype, direction mix, chained flag."""
+    H, T-stripe, dtype, direction mix, precision, chained flag.  The
+    precision token (``|pint8`` / ``|pbf16``) is emitted only for
+    non-fp32, so pre-existing persisted signatures stay valid — and an
+    int8 measurement can never key an fp32 lookup."""
     dirs = "+".join(sorted(set(directions)))
     sig = f"{family}|H{H}|G{G}|B{B}|bt{chunk_len}|{dtype}|{dirs}"
+    if precision != "fp32":
+        sig += f"|p{precision}"
     return sig + "|chained" if chained else sig
 
 

@@ -86,10 +86,26 @@ def test_missing_file_loads_empty(tmp_path):
 def test_parse_signature_inverts_slot_signature():
     assert parse_signature("lstm|H64|G3|B1|bt1|float32|fwd|chained") == {
         "family": "lstm", "H": 64, "G": 3, "B": 1, "chunk_len": 1,
-        "dtype": "float32", "dirs": "fwd", "chained": True}
+        "dtype": "float32", "dirs": "fwd", "chained": True,
+        "precision": "fp32"}
     assert parse_signature(SIG)["chained"] is False
+    assert parse_signature(SIG)["precision"] == "fp32"  # untagged default
     assert parse_signature("garbage") is None
     assert parse_signature("a|b|c|d|e|f|g") is None  # malformed ints
+
+
+def test_parse_signature_precision_tag():
+    sig = slot_signature("lstm", 64, 3, 1, 1, "float32", precision="int8")
+    assert sig.endswith("|pint8")
+    f = parse_signature(sig)
+    assert f["precision"] == "int8" and f["chained"] is False
+    # tag order with chained (precision rides before the chained marker)
+    both = slot_signature("lstm", 64, 3, 1, 1, "float32", precision="bf16",
+                          chained=True)
+    f = parse_signature(both)
+    assert f["precision"] == "bf16" and f["chained"] is True
+    # fp32 stays untagged: persisted pre-precision tables parse unchanged
+    assert "|p" not in slot_signature("lstm", 64, 3, 1, 1, "float32")
 
 
 # -- the scorer's resolution ladder -------------------------------------
@@ -128,6 +144,40 @@ def test_categorical_fields_never_cross():
     # nor a gru query from an lstm entry
     m.slot_us("gru", 64, 3, 1, 1, "float32")
     assert m.interpolated == 0 and m.fallbacks == 2
+
+
+def test_precision_populations_never_cross():
+    """ISSUE-10 regression: an int8 measurement must never price an fp32
+    query (or vice versa) — not as an exact hit, and not through the <=4x
+    neighbor ladder, which would silently blend the two launch costs.
+    Each precision resolves its own entries; a query with no same-
+    precision entry anywhere falls back to the analytic estimate."""
+    int8_sig = slot_signature("lstm", 64, 3, 1, 1, "float32",
+                              precision="int8")
+    t = MeasuredCostTable("testbe")
+    t.record(int8_sig, 50.0, 60.0, 5,
+             analytic_shape_cycles("lstm", 64, 3, 1, 1, DESIGN,
+                                   precision="int8"))
+    m = MeasuredCostModel(t)
+    # the fp32 query at the SAME shape: neither a hit nor a neighbor
+    m.slot_us("lstm", 64, 3, 1, 1, "float32")
+    assert (m.hits, m.interpolated, m.fallbacks) == (0, 0, 1)
+    # ...even at a near-neighbor shape well inside the 4x ladder
+    m.slot_us("lstm", 64, 3, 2, 1, "float32")
+    assert (m.hits, m.interpolated, m.fallbacks) == (0, 0, 2)
+    # the int8 query resolves its own entry exactly...
+    assert m.slot_us("lstm", 64, 3, 1, 1, "float32",
+                     precision="int8") == pytest.approx(50.0)
+    assert m.hits == 1
+    # ...and interpolates int8-to-int8 through the ladder
+    m.slot_us("lstm", 64, 3, 2, 1, "float32", precision="int8")
+    assert m.interpolated == 1
+
+    # the mirror direction: an fp32 entry never resolves an int8 query
+    m2 = MeasuredCostModel(_table())
+    m2.slot_us("lstm", 64, 3, 1, 1, "float32", precision="int8")
+    m2.slot_us("lstm", 64, 3, 2, 1, "float32", precision="int8")
+    assert (m2.hits, m2.interpolated, m2.fallbacks) == (0, 0, 2)
 
 
 def test_cold_start_is_inactive():

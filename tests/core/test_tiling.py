@@ -6,7 +6,8 @@ from tests._hyp import given, settings, st
 
 from repro.core.tiling import (K_CHOICES, TileConfig, block_waste, mvm_cycles,
                                padding_waste, select_block_shape,
-                               select_time_block, select_tile)
+                               select_time_block, select_tile,
+                               seq_block_footprint)
 
 
 @settings(max_examples=50, deadline=None)
@@ -89,3 +90,35 @@ def test_time_block_constraints(T, B, H):
     assert 1 <= bt <= T
     if bt > 1:  # within the fused kernel's VMEM budget
         assert 4 * (4 * H * H + B * bt * 5 * H + 4 * B * H) <= 8 * 2**20
+
+
+def test_time_block_int8_doubles_stripe_when_weight_bound():
+    """ISSUE-10 acceptance: at the stripe-bound H512/B8/T64 shape the fp32
+    resident U is 4 MB of the 8 MB budget and caps bt at 32; the int8
+    payload (1 MB + per-gate scales) frees enough VMEM to keep the full
+    T=64 stripe — a >= 2x larger time block from precision alone."""
+    bt_fp32 = select_time_block(64, 8, 512)
+    bt_int8 = select_time_block(64, 8, 512, precision="int8")
+    assert bt_fp32 == 32 and bt_int8 == 64
+    assert bt_int8 >= 2 * bt_fp32
+    # bf16 sits between: half the weight bytes also unlocks the full stripe
+    assert select_time_block(64, 8, 512, precision="bf16") == 64
+    # footprint math agrees with the selection at the boundary
+    assert seq_block_footprint(64, 8, 512) > 8 * 2**20           # fp32: no
+    assert seq_block_footprint(64, 8, 512,
+                               precision="int8") <= 8 * 2**20    # int8: yes
+
+
+def test_time_block_density_discount():
+    """Block-sparse residency: a half-dense U (+ its row-index operand)
+    shrinks the weight term, so the selector keeps a larger stripe at the
+    same weight-bound shape; density=1.0 is byte-identical to dense."""
+    assert seq_block_footprint(32, 8, 512, density=1.0) == \
+        seq_block_footprint(32, 8, 512)
+    dense = select_time_block(64, 8, 512)
+    sparse = select_time_block(64, 8, 512, density=0.25)
+    assert sparse >= 2 * dense
+    half = seq_block_footprint(32, 8, 512, density=0.5)
+    full = seq_block_footprint(32, 8, 512)
+    w = 4 * 4 * 512 * 512
+    assert half == full - w + int(w * 0.5) + 4 * 256  # rows operand added

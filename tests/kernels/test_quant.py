@@ -1,0 +1,216 @@
+"""Unit tests for the shared quantization + block-sparsity utilities
+(kernels.quant) — ISSUE-10 satellite.  These are the single source of the
+repo's int8 scale convention and the tile-bitmap format, so the contract
+is pinned here: symmetric absmax/127 scales, clipped [-127, 127] payload,
+idempotent re-quantization (what lets CompiledStack bind the fake-quant
+param view once and share ONE oracle across every surface), and value-
+exact row compaction round-trips."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.perfmodel import MXU_ROWS
+from repro.kernels.quant import (absmax_scale, active_row_indices,
+                                 bf16_roundtrip, compact_rows, density,
+                                 dequantize_per_gate, expand_rows,
+                                 fake_quant_stack, int8_roundtrip, quantize,
+                                 quantize_per_gate, stack_density,
+                                 stack_tile_maps, tile_bitmap)
+
+
+def _u(key, H=16, gates=4, scale=0.5):
+    return jax.random.normal(jax.random.PRNGKey(key), (H, gates, H)) * scale
+
+
+# ---------------------------------------------------------------------------
+# the scale convention
+# ---------------------------------------------------------------------------
+
+
+def test_absmax_scale_convention():
+    x = jnp.asarray([-2.54, 1.0, 0.3])
+    assert float(absmax_scale(x)) == pytest.approx(2.54 / 127.0)
+    # floored away from zero: an all-zero tensor still quantizes
+    assert float(absmax_scale(jnp.zeros(4))) > 0.0
+
+
+def test_quantize_hits_127_at_absmax():
+    x = jnp.asarray([-3.0, 1.5, 3.0])
+    q = quantize(x, absmax_scale(x))
+    assert q.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(q), [-127, 64, 127])
+
+
+def test_int8_roundtrip_error_bound():
+    g = jax.random.normal(jax.random.PRNGKey(0), (64, 64))
+    err = jnp.max(jnp.abs(int8_roundtrip(g) - g))
+    # half-step bound: scale/2 = absmax/254
+    assert float(err) <= float(jnp.max(jnp.abs(g))) / 254.0 + 1e-7
+
+
+def test_bf16_roundtrip_is_f32_and_idempotent():
+    x = jax.random.normal(jax.random.PRNGKey(1), (32, 32))
+    y = bf16_roundtrip(x)
+    assert y.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(bf16_roundtrip(y)),
+                                  np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# per-gate quantization
+# ---------------------------------------------------------------------------
+
+
+def test_quantize_per_gate_shapes_and_granularity():
+    U = _u(0)
+    q, s = quantize_per_gate(U)
+    assert q.shape == U.shape and q.dtype == jnp.int8
+    assert s.shape == (4,) and s.dtype == jnp.float32
+    # one scale per gate slab: each slab's absmax lands exactly on +-127
+    assert all(int(jnp.max(jnp.abs(q[:, g]))) == 127 for g in range(4))
+    # and the scales really are per-gate (distinct slabs -> distinct scales)
+    U2 = U.at[:, 1].multiply(10.0)
+    _, s2 = quantize_per_gate(U2)
+    assert float(s2[1]) == pytest.approx(10 * float(s[1]), rel=1e-6)
+    assert float(s2[0]) == pytest.approx(float(s[0]), rel=1e-6)
+
+
+def test_per_gate_roundtrip_error_bound():
+    U = _u(2)
+    q, s = quantize_per_gate(U)
+    err = jnp.abs(dequantize_per_gate(q, s) - U)
+    assert float(jnp.max(err)) <= float(jnp.max(s)) / 2 + 1e-7
+
+
+def test_requantization_is_idempotent():
+    """quantize(dequantize(q)) == q EXACTLY — the dequantized view's slab
+    absmax quantizes back to exactly +-127, so the recomputed scale and
+    payload reproduce bit-for-bit.  CompiledStack relies on this: it binds
+    the fake-quant param view once, and the executor's hoist re-quantizes
+    that view for the packed path — every surface shares one oracle."""
+    U = _u(3)
+    q, s = quantize_per_gate(U)
+    Ud = dequantize_per_gate(q, s)
+    q2, s2 = quantize_per_gate(Ud)
+    np.testing.assert_array_equal(np.asarray(q2), np.asarray(q))
+    np.testing.assert_array_equal(np.asarray(s2), np.asarray(s))
+
+
+# ---------------------------------------------------------------------------
+# tile bitmaps + row compaction
+# ---------------------------------------------------------------------------
+
+
+def _sparse_u(H=32, gates=4, zero_tiles=(1, 3)):
+    U = np.array(jax.random.normal(jax.random.PRNGKey(7),
+                                   (H, gates, H)))
+    for t in zero_tiles:
+        U[t * MXU_ROWS:(t + 1) * MXU_ROWS] = 0.0
+    return jnp.asarray(U)
+
+
+def test_tile_bitmap_marks_zero_tiles():
+    U = _sparse_u()
+    assert tile_bitmap(U) == (1, 0, 1, 0)
+    assert tile_bitmap(jnp.zeros((16, 4, 16))) == (0, 0)
+    # 2D (H, gates*H) layout reads the same occupancy
+    assert tile_bitmap(U.reshape(32, -1)) == (1, 0, 1, 0)
+    assert density((1, 0, 1, 0)) == 0.5 and density(None) == 1.0
+    assert stack_density(((1, 0), (1, 1))) == 0.75
+
+
+def test_active_row_indices_clip_partial_tile():
+    # H=12 with tile=8: second tile holds rows 8..11 only
+    assert active_row_indices((1, 1), 12) == list(range(12))
+    assert active_row_indices((0, 1), 12) == list(range(8, 12))
+
+
+def test_compact_expand_roundtrip_exact():
+    U = _sparse_u()
+    Uc, rows = compact_rows(U, tile_bitmap(U))
+    assert Uc.shape[0] == rows.shape[0] == 16  # 2 live tiles x 8 rows
+    np.testing.assert_array_equal(np.asarray(expand_rows(Uc, rows, 32)),
+                                  np.asarray(U))
+
+
+def test_compact_rows_padding_is_exact_noop():
+    U = _sparse_u()
+    Uc, rows = compact_rows(U, tile_bitmap(U), pad_to=20)
+    assert Uc.shape[0] == rows.shape[0] == 20
+    # padding rows: zero weights at index 0 -> scatter-add back is exact
+    np.testing.assert_array_equal(np.asarray(Uc[16:]), 0.0)
+    np.testing.assert_array_equal(np.asarray(rows[16:]), 0)
+    np.testing.assert_array_equal(np.asarray(expand_rows(Uc, rows, 32)),
+                                  np.asarray(U))
+    with pytest.raises(ValueError, match="pad_to"):
+        compact_rows(U, tile_bitmap(U), pad_to=15)
+
+
+def test_compact_rows_all_zero_still_nonempty():
+    Uc, rows = compact_rows(jnp.zeros((16, 4, 16)), (0, 0))
+    assert Uc.shape[0] == rows.shape[0] == 1  # non-empty dot operand
+    np.testing.assert_array_equal(np.asarray(expand_rows(Uc, rows, 16)),
+                                  0.0)
+
+
+# ---------------------------------------------------------------------------
+# the oracle-side stack transforms
+# ---------------------------------------------------------------------------
+
+
+def _stack(bidirectional=False):
+    import dataclasses
+
+    from repro.configs.sharp_lstm import lstm_config
+    from repro.models.layers.lstm import init_lstm_stack
+
+    cfg = lstm_config(16, layers=2)
+    if bidirectional:
+        cfg = dataclasses.replace(cfg, bidirectional=True)
+    return init_lstm_stack(jax.random.PRNGKey(0), cfg, jnp.float32)
+
+
+@pytest.mark.parametrize("bidir", [False, True])
+def test_fake_quant_stack_touches_u_only(bidir):
+    params = _stack(bidir)
+    fq = fake_quant_stack(params, "int8")
+    for lay, lay_q in zip(params["layers"], fq["layers"]):
+        halves = (("fwd", "bwd") if bidir else (None,))
+        for hk in halves:
+            h, hq = (lay[hk], lay_q[hk]) if hk else (lay, lay_q)
+            np.testing.assert_array_equal(np.asarray(h["W"]),
+                                          np.asarray(hq["W"]))
+            np.testing.assert_array_equal(np.asarray(h["b"]),
+                                          np.asarray(hq["b"]))
+            assert not np.array_equal(np.asarray(h["U"]),
+                                      np.asarray(hq["U"]))
+            # the view is the kernels' own round-trip, so it is a fixpoint
+            np.testing.assert_array_equal(
+                np.asarray(fake_quant_stack(fq, "int8")["layers"][0]["U"]
+                           if not hk else
+                           fake_quant_stack(fq, "int8")["layers"][0][hk]
+                           ["U"]),
+                np.asarray(fq["layers"][0]["U"] if not hk
+                           else fq["layers"][0][hk]["U"]))
+    # fp32 is the identity, not a copy
+    assert fake_quant_stack(params, "fp32") is params
+
+
+def test_stack_tile_maps_or_union_bidir():
+    params = _stack(bidirectional=True)
+    H = 16
+    lay = params["layers"][0]
+    fwd_u = np.array(lay["fwd"]["U"])
+    bwd_u = np.array(lay["bwd"]["U"])
+    fwd_u[0:MXU_ROWS] = 0.0           # fwd zeros tile 0
+    bwd_u[MXU_ROWS:2 * MXU_ROWS] = 0.0  # bwd zeros tile 1
+    lay["fwd"]["U"] = jnp.asarray(fwd_u)
+    lay["bwd"]["U"] = jnp.asarray(bwd_u)
+    tm = stack_tile_maps(params)
+    assert len(tm) == 2 and len(tm[0]) == H // MXU_ROWS
+    # OR-union: a tile is skippable only if BOTH halves zero it
+    assert tm[0] == (1, 1)
+    bwd_u[0:MXU_ROWS] = 0.0           # now both halves zero tile 0
+    lay["bwd"]["U"] = jnp.asarray(bwd_u)
+    assert stack_tile_maps(params)[0] == (0, 1)

@@ -33,6 +33,8 @@ def test_unknown_schedule_names_field_and_values():
     ("on_fault", "retry"), ("on_fault", True),
     ("check_finite", "yes"), ("check_finite", 1),
     ("verify", "bogus"), ("verify", True), ("verify", None),
+    ("precision", "int4"), ("precision", 8), ("precision", None),
+    ("sparsity", "row"), ("sparsity", True), ("sparsity", None),
 ])
 def test_bad_fields_name_themselves(field, value):
     with pytest.raises(ValueError, match=f"ExecutionPolicy.{field}"):
@@ -72,6 +74,34 @@ def test_verify_defaults_on_and_validates():
     assert "verify=plan" in pol.describe()
     for mode in VERIFY:
         assert ExecutionPolicy(verify=mode).verify == mode
+
+
+def test_precision_sparsity_default_exact_and_validate():
+    """ISSUE-10: the default stays the bit-exact dense path; the knobs
+    validate with the full allowed list spelled out and ride in
+    describe()."""
+    from repro.dispatch.workitem import PRECISIONS, SPARSITIES
+
+    pol = ExecutionPolicy()
+    assert pol.precision == "fp32" and pol.sparsity == "none"
+    for p in PRECISIONS:
+        assert ExecutionPolicy(precision=p).precision == p
+    for s in SPARSITIES:
+        assert ExecutionPolicy(sparsity=s).sparsity == s
+    assert "precision=int8" in ExecutionPolicy(precision="int8").describe()
+    assert "sparsity=block" in ExecutionPolicy(sparsity="block").describe()
+    with pytest.raises(ValueError) as e:
+        ExecutionPolicy(precision="fp16")
+    msg = str(e.value)
+    assert "ExecutionPolicy.precision" in msg and "'fp16'" in msg
+    for p in PRECISIONS:
+        assert p in msg
+    with pytest.raises(ValueError) as e:
+        ExecutionPolicy(sparsity="2:4")
+    msg = str(e.value)
+    assert "ExecutionPolicy.sparsity" in msg
+    for s in SPARSITIES:
+        assert s in msg
 
 
 def test_policy_is_frozen_and_hashable():

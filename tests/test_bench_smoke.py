@@ -66,6 +66,11 @@ def test_dispatch_suite_writes_json(tmp_path):
     tick = launches("dispatch/decode_planned_tick", "launches_per_tick")
     loop = launches("dispatch/decode_loop_tick", "launches_per_tick")
     assert tick < loop, (tick, loop)
+    # ...and the loop baseline is fair: it runs the k active rows only
+    # (no stale pool columns padded in), so the planned win is launch
+    # structure, not wasted compute
+    assert "retired rows skipped" in rows["dispatch/decode_loop_tick"][
+        "derived"]
     # the cross-B claim, measured: packed mixed-B prefill launches fewer
     # kernels than the equal-signature unpacked plan
     assert (launches("dispatch/cross_b_packed_prefill")
@@ -123,3 +128,16 @@ def test_dispatch_suite_writes_json(tmp_path):
             < launches("dispatch/costmodel_analytic_forward"))
     assert flip_m["us_per_call"] <= flip_a["us_per_call"], \
         (flip_m["us_per_call"], flip_a["us_per_call"])
+    # the precision claim (ISSUE-10), measured: at the stripe-bound
+    # H512/B8/T64 shape the int8 resident set sustains a >= 2x larger
+    # time block than fp32, and the int8 forward stayed within its
+    # documented rel-err bound vs the dequantized oracle (gated inside
+    # the bench before emission — the row exists only because it passed)
+    q8 = rows["dispatch/quant_int8_forward"]["derived"]
+    fp = rows["dispatch/quant_fp32_forward"]["derived"]
+    assert "precision=int8" in q8 and "precision=fp32" in fp
+    bt_fp = int(re.search(r"bt=(\d+)", fp).group(1))
+    bt_q8 = int(re.search(r"bt=(\d+)", q8).group(1))
+    assert bt_q8 >= 2 * bt_fp, (bt_q8, bt_fp)
+    rel = float(re.search(r"max_rel_err=([\d.e+-]+)", q8).group(1))
+    assert rel < 1e-5, q8
